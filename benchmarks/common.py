@@ -1,0 +1,148 @@
+"""Shared benchmark machinery.
+
+Wall-clock numbers here are CPU-backend measurements of the real JAX
+implementation (the paper's absolute Xeon numbers are not reproducible in
+this container); the TPU-side projection lives in the §Roofline analysis
+and the classifier cost model.  What IS faithfully reproduced is the
+*relative* behavior across workloads — the shape of every figure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.pqueue import ops as O
+from repro.core.pqueue.schedules import Schedule
+from repro.core.pqueue.state import INF_KEY, make_state
+from repro.core.smartpq import SmartPQ, SmartPQConfig
+
+
+def time_op(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median microseconds per call of a jitted fn."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+@dataclasses.dataclass
+class PQWorkload:
+    """One contention workload (paper Table 1 features)."""
+
+    num_clients: int  # -> ops per bulk step (bulk-synchronous translation)
+    size: int
+    key_range: int
+    insert_frac: float
+    num_shards: int = 16
+    capacity: int = 1 << 14
+    npods: int = 2
+    seed: int = 0
+
+    def init_state(self):
+        rng = np.random.default_rng(self.seed)
+        st = make_state(self.num_shards, self.capacity)
+        remaining = self.size
+        while remaining > 0:
+            n = min(remaining, 4096)
+            keys = rng.integers(0, self.key_range, n).astype(np.int32)
+            pad = np.full(4096 - n, INF_KEY, np.int32)
+            st, _ = O.insert(
+                st, jnp.asarray(np.concatenate([keys, pad])),
+                jnp.zeros(4096, jnp.int32),
+            )
+            remaining -= n
+        return st
+
+    def op_batch(self, rng):
+        B = self.num_clients
+        ops = (rng.random(B) > self.insert_frac).astype(np.int32)
+        keys = rng.integers(0, self.key_range, B).astype(np.int32)
+        return jnp.asarray(ops), jnp.asarray(keys), jnp.zeros(B, jnp.int32)
+
+
+def throughput_mops(
+    workload: PQWorkload, schedule: Schedule, steps: int = 12
+) -> float:
+    """Millions of ops/second for a fixed schedule on this workload."""
+    st = workload.init_state()
+    rng = np.random.default_rng(workload.seed + 1)
+    key = jax.random.key(workload.seed)
+
+    @jax.jit
+    def step(state, ops, keys, vals, k):
+        return O.apply_op_batch(
+            state, ops, keys, vals, schedule=schedule, rng=k,
+            npods=workload.npods,
+        )
+
+    ops, keys, vals = workload.op_batch(rng)
+    r = step(st, ops, keys, vals, key)  # compile+warm
+    jax.block_until_ready(r.state.keys)
+    st = r.state
+    t0 = time.perf_counter()
+    done = 0
+    for _ in range(steps):
+        ops, keys, vals = workload.op_batch(rng)
+        key, sub = jax.random.split(key)
+        r = step(st, ops, keys, vals, sub)
+        st = r.state
+        done += workload.num_clients
+    jax.block_until_ready(st.keys)
+    dt = time.perf_counter() - t0
+    return done / dt / 1e6
+
+
+def smartpq_throughput_mops(workload: PQWorkload, steps: int = 12,
+                            pq: Optional[SmartPQ] = None) -> Dict:
+    pq = pq or SmartPQ(SmartPQConfig(
+        num_shards=workload.num_shards, capacity=workload.capacity,
+        npods=workload.npods, decision_interval=2,
+    ))
+    carry = pq.init()
+    # pre-fill through the queue's own insert path
+    st = workload.init_state()
+    carry = carry._replace(state=st)
+    rng = np.random.default_rng(workload.seed + 2)
+    key = jax.random.key(workload.seed + 3)
+    step = jax.jit(pq.step)
+    ops, keys, vals = workload.op_batch(rng)
+    carry2, _ = step(carry, ops, keys, vals, key, workload.num_clients)
+    jax.block_until_ready(carry2.state.keys)
+    carry = carry2
+    t0 = time.perf_counter()
+    done = 0
+    for _ in range(steps):
+        ops, keys, vals = workload.op_batch(rng)
+        key, sub = jax.random.split(key)
+        carry, _ = step(carry, ops, keys, vals, sub, workload.num_clients)
+        done += workload.num_clients
+    jax.block_until_ready(carry.state.keys)
+    dt = time.perf_counter() - t0
+    return {
+        "mops": done / dt / 1e6,
+        "mode": int(carry.stats.mode),
+        "transitions": int(carry.stats.transitions),
+        "pq": pq,
+        "carry": carry,
+    }
+
+
+CSV_ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    CSV_ROWS.append(row)
+    print(row)

@@ -1,0 +1,105 @@
+"""Figures 10 & 11: time-varying contention — SmartPQ adapts, fixed modes
+don't.  Phase traces follow the paper's Tables 2 and 3 (rescaled: phase
+length in steps; sizes/ranges as given)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import PQWorkload, emit, smartpq_throughput_mops, throughput_mops
+from repro.core.pqueue.schedules import Schedule
+from repro.core.smartpq import SmartPQ, SmartPQConfig
+
+# Paper Table 2 traces (time, size is emergent; we pin the driving features).
+TABLE2 = {
+    "a_keyrange": [  # vary key range (50 threads, 75-25 mix)
+        dict(num_clients=50, key_range=100_000, insert_frac=0.75),
+        dict(num_clients=50, key_range=2_000, insert_frac=0.75),
+        dict(num_clients=50, key_range=1 << 20, insert_frac=0.75),
+        dict(num_clients=50, key_range=10_000, insert_frac=0.75),
+        dict(num_clients=50, key_range=50_000_000, insert_frac=0.75),
+    ],
+    "b_threads": [  # vary #threads (65-35 mix, range 20M)
+        dict(num_clients=57, key_range=20_000_000, insert_frac=0.65),
+        dict(num_clients=29, key_range=20_000_000, insert_frac=0.65),
+        dict(num_clients=15, key_range=20_000_000, insert_frac=0.65),
+        dict(num_clients=43, key_range=20_000_000, insert_frac=0.65),
+        dict(num_clients=15, key_range=20_000_000, insert_frac=0.65),
+    ],
+    "c_mix": [  # vary op mix (22 threads, range 5M)
+        dict(num_clients=22, key_range=5_000_000, insert_frac=0.5),
+        dict(num_clients=22, key_range=5_000_000, insert_frac=1.0),
+        dict(num_clients=22, key_range=5_000_000, insert_frac=0.3),
+        dict(num_clients=22, key_range=5_000_000, insert_frac=1.0),
+        dict(num_clients=22, key_range=5_000_000, insert_frac=0.0),
+    ],
+}
+
+# Paper Table 3: multiple features vary at once (subset of the 15 phases).
+TABLE3 = [
+    dict(num_clients=57, key_range=10_000_000, insert_frac=0.5),
+    dict(num_clients=36, key_range=10_000_000, insert_frac=0.7),
+    dict(num_clients=36, key_range=20_000_000, insert_frac=0.5),
+    dict(num_clients=36, key_range=20_000_000, insert_frac=0.8),
+    dict(num_clients=50, key_range=20_000_000, insert_frac=0.8),
+    dict(num_clients=50, key_range=100_000_000, insert_frac=0.5),
+    dict(num_clients=57, key_range=100_000_000, insert_frac=0.5),
+    dict(num_clients=22, key_range=100_000_000, insert_frac=1.0),
+    dict(num_clients=22, key_range=100_000_000, insert_frac=0.5),
+    dict(num_clients=57, key_range=200_000_000, insert_frac=0.0),
+    dict(num_clients=57, key_range=200_000_000, insert_frac=1.0),
+    dict(num_clients=57, key_range=20_000_000, insert_frac=0.0),
+    dict(num_clients=29, key_range=20_000_000, insert_frac=0.8),
+    dict(num_clients=29, key_range=20_000_000, insert_frac=0.5),
+]
+
+
+def _run_trace(name, phases, steps_per_phase=6, quick=False):
+    """Drive the SAME phase sequence through SmartPQ and both fixed modes;
+    report per-trace mean throughput + adaptation stats."""
+    if quick:
+        phases = phases[:2]
+        steps_per_phase = 4
+    shards, cap = 16, 1 << 15
+
+    results = {}
+    for label, sched in (
+        ("oblivious", Schedule.SPRAY_HERLIHY),
+        ("nuddle", Schedule.HIER),
+    ):
+        tot_ops, tot_t = 0, 0.0
+        for ph in phases:
+            w = PQWorkload(size=8192, num_shards=shards, capacity=cap,
+                           npods=2, **ph)
+            t = throughput_mops(w, sched, steps=steps_per_phase)
+            tot_ops += ph["num_clients"] * steps_per_phase
+            tot_t += ph["num_clients"] * steps_per_phase / (t * 1e6)
+        results[label] = tot_ops / tot_t / 1e6
+
+    # SmartPQ: one persistent queue across phases (the adaptation story)
+    pq = SmartPQ(SmartPQConfig(num_shards=shards, capacity=cap, npods=2,
+                               decision_interval=2))
+    tot_ops, tot_t, transitions = 0, 0.0, 0
+    s = None
+    for ph in phases:
+        w = PQWorkload(size=8192, num_shards=shards, capacity=cap, npods=2, **ph)
+        s = smartpq_throughput_mops(w, steps=steps_per_phase, pq=pq)
+        tot_ops += ph["num_clients"] * steps_per_phase
+        tot_t += ph["num_clients"] * steps_per_phase / (s["mops"] * 1e6)
+        transitions = s["transitions"]
+    results["smartpq"] = tot_ops / tot_t / 1e6
+
+    best_fixed = max(results["oblivious"], results["nuddle"])
+    for label in ("oblivious", "nuddle", "smartpq"):
+        emit(
+            f"{name}/{label}", 1.0 / results[label],
+            f"mops={results[label]:.2f}"
+            + (f";vs_best_fixed={results['smartpq'] / best_fixed:.2f}"
+               f";transitions={transitions}" if label == "smartpq" else ""),
+        )
+
+
+def run(quick: bool = False):
+    for key, phases in TABLE2.items():
+        _run_trace(f"fig10/{key}", phases, quick=quick)
+    _run_trace("fig11/multi_feature", TABLE3, quick=quick)

@@ -1,0 +1,27 @@
+"""Figure 1: NUMA-oblivious vs NUMA-aware throughput across op mixes.
+
+Paper setup: queue initialized with 1024 keys, key range 2048, 64 threads,
+mixes from 100% insert to 100% deleteMin.  Expected shape: oblivious wins
+insert-dominated, aware wins deleteMin-dominated."""
+
+from benchmarks.common import PQWorkload, emit, throughput_mops
+from repro.core.pqueue.schedules import Schedule
+
+
+def run(quick: bool = False):
+    mixes = [1.0, 0.75, 0.5, 0.25, 0.0] if not quick else [1.0, 0.0]
+    for mix in mixes:
+        w = PQWorkload(
+            num_clients=64, size=1024, key_range=2048, insert_frac=mix,
+            num_shards=16, npods=2,
+        )
+        t_obl = throughput_mops(w, Schedule.SPRAY_HERLIHY)
+        t_aw = throughput_mops(w, Schedule.HIER)
+        emit(
+            f"fig1/mix_{int(mix*100)}ins/oblivious", 1e6 / (t_obl * 1e6) * 64,
+            f"mops={t_obl:.2f}",
+        )
+        emit(
+            f"fig1/mix_{int(mix*100)}ins/nuddle", 1e6 / (t_aw * 1e6) * 64,
+            f"mops={t_aw:.2f};ratio_obl_over_aw={t_obl / t_aw:.2f}",
+        )

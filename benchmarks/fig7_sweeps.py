@@ -1,0 +1,33 @@
+"""Figure 7: Nuddle vs its base algorithm across (a) #clients, (b) key range.
+
+Reproduces the paper's observation that the winner depends on multiple
+features simultaneously (the motivation for the learned classifier)."""
+
+from benchmarks.common import PQWorkload, emit, throughput_mops
+from repro.core.pqueue.schedules import Schedule
+
+
+def run(quick: bool = False):
+    # (a) vs number of clients, 80%-insert workload (paper Fig. 7a)
+    clients = [8, 32, 128] if quick else [8, 16, 32, 64, 128, 256]
+    for c in clients:
+        w = PQWorkload(
+            num_clients=c, size=65536, key_range=1 << 20, insert_frac=0.8,
+            num_shards=16, npods=2, capacity=1 << 15,
+        )
+        t_obl = throughput_mops(w, Schedule.SPRAY_HERLIHY)
+        t_aw = throughput_mops(w, Schedule.HIER)
+        emit(f"fig7a/clients_{c}/oblivious", c / t_obl, f"mops={t_obl:.2f}")
+        emit(f"fig7a/clients_{c}/nuddle", c / t_aw, f"mops={t_aw:.2f}")
+
+    # (b) vs key range, insert-dominated (paper Fig. 7b)
+    ranges = [2048, 1 << 20] if quick else [2048, 1 << 14, 1 << 20, 1 << 26]
+    for kr in ranges:
+        w = PQWorkload(
+            num_clients=64, size=16384, key_range=kr, insert_frac=0.9,
+            num_shards=16, npods=2, capacity=1 << 15,
+        )
+        t_obl = throughput_mops(w, Schedule.SPRAY_HERLIHY)
+        t_aw = throughput_mops(w, Schedule.HIER)
+        emit(f"fig7b/range_{kr}/oblivious", 64 / t_obl, f"mops={t_obl:.2f}")
+        emit(f"fig7b/range_{kr}/nuddle", 64 / t_aw, f"mops={t_aw:.2f}")

@@ -1,0 +1,48 @@
+"""Figure 9: the full implementation cast across sizes x op mixes.
+
+Six implementations (paper's evaluation set, DESIGN.md mapping):
+  lotan_shavit -> STRICT_FLAT, alistarh_fraser -> SPRAY_FRASER,
+  alistarh_herlihy -> SPRAY_HERLIHY, ffwd -> FFWD, Nuddle -> HIER,
+  SmartPQ -> adaptive."""
+
+from benchmarks.common import (
+    PQWorkload,
+    emit,
+    smartpq_throughput_mops,
+    throughput_mops,
+)
+from repro.core.pqueue.schedules import Schedule
+
+CAST = [
+    ("lotan_shavit", Schedule.STRICT_FLAT),
+    ("alistarh_fraser", Schedule.SPRAY_FRASER),
+    ("alistarh_herlihy", Schedule.SPRAY_HERLIHY),
+    ("ffwd", Schedule.FFWD),
+    ("nuddle", Schedule.HIER),
+]
+
+
+def run(quick: bool = False):
+    sizes = [4096] if quick else [4096, 65536, 1 << 20]
+    mixes = [1.0, 0.0] if quick else [1.0, 0.5, 0.0]
+    for size in sizes:
+        for mix in mixes:
+            w = PQWorkload(
+                num_clients=64, size=size, key_range=2 * size,
+                insert_frac=mix, num_shards=16, npods=2,
+                capacity=max(1 << 14, 2 * size // 16),
+            )
+            best_name, best = None, -1.0
+            for name, sched in CAST:
+                t = throughput_mops(w, sched, steps=8 if quick else 12)
+                emit(f"fig9/size_{size}/ins{int(mix*100)}/{name}",
+                     64 / t, f"mops={t:.2f}")
+                if t > best:
+                    best_name, best = name, t
+            s = smartpq_throughput_mops(w, steps=8 if quick else 12)
+            emit(
+                f"fig9/size_{size}/ins{int(mix*100)}/smartpq",
+                64 / s["mops"],
+                f"mops={s['mops']:.2f};best_fixed={best_name}"
+                f";smartpq_vs_best={s['mops'] / best:.2f}",
+            )

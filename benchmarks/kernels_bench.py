@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference timings.
+
+interpret=True timings measure Python-level emulation, NOT TPU performance;
+the structural claim (compare-op counts) is what transfers.  Reported so
+EXPERIMENTS.md can show the op-count accounting next to wall time."""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_op
+from repro.core.pqueue.state import INF_KEY
+from repro.kernels.ops import merge_sorted_runs, topk_smallest
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    shapes = [(16, 1024, 64)] if quick else [(16, 1024, 64), (64, 4096, 128)]
+    for (R, N, k) in shapes:
+        keys = jnp.asarray(rng.integers(0, 1 << 30, (R, N)), jnp.int32)
+        vals = jnp.asarray(np.tile(np.arange(N, dtype=np.int32), (R, 1)))
+        t_ref = time_op(lambda a, b: topk_smallest(a, b, k, use_kernel=False),
+                        keys, vals, iters=5)
+        t_ker = time_op(lambda a, b: topk_smallest(a, b, k, use_kernel=True),
+                        keys, vals, iters=3)
+        # compare-op accounting: kernel O(N log k) vs full-sort O(N log^2 N)
+        ops_kernel = N * (math.log2(k) + 1)
+        ops_sort = N * math.log2(N) ** 2 / 2
+        emit(
+            f"kernels/topk_{R}x{N}_k{k}/jnp_ref", t_ref,
+            f"interpret_us={t_ker:.0f};cmp_ops_kernel={ops_kernel:.0f};"
+            f"cmp_ops_fullsort={ops_sort:.0f};cmp_ratio={ops_sort/ops_kernel:.1f}x",
+        )
+
+    C, Rw = (1024, 128) if quick else (4096, 256)
+    S = 8
+    buf_k = np.sort(rng.integers(0, 1 << 20, (S, C)), axis=1).astype(np.int32)
+    run_k = np.sort(rng.integers(0, 1 << 20, (S, Rw)), axis=1).astype(np.int32)
+    zeros_c = jnp.zeros((S, C), jnp.int32)
+    zeros_r = jnp.zeros((S, Rw), jnp.int32)
+    t_ref = time_op(
+        lambda a, b: merge_sorted_runs(a, zeros_c, b, zeros_r, use_kernel=False),
+        jnp.asarray(buf_k), jnp.asarray(run_k), iters=5,
+    )
+    t_ker = time_op(
+        lambda a, b: merge_sorted_runs(a, zeros_c, b, zeros_r, use_kernel=True),
+        jnp.asarray(buf_k), jnp.asarray(run_k), iters=3,
+    )
+    ops_bitonic = 2 * C * (math.log2(2 * C))
+    ops_rank = C * Rw
+    emit(
+        f"kernels/merge_{S}x{C}_r{Rw}/jnp_ref", t_ref,
+        f"interpret_us={t_ker:.0f};cmp_ops_bitonic={ops_bitonic:.0f};"
+        f"cmp_ops_bcast_rank={ops_rank:.0f};cmp_ratio={ops_rank/ops_bitonic:.1f}x",
+    )

@@ -1,0 +1,116 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape), single-pod mesh, TPU v5e constants:
+  compute    = FLOPs/chip            / 197e12
+  memory     = HBM bytes proxy/chip  / 819e9
+  collective = collective bytes/chip / (50e9 * links)
+
+FLOPs and bytes come from the loop-aware HLO walker (launch/dryrun.py);
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for the useful-compute
+ratio (train shapes; inference shapes use 2*N*D per generated/processed
+token).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config, list_configs
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW_LINKS = 50e9 * 3  # ~3 usable links per chip on a 2D torus
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def load_record(arch: str, shape: str, pods: str = "1pod", tag: str = "") -> dict | None:
+    p = DRYRUN_DIR / f"{arch}_{shape}_{pods}{tag}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def roofline_row(rec: dict) -> dict:
+    n = rec["n_chips"]
+    t_compute = rec["flops_per_device"] / PEAK_FLOPS
+    t_memory = rec["hbm_bytes_proxy_per_device"] / HBM_BW
+    t_coll = rec["collective_bytes_per_device"] / ICI_BW_LINKS
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = rec["flops_per_device"] * n
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "fits": rec.get("fits_16gib_hbm"),
+        "step_bound_s": max(t_compute, t_memory) + t_coll,
+        "roofline_fraction": t_compute
+        / max(max(t_compute, t_memory) + t_coll, 1e-12),
+    }
+
+
+def run(quick: bool = False):
+    rows = []
+    for arch in list_configs():
+        for shape in SHAPES:
+            rec = load_record(arch, shape)
+            if rec is None or rec.get("status") != "ok":
+                continue
+            r = roofline_row(rec)
+            rows.append(r)
+            opt = load_record(arch, shape, tag="_opt")
+            opt_note = ""
+            if opt is not None and opt.get("status") == "ok":
+                ro = roofline_row(opt)
+                opt_note = (
+                    f";OPT:comp={ro['t_compute_s']:.4f}s,"
+                    f"mem={ro['t_memory_s']:.4f}s,"
+                    f"coll={ro['t_collective_s']:.4f}s,"
+                    f"useful={ro['useful_ratio']:.2f},"
+                    f"fits={ro['fits']}"
+                )
+            emit(
+                f"roofline/{arch}/{shape}", r["step_bound_s"] * 1e6,
+                f"dom={r['dominant']};comp={r['t_compute_s']:.4f}s;"
+                f"mem={r['t_memory_s']:.4f}s;coll={r['t_collective_s']:.4f}s;"
+                f"useful={r['useful_ratio']:.2f};frac={r['roofline_fraction']:.2f}"
+                f"{opt_note}",
+            )
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        collbound = max(rows, key=lambda r: r["t_collective_s"])
+        emit(
+            "roofline/summary", 0.0,
+            f"worst_fraction={worst['arch']}/{worst['shape']}"
+            f"({worst['roofline_fraction']:.2f});"
+            f"most_collective={collbound['arch']}/{collbound['shape']}"
+            f"({collbound['t_collective_s']:.3f}s)",
+        )
+    return rows

@@ -1,0 +1,48 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep sizes (CI mode)")
+    ap.add_argument(
+        "--only", default=None,
+        help="comma list of: fig1,fig7,fig9,fig10,classifier,roofline,kernels",
+    )
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (
+        classifier_eval,
+        fig1_mix,
+        fig7_sweeps,
+        fig9_grid,
+        fig10_dynamic,
+        fig12_cpu_adaptive,
+        kernels_bench,
+        roofline,
+    )
+
+    suites = {
+        "fig1": fig1_mix.run,
+        "fig7": fig7_sweeps.run,
+        "fig9": fig9_grid.run,
+        "fig10": fig10_dynamic.run,
+        "fig12": fig12_cpu_adaptive.run,
+        "classifier": classifier_eval.run,
+        "kernels": kernels_bench.run,
+        "roofline": roofline.run,
+    }
+    selected = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    for name in selected:
+        suites[name](quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: the adaptive priority queue in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import SmartPQ, SmartPQConfig
+from repro.core.pqueue.ops import OP_DELETE_MIN, OP_INSERT
+from repro.core.pqueue.state import INF_KEY
+
+
+def main():
+    pq = SmartPQ(SmartPQConfig(num_shards=16, capacity=4096, npods=2,
+                               decision_interval=4))
+    carry = pq.init()
+    step = jax.jit(pq.step)
+    rng = np.random.default_rng(0)
+    key = jax.random.key(0)
+    B = 64
+
+    print("phase 1: insert burst (low contention -> oblivious mode expected)")
+    for i in range(12):
+        ops = jnp.full((B,), OP_INSERT, jnp.int32)
+        keys = jnp.asarray(rng.integers(0, 1 << 20, B), jnp.int32)
+        key, sub = jax.random.split(key)
+        carry, _ = step(carry, ops, keys, jnp.arange(B, dtype=jnp.int32), sub, 512)
+    print(f"  size={int(carry.state.total_size)} mode={int(carry.stats.mode)} "
+          f"(0=oblivious/spray, 1=aware/Nuddle)")
+
+    print("phase 2: deleteMin storm (high contention -> aware mode expected)")
+    drained = []
+    for i in range(12):
+        ops = jnp.full((B,), OP_DELETE_MIN, jnp.int32)
+        key, sub = jax.random.split(key)
+        carry, res = step(carry, ops, jnp.full((B,), INF_KEY, jnp.int32),
+                          jnp.zeros(B, jnp.int32), sub, 512)
+        drained.extend(np.asarray(res.keys)[: int(res.n_out)].tolist())
+    print(f"  size={int(carry.state.total_size)} mode={int(carry.stats.mode)} "
+          f"transitions={int(carry.stats.transitions)}")
+    print(f"  first 10 drained keys (ascending-ish): {drained[:10]}")
+    assert int(carry.stats.transitions) >= 1, "expected at least one adaptation"
+    print("OK — SmartPQ adapted between algorithmic modes with zero data movement.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Serving demo: continuous batching with the SmartPQ scheduler.
+
+A small llama-family model serves a bursty multi-tenant workload
+(interactive + batch SLO classes).  Watch the scheduler's PQ flip between
+oblivious (arrival bursts) and delegation (drain) modes.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import jax
+
+from repro.configs.registry import reduced_config
+from repro.models.registry import build_model
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.scheduler import Request
+
+
+def bursty_workload(n_bursts=4, burst=6, seed=0):
+    """Bursts of mixed-SLO requests with idle gaps (drain phases)."""
+    rng = np.random.default_rng(seed)
+    workload, uid = [], 0
+    for b in range(n_bursts):
+        arrivals = []
+        for _ in range(burst):
+            arrivals.append(
+                Request(
+                    uid=uid,
+                    prompt_len=int(rng.integers(4, 16)),
+                    max_new_tokens=int(rng.integers(2, 6)),
+                    slo_class=int(rng.integers(0, 3)),
+                )
+            )
+            uid += 1
+        workload.append(arrivals)
+        workload.extend([[]] * 6)  # drain gap
+    return workload, uid
+
+
+def main():
+    cfg = reduced_config("llama3.2-3b")
+    model = build_model(cfg, remat=False)
+    params, _ = model.init(jax.random.key(0))
+    engine = ServeEngine(cfg, params, EngineConfig(batch_size=4, max_seq=64))
+
+    workload, total = bursty_workload()
+    print(f"serving {total} requests across {len(workload)} ticks "
+          f"(batch slots: 4)")
+    summary = engine.run(workload, max_steps=400)
+    trace = "".join(str(m) for m in summary["mode_trace"])
+    print(f"completed: {summary['completed']}/{total} in {summary['steps']} steps "
+          f"({summary['wall_s']:.1f}s)")
+    print(f"scheduler mode trace (0=oblivious, 1=Nuddle): {trace}")
+    print(f"PQ mode transitions: {summary['pq_transitions']}")
+    assert summary["completed"] == total
+    sample = next(iter(engine.outputs.items()))
+    print(f"sample output (uid {sample[0]}): {sample[1]}")
+    print("OK — all requests served under SmartPQ continuous batching.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""repro — SmartPQ: an adaptive distributed priority queue for TPU pod hierarchies.
+
+Reproduction + TPU adaptation of:
+  "SmartPQ: An Adaptive Concurrent Priority Queue for NUMA Architectures"
+  (Giannoula, Strati, Siakavaras, Goumas, Koziris — CS.DC 2024)
+
+Public API re-exports are LAZY (module __getattr__): `python -m
+repro.launch.dryrun` must be able to set XLA_FLAGS before anything imports
+jax, and importing this package must therefore stay jax-free.
+"""
+
+__version__ = "1.0.0"
+
+_EXPORTS = {
+    "PQState": ("repro.core.pqueue.state", "PQState"),
+    "make_state": ("repro.core.pqueue.state", "make_state"),
+    "insert": ("repro.core.pqueue.ops", "insert"),
+    "delete_min": ("repro.core.pqueue.ops", "delete_min"),
+    "peek_min": ("repro.core.pqueue.ops", "peek_min"),
+    "apply_op_batch": ("repro.core.pqueue.ops", "apply_op_batch"),
+    "Schedule": ("repro.core.pqueue.ops", "Schedule"),
+    "SmartPQ": ("repro.core.smartpq", "SmartPQ"),
+    "SmartPQConfig": ("repro.core.smartpq", "SmartPQConfig"),
+}
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        module, attr = _EXPORTS[name]
+        return getattr(importlib.import_module(module), attr)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_EXPORTS))

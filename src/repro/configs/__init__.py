@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES  # noqa: F401
+from repro.configs.registry import get_config, list_configs, reduced_config  # noqa: F401

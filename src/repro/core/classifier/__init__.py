@@ -1,0 +1,16 @@
+from repro.core.classifier.tree import DecisionTree, train_tree  # noqa: F401
+from repro.core.classifier.inference import PackedTree, pack_tree, tree_predict  # noqa: F401
+from repro.core.classifier.features import (  # noqa: F401
+    FEATURE_NAMES,
+    NUM_CLASSES,
+    CLASS_NEUTRAL,
+    CLASS_OBLIVIOUS,
+    CLASS_AWARE,
+    featurize,
+)
+from repro.core.classifier.cost_model import (  # noqa: F401
+    HardwareModel,
+    TPU_V5E,
+    schedule_cost,
+    best_mode,
+)

@@ -1,0 +1,45 @@
+"""Classification features — Table 1 of the paper, unchanged.
+
+| Feature           | Paper definition                      | TPU reading           |
+|-------------------|---------------------------------------|-----------------------|
+| #Threads          | active threads issuing ops            | active client devices |
+| Size              | current queue size                    | sum(state.size)       |
+| Key_range         | range of keys in the workload         | key-universe width    |
+| % insert/deleteMin| op mix                                | insert fraction       |
+
+Features are log/linear-normalized before hitting the tree: trees don't need
+normalization for accuracy, but normalized thresholds make the packed
+on-device tree robust to the int32/float32 boundary.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+FEATURE_NAMES = ("num_clients", "size", "key_range", "insert_frac")
+
+# Class labels — §3.1.2 (1): oblivious / aware / neutral.
+CLASS_OBLIVIOUS = 0  # run the base algorithm directly (spray, collective-free)
+CLASS_AWARE = 1  # delegate: Nuddle pod-hierarchical schedule
+CLASS_NEUTRAL = 2  # tie — keep the current mode (hysteresis, §3.1.2 (1)(ii))
+NUM_CLASSES = 3
+
+
+def featurize(
+    num_clients, size, key_range, insert_frac
+) -> np.ndarray:
+    """Vectorized feature transform -> float32 (..., 4)."""
+    num_clients = np.asarray(num_clients, np.float64)
+    size = np.asarray(size, np.float64)
+    key_range = np.asarray(key_range, np.float64)
+    insert_frac = np.asarray(insert_frac, np.float64)
+    f = np.stack(
+        [
+            np.log2(np.maximum(num_clients, 1.0)),
+            np.log2(np.maximum(size, 1.0)),
+            np.log2(np.maximum(key_range, 1.0)),
+            insert_frac,
+        ],
+        axis=-1,
+    )
+    return f.astype(np.float32)

@@ -1,0 +1,64 @@
+"""Branchless on-device decision-tree inference.
+
+The paper calls its (host-side) tree every second; traversal costs 2-4 ms.
+Here the tree is packed into flat arrays and evaluated *inside* the jitted
+step as `max_depth` gathers — no host round-trip, so SmartPQ's decision runs
+at step frequency for free and the mode flip feeds `lax.switch` directly
+(DESIGN.md §3).  Cost on TPU: 8 scalar gathers ≈ nanoseconds.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.classifier.tree import DecisionTree
+
+
+class PackedTree(NamedTuple):
+    feature: jnp.ndarray  # (N,) int32, -1 for leaves
+    threshold: jnp.ndarray  # (N,) float32
+    left: jnp.ndarray  # (N,) int32 (self-loop for leaves)
+    right: jnp.ndarray  # (N,) int32
+    label: jnp.ndarray  # (N,) int32
+    depth: int
+
+
+def pack_tree(tree: DecisionTree) -> PackedTree:
+    n = tree.num_nodes
+    feature = np.full(n, -1, np.int32)
+    threshold = np.zeros(n, np.float32)
+    left = np.arange(n, dtype=np.int32)  # leaves self-loop
+    right = np.arange(n, dtype=np.int32)
+    label = np.zeros(n, np.int32)
+    for i, node in enumerate(tree.nodes):
+        label[i] = node.label
+        if node.feature >= 0:
+            feature[i] = node.feature
+            threshold[i] = node.threshold
+            left[i] = node.left
+            right[i] = node.right
+    return PackedTree(
+        feature=jnp.asarray(feature),
+        threshold=jnp.asarray(threshold),
+        left=jnp.asarray(left),
+        right=jnp.asarray(right),
+        label=jnp.asarray(label),
+        depth=tree.max_depth,
+    )
+
+
+def tree_predict(packed: PackedTree, features: jnp.ndarray) -> jnp.ndarray:
+    """features: (F,) float32 -> () int32 class.  Fixed `depth` iterations of
+    gather-compare-select; leaves self-loop so early arrival is harmless."""
+    node = jnp.int32(0)
+    for _ in range(packed.depth):
+        f = packed.feature[node]
+        thr = packed.threshold[node]
+        x = features[jnp.maximum(f, 0)]
+        go_left = x <= thr
+        nxt = jnp.where(go_left, packed.left[node], packed.right[node])
+        node = jnp.where(f >= 0, nxt, node)
+    return packed.label[node]

@@ -1,0 +1,173 @@
+"""Nuddle — the generic delegation engine (paper §2).
+
+The paper's claim: Nuddle converts ANY concurrent NUMA-oblivious structure
+into a NUMA-aware one, because the delegation layer only needs (a) a way for
+clients to hand compact request frames to servers and (b) the base
+structure's own concurrent operations for servers to execute.
+
+The TPU translation factors delegation the same way.  A structure is
+delegable if it provides three shard-local callables (the analogue of the
+base algorithm's red-colored core ops in paper Figs. 4-6):
+
+    nominate(local_state, m)   -> frame          shard-local candidate frame
+    combine(frame_a, frame_b)  -> frame          associative frame merge
+    commit(local_state, frame, ctx) -> state     apply the global verdict
+
+`delegate()` then runs the generic two-phase hierarchical reduction:
+frames all-gather within the pod (fast tier), combine; pod frames cross the
+pod axis (compact — the request/response cache-line analogue), combine;
+verdict broadcasts implicitly (the reduction is replicated) and every shard
+commits locally.  The PQ tournament is one instantiation; `SortedSetOps`
+below is a second, structurally different one (batch membership + extract-
+range), demonstrating the genericity claim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pqueue.state import INF_KEY
+
+
+@dataclasses.dataclass(frozen=True)
+class DelegableOps:
+    """The structure-specific plugin (base-algorithm core ops)."""
+
+    nominate: Callable[[Any, int], Any]  # local_state, m -> frame
+    combine: Callable[[Any, Any], Any]  # frame, frame -> frame
+    commit: Callable[[Any, Any, Any], Any]  # local_state, verdict, ctx -> state
+
+
+def delegate_single_controller(
+    ops: DelegableOps,
+    local_states: Any,  # pytree with leading shard axis S
+    m: int,
+    npods: int,
+    ctx: Any = None,
+):
+    """Single-controller semantic path (tests/benches): performs the same
+    two-phase combine tree the distributed path performs, vectorized."""
+    S = jax.tree.leaves(local_states)[0].shape[0]
+    assert S % npods == 0
+    frames = jax.vmap(lambda s: ops.nominate(s, m))(local_states)
+
+    def reduce_frames(fr, n):
+        """Associative pairwise reduction over leading axis of size n."""
+        def body(f):
+            half = jax.tree.map(lambda x: x[: x.shape[0] // 2], f)
+            rest = jax.tree.map(lambda x: x[x.shape[0] // 2 :], f)
+            return jax.vmap(ops.combine)(half, rest)
+
+        while n > 1:
+            assert n % 2 == 0, "shard count must be a power of two"
+            frames_ = body(fr)
+            fr, n = frames_, n // 2
+        return jax.tree.map(lambda x: x[0], fr)
+
+    # Phase 1: per-pod combine.  Phase 2: cross-pod combine.
+    per_pod = jax.tree.map(
+        lambda x: x.reshape(npods, S // npods, *x.shape[1:]), frames
+    )
+    pod_frames = jax.vmap(lambda f: reduce_frames(f, S // npods))(per_pod)
+    verdict = reduce_frames(pod_frames, npods)
+    new_states = jax.vmap(lambda s: ops.commit(s, verdict, ctx))(local_states)
+    return new_states, verdict
+
+
+def delegate_dist(
+    ops: DelegableOps,
+    local_state: Any,  # this device's shard-local state
+    m: int,
+    shard_axes: Tuple[str, ...],
+    pod_axis: str | None,
+    ctx: Any = None,
+):
+    """Distributed delegation under shard_map: all_gather-combine within the
+    pod, then only combined pod frames cross `pod_axis`."""
+    frame = ops.nominate(local_state, m)
+
+    def gather_combine(fr, axes):
+        gathered = jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axes, tiled=False), fr
+        )
+        n = jax.tree.leaves(gathered)[0].shape[0]
+        out = jax.tree.map(lambda x: x[0], gathered)
+        for i in range(1, n):
+            out = ops.combine(out, jax.tree.map(lambda x: x[i], gathered))
+        return out
+
+    pod_frame = gather_combine(frame, shard_axes)
+    verdict = (
+        gather_combine(pod_frame, (pod_axis,)) if pod_axis else pod_frame
+    )
+    return ops.commit(local_state, verdict, ctx), verdict
+
+
+# ---------------------------------------------------------------------------
+# Genericity demo #1: the PQ tournament as a DelegableOps plugin.
+# ---------------------------------------------------------------------------
+
+
+def pq_tournament_ops() -> DelegableOps:
+    """Priority-queue deleteMin as delegation: nominate = sorted prefix,
+    combine = 2-way merge keeping m smallest, commit = remove won prefix."""
+    from repro.core.pqueue import local as L
+
+    def nominate(local_state, m):
+        keys, vals = local_state["keys"], local_state["vals"]
+        return {"k": keys[:m], "v": vals[:m]}
+
+    def combine(a, b):
+        from repro.core.pqueue.local import topk_of_merged
+
+        m = a["k"].shape[0]
+        k, v = topk_of_merged(
+            jnp.concatenate([a["k"], b["k"]]),
+            jnp.concatenate([a["v"], b["v"]]),
+            m,
+        )
+        return {"k": k, "v": v}
+
+    def commit(local_state, verdict, ctx):
+        n = ctx["n"]
+        cutoff = verdict["k"][jnp.maximum(n - 1, 0)]
+        keys = local_state["keys"]
+        take = jnp.where(n > 0, jnp.sum(keys < cutoff), 0).astype(jnp.int32)
+        C = keys.shape[0]
+        idx = jnp.minimum(jnp.arange(C, dtype=jnp.int32) + take, C - 1)
+        in_rng = (jnp.arange(C, dtype=jnp.int32) + take) < C
+        return {
+            "keys": jnp.where(in_rng, keys[idx], INF_KEY),
+            "vals": jnp.where(in_rng, local_state["vals"][idx], 0),
+        }
+
+    return DelegableOps(nominate, combine, commit)
+
+
+# ---------------------------------------------------------------------------
+# Genericity demo #2: a sorted-set (skip-list stand-in) with batch contains
+# + extract-below — structurally different frames (bitmaps, not runs).
+# ---------------------------------------------------------------------------
+
+
+def sorted_set_ops(query_keys: jnp.ndarray) -> DelegableOps:
+    """Batch membership: nominate = local hit bitmap for `query_keys`,
+    combine = OR, commit = identity (read-only op).  Shows that delegation
+    frames need not be candidate runs at all."""
+
+    def nominate(local_state, m):
+        keys = local_state["keys"]
+        hit = jnp.isin(query_keys, keys, assume_unique=False)
+        return {"hit": hit}
+
+    def combine(a, b):
+        return {"hit": a["hit"] | b["hit"]}
+
+    def commit(local_state, verdict, ctx):
+        return local_state
+
+    return DelegableOps(nominate, combine, commit)

@@ -1,0 +1,8 @@
+from repro.core.pqueue.state import PQState, make_state, INF_KEY  # noqa: F401
+from repro.core.pqueue.ops import (  # noqa: F401
+    Schedule,
+    insert,
+    delete_min,
+    peek_min,
+    apply_op_batch,
+)

@@ -1,0 +1,174 @@
+"""Per-shard local primitives, vectorized over the shard axis.
+
+These are the jnp reference paths; `repro.kernels` provides Pallas TPU
+kernels for the two hot spots (sorted merge for insert, bitonic top-k for the
+deleteMin tournament) that bit-match these functions (tests sweep both).
+
+All functions operate on (S, C) shard-major arrays so a single call covers
+every shard a device owns — on TPU this keeps the VPU lanes full and lets the
+Pallas kernels tile (shard, capacity) blocks into VMEM.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pqueue.state import INF_KEY
+
+
+def merge_sorted(
+    keys: jnp.ndarray,  # (S, C) ascending, INF-padded
+    vals: jnp.ndarray,  # (S, C)
+    inc_keys: jnp.ndarray,  # (S, R) ascending, INF-padded
+    inc_vals: jnp.ndarray,  # (S, R)
+    size: jnp.ndarray,  # (S,)
+    inc_count: jnp.ndarray,  # (S,)
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Merge a sorted incoming run into each shard's sorted buffer.
+
+    Rank-based merge (no data-dependent control flow — TPU friendly):
+      out_pos(existing_i) = i + #incoming strictly-less-than existing_i
+      out_pos(incoming_j) = j + #existing less-or-equal incoming_j
+    Ties break toward existing elements (stable). Elements ranked beyond C
+    are dropped (largest ones) and counted in `dropped`.
+
+    Returns (new_keys, new_vals, new_size, dropped).
+    """
+    S, C = keys.shape
+    R = inc_keys.shape[1]
+
+    # searchsorted per row: rank of each existing key among incoming ('left'
+    # side: count of incoming strictly less) and of each incoming key among
+    # existing ('right' side: count of existing <=, giving stable tie-break).
+    rank_exist = jax.vmap(
+        lambda inc, k: jnp.searchsorted(inc, k, side="left")
+    )(inc_keys, keys).astype(jnp.int32)
+    rank_inc = jax.vmap(
+        lambda k, inc: jnp.searchsorted(k, inc, side="right")
+    )(keys, inc_keys).astype(jnp.int32)
+
+    pos_exist = jnp.arange(C, dtype=jnp.int32)[None, :] + rank_exist  # (S, C)
+    pos_inc = jnp.arange(R, dtype=jnp.int32)[None, :] + rank_inc  # (S, R)
+
+    # INF sentinels must stay at the tail; rank math already guarantees that
+    # (INF >= everything), but positions may exceed C — scatter with drop.
+    out_keys = jnp.full((S, C), INF_KEY, dtype=keys.dtype)
+    out_vals = jnp.zeros((S, C), dtype=vals.dtype)
+    row = jnp.arange(S, dtype=jnp.int32)[:, None]
+
+    out_keys = out_keys.at[row, pos_exist].set(keys, mode="drop")
+    out_vals = out_vals.at[row, pos_exist].set(vals, mode="drop")
+    # Guard incoming INF padding: give it an out-of-range position so it can
+    # never overwrite a real element that also ranked near the tail.
+    inc_is_pad = inc_keys == INF_KEY
+    pos_inc = jnp.where(inc_is_pad, C + R, pos_inc)
+    out_keys = out_keys.at[row, pos_inc].set(inc_keys, mode="drop")
+    out_vals = out_vals.at[row, pos_inc].set(inc_vals, mode="drop")
+
+    new_size = jnp.minimum(size + inc_count, C).astype(jnp.int32)
+    dropped = jnp.maximum(size + inc_count - C, 0).astype(jnp.int32)
+    return out_keys, out_vals, new_size, dropped
+
+
+def remove_prefix(
+    keys: jnp.ndarray,  # (S, C)
+    vals: jnp.ndarray,
+    size: jnp.ndarray,  # (S,)
+    take: jnp.ndarray,  # (S,) number of smallest elements to remove per shard
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Remove the `take[s]` smallest elements of shard s (always a prefix of
+    the sorted buffer — the tournament only ever consumes shard prefixes).
+    Implemented as a per-row left shift."""
+    S, C = keys.shape
+    idx = jnp.arange(C, dtype=jnp.int32)[None, :] + take[:, None]  # (S, C)
+    in_range = idx < C
+    idx = jnp.minimum(idx, C - 1)
+    new_keys = jnp.where(
+        in_range, jnp.take_along_axis(keys, idx, axis=1), INF_KEY
+    )
+    new_vals = jnp.where(
+        in_range, jnp.take_along_axis(vals, idx, axis=1), 0
+    )
+    new_size = jnp.maximum(size - take, 0).astype(jnp.int32)
+    return new_keys, new_vals, new_size
+
+
+def remove_at(
+    keys: jnp.ndarray,  # (S, C)
+    vals: jnp.ndarray,
+    size: jnp.ndarray,
+    remove_mask: jnp.ndarray,  # (S, C) bool — positions to delete
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Remove arbitrary positions (spray pops random slots in the top
+    region).  Compaction trick: removed slots become INF, then a full-row
+    sort restores I1/I2 because the sentinel equals the padding value."""
+    n_removed = jnp.sum(remove_mask & (keys != INF_KEY), axis=1).astype(jnp.int32)
+    k = jnp.where(remove_mask, INF_KEY, keys)
+    # Stable single-key sort carrying vals along.
+    order = jnp.argsort(k, axis=1, stable=True)
+    new_keys = jnp.take_along_axis(k, order, axis=1)
+    new_vals = jnp.take_along_axis(jnp.where(remove_mask, 0, vals), order, axis=1)
+    new_size = jnp.maximum(size - n_removed, 0).astype(jnp.int32)
+    return new_keys, new_vals, new_size
+
+
+import os
+
+# Kernel dispatch: the Pallas bitonic_topk runs the tournament on TPU; the
+# jnp stable-argsort is the oracle (and the CPU default — interpret-mode
+# kernels are Python-slow).  REPRO_PQ_KERNELS=1 forces the kernel path.
+_USE_KERNELS_ENV = os.environ.get("REPRO_PQ_KERNELS", "") == "1"
+
+
+def _kernels_enabled() -> bool:
+    if _USE_KERNELS_ENV:
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def topk_of_merged(
+    cand_keys: jnp.ndarray,  # (N,) unsorted or blockwise-sorted candidates
+    cand_vals: jnp.ndarray,  # (N,)
+    m: int,
+    use_kernel: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Global tournament: the m smallest of N candidates, ascending.
+
+    Kernel path: the bitonic network sorts (key, position-tag) pairs
+    lexicographically, then payloads are gathered by tag — bit-identical to
+    the stable argsort (ties break by position in both)."""
+    if use_kernel is None:
+        use_kernel = _kernels_enabled()
+    if use_kernel and cand_keys.dtype == jnp.int32:
+        from repro.kernels.ops import topk_smallest
+
+        n = cand_keys.shape[0]
+        tags = jnp.arange(n, dtype=jnp.int32)
+        kk, kt = topk_smallest(cand_keys[None, :], tags[None, :], m)
+        return kk[0], cand_vals[kt[0]]
+    order = jnp.argsort(cand_keys, stable=True)[:m]
+    return cand_keys[order], cand_vals[order]
+
+
+def count_winners_per_shard(
+    cand_keys: jnp.ndarray,  # (S, m) each shard's candidate prefix
+    threshold_key: jnp.ndarray,  # () the m-th smallest (winner cutoff)
+    winners_needed: jnp.ndarray,  # () total winners to take (== active m)
+) -> jnp.ndarray:
+    """How many elements each shard loses to the tournament.
+
+    Elements strictly below the cutoff always win.  Ties at the cutoff are
+    broken by shard id (lower shard wins) so that exactly `winners_needed`
+    elements are removed globally — the same resolution the oracle uses.
+    """
+    S, m = cand_keys.shape
+    below = jnp.sum(cand_keys < threshold_key, axis=1).astype(jnp.int32)  # (S,)
+    at = jnp.sum(cand_keys == threshold_key, axis=1).astype(jnp.int32)  # (S,)
+    remaining = winners_needed - jnp.sum(below)
+    # Prefix allocation of tie slots by shard id.
+    tie_prefix = jnp.cumsum(at) - at
+    tie_take = jnp.clip(remaining - tie_prefix, 0, at)
+    return below + tie_take.astype(jnp.int32)

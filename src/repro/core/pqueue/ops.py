@@ -1,0 +1,112 @@
+"""Public batched priority-queue API (paper Fig. 6's insert/deleteMin pair).
+
+Op batches are the bulk-synchronous translation of "p threads each issue one
+operation": a step applies a vector of B ops.  The linearization applied is
+inserts-before-deletes within a batch (any linearization of concurrent ops is
+admissible for a concurrent PQ; this one is fixed and matched by the oracle).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pqueue import schedules as SCH
+from repro.core.pqueue.local import merge_sorted, topk_of_merged
+from repro.core.pqueue.partition import route_capped, route_dense
+from repro.core.pqueue.schedules import DeleteResult, Schedule
+from repro.core.pqueue.state import INF_KEY, PQState
+
+OP_INSERT = 0
+OP_DELETE_MIN = 1
+
+
+def insert(
+    state: PQState,
+    keys: jnp.ndarray,
+    vals: jnp.ndarray,
+    mask: jnp.ndarray | None = None,
+    capacity_factor: float | None = None,
+) -> Tuple[PQState, jnp.ndarray]:
+    """Insert a batch.  Returns (state, dropped_per_shard).
+
+    capacity_factor=None -> exact dense routing (no drops besides shard
+    overflow); otherwise MoE-style capped routing (rejected ops reported in
+    dropped accounting is the caller's to retry — used by the serving
+    scheduler's admission path).
+    """
+    if mask is None:
+        mask = keys < INF_KEY
+    else:
+        mask = mask & (keys < INF_KEY)  # INF is the reserved sentinel
+    S = state.num_shards
+    if capacity_factor is None:
+        rk, rv, counts = route_dense(keys, vals, mask, S)
+    else:
+        rk, rv, counts, _rejected = route_capped(
+            keys, vals, mask, S, capacity_factor
+        )
+    new_keys, new_vals, new_size, dropped = merge_sorted(
+        state.keys, state.vals, rk, rv, state.size, counts
+    )
+    return PQState(new_keys, new_vals, new_size), dropped
+
+
+def delete_min(
+    state: PQState,
+    m: int,
+    schedule: Schedule | int = Schedule.STRICT_FLAT,
+    active: jnp.ndarray | int | None = None,
+    rng: jax.Array | None = None,
+    npods: int = 1,
+) -> DeleteResult:
+    """Delete (up to) `active` minima with a static bound of m.
+
+    `schedule` may be a Python enum (static dispatch — separate XLA programs)
+    — the dynamic lax.switch dispatch lives in SmartPQ, which is the paper's
+    adaptive contribution.
+    """
+    if active is None:
+        active = m
+    active = jnp.asarray(active, jnp.int32)
+    if rng is None:
+        rng = jax.random.key(0)
+    fn = SCH.SCHEDULE_FNS[Schedule(int(schedule))]
+    return fn(state, m, active, rng, npods)
+
+
+def peek_min(state: PQState, m: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-m (ascending) without removal — exact."""
+    cand_k = state.keys[:, :m].ravel()
+    cand_v = state.vals[:, :m].ravel()
+    return topk_of_merged(cand_k, cand_v, m)
+
+
+class OpBatchResult(NamedTuple):
+    state: PQState
+    deleted_keys: jnp.ndarray  # (B,) ascending, INF-padded
+    deleted_vals: jnp.ndarray  # (B,)
+    n_deleted: jnp.ndarray  # ()
+    dropped: jnp.ndarray  # (S,) inserts lost to capacity overflow
+
+
+def apply_op_batch(
+    state: PQState,
+    ops: jnp.ndarray,  # (B,) OP_INSERT / OP_DELETE_MIN
+    keys: jnp.ndarray,  # (B,) insert keys (ignored for deletes)
+    vals: jnp.ndarray,  # (B,)
+    schedule: Schedule | int = Schedule.STRICT_FLAT,
+    rng: jax.Array | None = None,
+    npods: int = 1,
+) -> OpBatchResult:
+    """One bulk step of mixed operations — the unit the paper's
+    serve_requests() loop processes per client group (Fig. 6 lines 86-97)."""
+    B = ops.shape[0]
+    ins_mask = ops == OP_INSERT
+    n_del = jnp.sum(ops == OP_DELETE_MIN).astype(jnp.int32)
+
+    state, dropped = insert(state, keys, vals, mask=ins_mask)
+    res = delete_min(state, B, schedule=schedule, active=n_del, rng=rng, npods=npods)
+    return OpBatchResult(res.state, res.keys, res.vals, res.n_out, dropped)

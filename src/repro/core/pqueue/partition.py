@@ -1,0 +1,90 @@
+"""Routing a batch of (key, value) ops to their owning shards.
+
+Mirrors MoE token dispatch: compute the destination shard per key, then build
+a dense (S, R) routed matrix (INF-padded, ascending per row).  On the
+distributed backend the same layout feeds `all_to_all`; on the single-device
+semantic backend it feeds the vectorized per-shard merge directly.
+
+R (per-shard receive capacity) is static.  `route_dense` uses R = B (exact,
+no drops — used by tests/benchmarks).  `route_capped` uses a capacity factor
+like MoE dispatch and reports overflow, which is what the serving scheduler
+uses at scale.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pqueue.state import INF_KEY
+from repro.utils.hashing import shard_of_key
+
+
+def route_dense(
+    keys: jnp.ndarray,  # (B,) int32
+    vals: jnp.ndarray,  # (B,) int32
+    mask: jnp.ndarray,  # (B,) bool — valid ops
+    num_shards: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Exact routing. Returns (routed_keys (S, B), routed_vals (S, B),
+    counts (S,)). Each row ascending, INF-padded."""
+    B = keys.shape[0]
+    dest = shard_of_key(keys, num_shards)
+    dest = jnp.where(mask, dest, num_shards)  # invalid -> virtual shard S
+
+    # (S, B) one-hot placement, then per-row sort pulls real keys to front in
+    # ascending order (INF sentinel tails).
+    hit = dest[None, :] == jnp.arange(num_shards, dtype=jnp.int32)[:, None]
+    routed_keys = jnp.where(hit, keys[None, :], INF_KEY)
+    order = jnp.argsort(routed_keys, axis=1)
+    routed_keys = jnp.take_along_axis(routed_keys, order, axis=1)
+    routed_vals = jnp.take_along_axis(
+        jnp.where(hit, vals[None, :], 0), order, axis=1
+    )
+    counts = jnp.sum(hit & mask[None, :], axis=1).astype(jnp.int32)
+    return routed_keys, routed_vals, counts
+
+
+def route_capped(
+    keys: jnp.ndarray,
+    vals: jnp.ndarray,
+    mask: jnp.ndarray,
+    num_shards: int,
+    capacity_factor: float = 2.0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """MoE-style capped routing: per-shard receive slots
+    R = ceil(B / S * capacity_factor).  Ops beyond R for a shard are dropped
+    and reported via `rejected` so the caller can retry next step (the serving
+    scheduler re-enqueues).  Returns (routed_keys (S, R), routed_vals (S, R),
+    counts (S,), rejected (B,) bool)."""
+    B = keys.shape[0]
+    R = max(1, int(-(-B * capacity_factor // num_shards)))
+    R = min(R, B)
+    dest = shard_of_key(keys, num_shards)
+    dest = jnp.where(mask, dest, num_shards)
+
+    hit = dest[None, :] == jnp.arange(num_shards, dtype=jnp.int32)[:, None]
+    # Position of each op within its destination shard's receive buffer.
+    pos_in_shard = jnp.cumsum(hit, axis=1) - 1  # (S, B)
+    pos = jnp.sum(jnp.where(hit, pos_in_shard, 0), axis=0)  # (B,)
+    keep = mask & (pos < R)
+    rejected = mask & ~keep
+
+    # Scatter into (S, R).
+    routed_keys = jnp.full((num_shards, R), INF_KEY, dtype=keys.dtype)
+    routed_vals = jnp.zeros((num_shards, R), dtype=vals.dtype)
+    d = jnp.where(keep, dest, num_shards)  # drop rejected
+    routed_keys = routed_keys.at[d, jnp.where(keep, pos, 0)].set(
+        jnp.where(keep, keys, INF_KEY), mode="drop"
+    )
+    routed_vals = routed_vals.at[d, jnp.where(keep, pos, 0)].set(
+        jnp.where(keep, vals, 0), mode="drop"
+    )
+    # Ascending per row for the merge.
+    order = jnp.argsort(routed_keys, axis=1)
+    routed_keys = jnp.take_along_axis(routed_keys, order, axis=1)
+    routed_vals = jnp.take_along_axis(routed_vals, order, axis=1)
+    counts = jnp.minimum(jnp.sum(hit, axis=1), R).astype(jnp.int32)
+    return routed_keys, routed_vals, counts, rejected

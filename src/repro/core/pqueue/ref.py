@@ -1,0 +1,155 @@
+"""Numpy oracle for the sharded bulk priority queue.
+
+Models the exact linearized semantics the JAX implementation promises:
+  * insert batch: all valid keys added (minus reported drops)
+  * exact deleteMin batch: the n smallest (key, tie by owning shard id, then
+    insertion-order-within-shard) removed and returned ascending
+  * spray deleteMin batch: any multiset of n keys drawn from the global top
+    `spray_bound(S, m)` is admissible — the oracle checks the envelope and
+    multiset conservation instead of exact equality.
+
+Used by unit tests, hypothesis properties, and the SSSP example's checker.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.pqueue.schedules import spray_bound  # noqa: F401  (re-export)
+from repro.core.pqueue.state import INF_KEY
+from repro.utils.hashing import shard_of_key
+
+
+def _shard_of_key_np(keys: np.ndarray, num_shards: int) -> np.ndarray:
+    import jax.numpy as jnp
+
+    return np.asarray(shard_of_key(jnp.asarray(keys, jnp.int32), num_shards))
+
+
+class RefPQ:
+    """Exact reference: a sorted multiset of (key, shard, seq, val)."""
+
+    def __init__(self, num_shards: int, capacity: int):
+        self.S = num_shards
+        self.C = capacity
+        self._items: List[Tuple[int, int, int, int]] = []  # (key, shard, seq, val)
+        self._seq_per_shard = [0] * num_shards
+        self.total_dropped = 0
+
+    # -- operations ---------------------------------------------------------
+
+    def insert_batch(self, keys, vals, mask=None) -> int:
+        keys = np.asarray(keys)
+        vals = np.asarray(vals)
+        if mask is None:
+            mask = keys < INF_KEY
+        mask = np.asarray(mask, bool)
+        shards = _shard_of_key_np(keys, self.S)
+        # Match the JAX merge order: within a batch, routed runs are sorted by
+        # key before merging, and ties against existing elements go AFTER the
+        # existing ones (stable, side='right' in merge_sorted).  Sequence ids
+        # reproduce that: existing elements have lower seq.
+        order = np.lexsort((np.arange(len(keys)), keys))
+        dropped = 0
+        per_shard_count = {s: self.shard_size(s) for s in range(self.S)}
+        for i in order:
+            if not mask[i]:
+                continue
+            s = int(shards[i])
+            if per_shard_count[s] >= self.C:
+                dropped += 1
+                continue
+            self._items.append(
+                (int(keys[i]), s, self._seq_per_shard[s], int(vals[i]))
+            )
+            self._seq_per_shard[s] += 1
+            per_shard_count[s] += 1
+        self._items.sort()
+        self.total_dropped += dropped
+        return dropped
+
+    def delete_min_exact(self, n: int):
+        """Remove and return the n globally smallest, ascending.
+        Tie-break (key, shard, seq) matches the JAX tournament."""
+        n = min(n, len(self._items))
+        taken = self._items[:n]
+        self._items = self._items[n:]
+        return (
+            np.array([t[0] for t in taken], np.int64),
+            np.array([t[3] for t in taken], np.int64),
+        )
+
+    def check_spray_result(self, returned_keys, m: int) -> Tuple[bool, str]:
+        """Validate a spray batch AGAINST THE PRE-DELETE STATE.
+
+        Deterministic guarantee of the window policy: every returned key is
+        within the first (m + pad) elements OF SOME SHARD, where
+        pad = (ilog2(S)+1)^2 — collective-free spray cannot promise a
+        deterministic GLOBAL rank (a deleter landing on a large-key shard
+        pops that shard's head); the global O(m + S log^2 S) envelope
+        (`spray_bound`) holds with high probability over hash placement and
+        is validated statistically by `global_envelope_violations`."""
+        returned_keys = [int(k) for k in returned_keys if k < INF_KEY]
+        if not returned_keys:
+            return True, "empty"
+        pad = (max(int(self.S - 1).bit_length(), 1) + 1) ** 2
+        window = m + pad
+        per_shard: dict = {}
+        for key, shard, _seq, _v in self._items:
+            per_shard.setdefault(shard, []).append(key)
+        for s in per_shard:
+            per_shard[s].sort()
+        for k in returned_keys:
+            ranks = [
+                keys.index(k) for keys in per_shard.values() if k in keys
+            ]
+            if not ranks:
+                return False, f"key {k} not present pre-delete"
+            if min(ranks) >= window:
+                return False, (
+                    f"key {k} at best shard-rank {min(ranks)} >= window {window}"
+                )
+        return True, "ok"
+
+    def global_envelope_violations(self, returned_keys, m: int) -> Tuple[int, int]:
+        """(violations, total): returned keys beyond the probabilistic
+        global top-spray_bound(S, m) envelope."""
+        returned_keys = [int(k) for k in returned_keys if k < INF_KEY]
+        if not returned_keys:
+            return 0, 0
+        bound = spray_bound(self.S, m)
+        all_keys = sorted(t[0] for t in self._items)
+        if len(all_keys) <= bound:
+            return 0, len(returned_keys)
+        cutoff = all_keys[bound - 1]
+        return sum(1 for k in returned_keys if k > cutoff), len(returned_keys)
+
+    def remove_multiset(self, keys) -> bool:
+        """Remove an arbitrary returned multiset (for relaxed schedules).
+        Returns False if a key wasn't present (conservation violation)."""
+        from collections import Counter
+
+        want = Counter(int(k) for k in keys if k < INF_KEY)
+        kept = []
+        for item in self._items:
+            if want.get(item[0], 0) > 0:
+                want[item[0]] -= 1
+            else:
+                kept.append(item)
+        if any(v > 0 for v in want.values()):
+            return False
+        self._items = kept
+        return True
+
+    # -- views --------------------------------------------------------------
+
+    def shard_size(self, s: int) -> int:
+        return sum(1 for it in self._items if it[1] == s)
+
+    def key_multiset(self) -> np.ndarray:
+        return np.array(sorted(t[0] for t in self._items), np.int64)
+
+    def __len__(self) -> int:
+        return len(self._items)

@@ -1,0 +1,246 @@
+"""deleteMin schedules — the paper's evaluation cast, translated to TPU.
+
+Paper implementation        -> schedule here      semantics   comm pattern
+---------------------------------------------------------------------------
+lotan_shavit  (exact obliv) -> STRICT_FLAT        exact       1 global gather of S*m cands
+alistarh_herlihy (SprayList)-> SPRAY_HERLIHY      relaxed     none (adaptive window)
+alistarh_fraser  (SprayList)-> SPRAY_FRASER       relaxed     none (uniform window)
+Nuddle (delegation)         -> HIER               exact       intra-pod gather + pod-axis-only
+                                                              exchange of npods*m cands
+ffwd (single server)        -> FFWD               exact       tree-funnel to shard 0
+(ablation lower bound)      -> LOCAL              per-shard   none, no global order
+
+This module implements the *semantics* vectorized over the full (S, C) state
+(single-controller path used by tests, benchmarks, and the oracle diff);
+`repro.core.pqueue.dist` implements the same schedules with real collectives
+under shard_map.  STRICT_FLAT / HIER / FFWD are bit-identical in outcome and
+differ only in communication — exactly the paper's "same structure, different
+access path" property that makes SmartPQ's mode switch free.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pqueue import local as L
+from repro.core.pqueue.state import INF_KEY, PQState
+
+
+class Schedule(enum.IntEnum):
+    STRICT_FLAT = 0  # lotan_shavit analogue (exact, oblivious)
+    SPRAY_HERLIHY = 1  # alistarh_herlihy analogue (relaxed, adaptive window)
+    HIER = 2  # Nuddle analogue (exact, pod-hierarchical delegation)
+    FFWD = 3  # ffwd analogue (exact, single-server funnel)
+    LOCAL = 4  # ablation: per-shard pops, no global order
+    SPRAY_FRASER = 5  # alistarh_fraser analogue (relaxed, uniform window)
+
+
+class DeleteResult(NamedTuple):
+    state: PQState
+    keys: jnp.ndarray  # (m,) ascending; INF-padded beyond n_out
+    vals: jnp.ndarray  # (m,)
+    n_out: jnp.ndarray  # () actual number returned
+
+
+def _ilog2(n: int) -> int:
+    return max(int(n - 1).bit_length(), 1)
+
+
+def spray_bound(num_shards: int, m: int) -> int:
+    """Relaxation envelope: every key returned by a spray deleteMin of batch m
+    is among the smallest `spray_bound(S, m)` keys of the queue (property-
+    tested).  Mirrors SprayList's O(p log^3 p) guarantee with p deleters: here
+    the batch of m deleters spreads over S shards, each spraying a window of
+    at most ceil(m/S) + (log2 S + 1)^2 entries."""
+    per_shard = -(-m // num_shards) + (_ilog2(num_shards) + 1) ** 2
+    return min(num_shards * per_shard, 1 << 30)
+
+
+# ---------------------------------------------------------------------------
+# Exact schedules (STRICT_FLAT / HIER / FFWD share the tournament semantics).
+# ---------------------------------------------------------------------------
+
+
+def _tournament(
+    state: PQState, m: int, active: jnp.ndarray
+) -> DeleteResult:
+    """Exact top-`active` removal (active <= m static bound).
+
+    Each shard nominates its m smallest (a prefix — the buffer is sorted), a
+    global tournament selects the winners, and every shard removes the prefix
+    it lost.  Tie-break: (key, shard, slot) lexicographic, matching both the
+    flat argsort order and the oracle.
+    """
+    S = state.num_shards
+    cand_k = state.keys[:, :m]  # (S, m)
+    cand_v = state.vals[:, :m]
+
+    n = jnp.minimum(active, state.total_size).astype(jnp.int32)
+    win_k, win_v = L.topk_of_merged(cand_k.ravel(), cand_v.ravel(), m)
+
+    cutoff = win_k[jnp.maximum(n - 1, 0)]
+    take = L.count_winners_per_shard(cand_k, cutoff, n)
+    take = jnp.where(n > 0, take, 0)
+
+    keys, vals, size = L.remove_prefix(state.keys, state.vals, state.size, take)
+    lane = jnp.arange(m, dtype=jnp.int32)
+    out_k = jnp.where(lane < n, win_k, INF_KEY)
+    out_v = jnp.where(lane < n, win_v, 0)
+    return DeleteResult(PQState(keys, vals, size), out_k, out_v, n)
+
+
+def delete_strict_flat(
+    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
+) -> DeleteResult:
+    """lotan_shavit: one flat global tournament (all S*m candidates meet)."""
+    del rng, npods
+    return _tournament(state, m, active)
+
+
+def delete_hier(
+    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
+) -> DeleteResult:
+    """Nuddle: two-phase tournament — pod-local semifinal, then only pod
+    winners cross the slow tier.  Semantically identical to STRICT_FLAT (the
+    semifinal never eliminates a global winner: a pod's top-m contains every
+    candidate that can rank in the global top-m)."""
+    del rng
+    S = state.num_shards
+    assert S % npods == 0, f"shards {S} must split evenly over {npods} pods"
+    # Phase 1 (intra-pod, fast ICI): per-pod top-m.   Phase 2 (pod axis only):
+    # npods*m candidates.  The single-controller path computes the same values
+    # the two-phase collective computes; dist.py issues the real collectives.
+    cand_k = state.keys[:, :m].reshape(npods, -1)
+    cand_v = state.vals[:, :m].reshape(npods, -1)
+    pod_k, pod_v = jax.vmap(lambda k, v: L.topk_of_merged(k, v, m))(cand_k, cand_v)
+    win_k, win_v = L.topk_of_merged(pod_k.ravel(), pod_v.ravel(), m)
+
+    n = jnp.minimum(active, state.total_size).astype(jnp.int32)
+    cutoff = win_k[jnp.maximum(n - 1, 0)]
+    take = L.count_winners_per_shard(state.keys[:, :m], cutoff, n)
+    take = jnp.where(n > 0, take, 0)
+    keys, vals, size = L.remove_prefix(state.keys, state.vals, state.size, take)
+    lane = jnp.arange(m, dtype=jnp.int32)
+    out_k = jnp.where(lane < n, win_k, INF_KEY)
+    out_v = jnp.where(lane < n, win_v, 0)
+    return DeleteResult(PQState(keys, vals, size), out_k, out_v, n)
+
+
+def delete_ffwd(
+    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
+) -> DeleteResult:
+    """ffwd: every shard's candidates funnel to the single server (shard 0),
+    which runs the whole tournament alone.  Single-controller semantics equal
+    STRICT_FLAT; dist.py realizes the log-depth tree funnel + broadcast."""
+    del rng, npods
+    return _tournament(state, m, active)
+
+
+# ---------------------------------------------------------------------------
+# Relaxed schedules (SprayList analogues) — collective-free.
+# ---------------------------------------------------------------------------
+
+
+def _spray(
+    state: PQState,
+    m: int,
+    active: jnp.ndarray,
+    rng: jax.Array,
+    adaptive_window: bool,
+) -> DeleteResult:
+    """Each of the `active` deleters lands on a uniform random shard; each
+    shard pops its deleters' picks from a bounded window at the head of its
+    sorted buffer.  No cross-shard coordination of any kind.
+
+    adaptive_window=True (herlihy flavour): window ~ m_s + (log2 S + 1)^2 —
+      tight when few deleters land on the shard.
+    adaptive_window=False (fraser flavour): uniform window spray_bound/S —
+      wider, cheaper to compute, slightly worse envelope constants.
+    """
+    S, C = state.keys.shape
+    k_shard, k_pos = jax.random.split(rng)
+
+    lane = jnp.arange(m, dtype=jnp.int32)
+    act = lane < jnp.minimum(active, m)
+    shard_choice = jax.random.randint(k_shard, (m,), 0, S)
+    shard_choice = jnp.where(act, shard_choice, S)  # park inactive lanes
+    m_s = jnp.zeros((S,), jnp.int32).at[shard_choice].add(1, mode="drop")
+
+    pad = (_ilog2(S) + 1) ** 2
+    if adaptive_window:
+        window = m_s + pad
+    else:
+        window = jnp.full((S,), -(-m // S) + pad, jnp.int32)
+    window = jnp.minimum(jnp.minimum(window, state.size), C)
+
+    # Distinct random positions inside each shard's window: rank the uniform
+    # scores and keep the m_s smallest ranks that fall inside the window.
+    u = jax.random.uniform(k_pos, (S, C))
+    col = jnp.arange(C, dtype=jnp.int32)[None, :]
+    score = jnp.where(col < window[:, None], u, 2.0)
+    order = jnp.argsort(score, axis=1)
+    rank = jnp.argsort(order, axis=1)
+    takeable = jnp.minimum(m_s, window)
+    remove_mask = rank < takeable[:, None]
+
+    removed_k = jnp.where(remove_mask, state.keys, INF_KEY)
+    removed_v = jnp.where(remove_mask, state.vals, 0)
+    out_k, out_v = L.topk_of_merged(removed_k.ravel(), removed_v.ravel(), m)
+
+    keys, vals, size = L.remove_at(state.keys, state.vals, state.size, remove_mask)
+    n = jnp.sum(takeable).astype(jnp.int32)
+    return DeleteResult(PQState(keys, vals, size), out_k, out_v, n)
+
+
+def delete_spray_herlihy(
+    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
+) -> DeleteResult:
+    del npods
+    return _spray(state, m, active, rng, adaptive_window=True)
+
+
+def delete_spray_fraser(
+    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
+) -> DeleteResult:
+    del npods
+    return _spray(state, m, active, rng, adaptive_window=False)
+
+
+def delete_local(
+    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
+) -> DeleteResult:
+    """Ablation lower bound: split the batch evenly, pop per-shard prefixes,
+    no ordering between shards at all."""
+    del rng, npods
+    S = state.num_shards
+    base, rem = divmod(m, S)
+    quota = base + (jnp.arange(S, dtype=jnp.int32) < rem).astype(jnp.int32)
+    # Respect the dynamic active count: shrink quotas from the tail.
+    excess = jnp.maximum(m - active, 0)
+    cum_from_tail = jnp.cumsum(quota[::-1])[::-1]
+    shrink = jnp.clip(quota - (cum_from_tail - excess), 0, quota)
+    quota = quota - shrink
+    take = jnp.minimum(quota, state.size)
+
+    taken_mask = jnp.arange(state.capacity)[None, :] < take[:, None]
+    removed_k = jnp.where(taken_mask, state.keys, INF_KEY)
+    removed_v = jnp.where(taken_mask, state.vals, 0)
+    out_k, out_v = L.topk_of_merged(removed_k.ravel(), removed_v.ravel(), m)
+
+    keys, vals, size = L.remove_prefix(state.keys, state.vals, state.size, take)
+    n = jnp.sum(take).astype(jnp.int32)
+    return DeleteResult(PQState(keys, vals, size), out_k, out_v, n)
+
+
+SCHEDULE_FNS = {
+    Schedule.STRICT_FLAT: delete_strict_flat,
+    Schedule.SPRAY_HERLIHY: delete_spray_herlihy,
+    Schedule.HIER: delete_hier,
+    Schedule.FFWD: delete_ffwd,
+    Schedule.LOCAL: delete_local,
+    Schedule.SPRAY_FRASER: delete_spray_fraser,
+}

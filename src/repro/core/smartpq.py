@@ -1,0 +1,235 @@
+"""SmartPQ — the paper's adaptive priority queue (§3), TPU form.
+
+Three key ideas of the paper, and where they live here:
+  1. Both algorithmic modes operate on the *same* underlying concurrent
+     structure  ->  both branches of `lax.switch` read/write the identical
+     PQState pytree; the sharding never changes with the mode.
+  2. A decision mechanism picks the mode  ->  packed decision tree evaluated
+     on-device every `decision_interval` steps (paper: every second, host
+     side; here: in-graph, zero host round-trip).
+  3. Transitions need no synchronization point  ->  the mode is a traced
+     int32 in the carry; "switching" is literally the predicate of
+     `lax.switch` changing value between two steps of one compiled program.
+
+Workload statistics (paper §5's future-work sketch — implemented here): the
+step tracks completed insert/delete counts, min/max requested key, and the
+caller-supplied active-client count, and derives Table-1 features on the fly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.classifier.dataset import make_training_set
+from repro.core.classifier.features import (
+    CLASS_AWARE,
+    CLASS_NEUTRAL,
+    CLASS_OBLIVIOUS,
+    NUM_CLASSES,
+)
+from repro.core.classifier.inference import PackedTree, pack_tree, tree_predict
+from repro.core.classifier.tree import DecisionTree, train_tree
+from repro.core.pqueue import schedules as SCH
+from repro.core.pqueue.ops import OP_DELETE_MIN, OP_INSERT, insert
+from repro.core.pqueue.schedules import DeleteResult, Schedule
+from repro.core.pqueue.state import INF_KEY, PQState, make_state
+
+# Mode encoding in the carry (== classifier class ids for OBLIVIOUS/AWARE).
+MODE_OBLIVIOUS = CLASS_OBLIVIOUS  # 0: base algorithm directly (spray)
+MODE_AWARE = CLASS_AWARE  # 1: Nuddle delegation (hier)
+
+
+class SmartPQStats(NamedTuple):
+    """Replicated workload statistics (paper §5)."""
+
+    step: jnp.ndarray  # () int32
+    mode: jnp.ndarray  # () int32 — current algorithmic mode
+    n_insert: jnp.ndarray  # () int32 ops since last decision
+    n_delete: jnp.ndarray  # () int32
+    min_key: jnp.ndarray  # () int32 smallest key requested so far
+    max_key: jnp.ndarray  # () int32 largest
+    transitions: jnp.ndarray  # () int32 — mode flips (overhead accounting)
+
+
+class SmartPQCarry(NamedTuple):
+    state: PQState
+    stats: SmartPQStats
+
+
+@dataclasses.dataclass(frozen=True)
+class SmartPQConfig:
+    num_shards: int = 64
+    capacity: int = 4096
+    npods: int = 2
+    decision_interval: int = 8  # steps between classifier calls
+    oblivious_schedule: Schedule = Schedule.SPRAY_HERLIHY
+    aware_schedule: Schedule = Schedule.HIER
+    initial_mode: int = MODE_OBLIVIOUS  # paper Fig. 8 line 106: default 1
+
+
+def _featurize_jnp(
+    num_clients: jnp.ndarray,
+    size: jnp.ndarray,
+    key_range: jnp.ndarray,
+    insert_frac: jnp.ndarray,
+) -> jnp.ndarray:
+    """jnp mirror of features.featurize (same normalization)."""
+    def lg2(x):
+        return jnp.log2(jnp.maximum(x.astype(jnp.float32), 1.0))
+
+    return jnp.stack(
+        [lg2(num_clients), lg2(size), lg2(key_range), insert_frac.astype(jnp.float32)]
+    )
+
+
+class SmartPQ:
+    """Adaptive PQ facade.  Construct once (trains or accepts a tree), then
+    drive `.step` (jittable, donatable) or `.step_host` (pre-compiled per-mode
+    dispatch — for runtimes that prefer not to carry both branches)."""
+
+    def __init__(
+        self,
+        config: SmartPQConfig = SmartPQConfig(),
+        tree: Optional[DecisionTree] = None,
+    ):
+        self.config = config
+        if tree is None:
+            X, y = make_training_set()
+            tree = train_tree(X, y, NUM_CLASSES, max_depth=8)
+        self.tree = tree
+        self.packed: PackedTree = pack_tree(tree)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def init(self) -> SmartPQCarry:
+        c = self.config
+        stats = SmartPQStats(
+            step=jnp.int32(0),
+            mode=jnp.int32(c.initial_mode),
+            n_insert=jnp.int32(0),
+            n_delete=jnp.int32(0),
+            min_key=jnp.int32(INF_KEY),
+            max_key=jnp.int32(0),
+            transitions=jnp.int32(0),
+        )
+        return SmartPQCarry(make_state(c.num_shards, c.capacity), stats)
+
+    # -- the adaptive step ----------------------------------------------------
+
+    def step(
+        self,
+        carry: SmartPQCarry,
+        ops: jnp.ndarray,  # (B,)
+        keys: jnp.ndarray,  # (B,)
+        vals: jnp.ndarray,  # (B,)
+        rng: jax.Array,
+        num_clients: jnp.ndarray | int | None = None,
+    ) -> Tuple[SmartPQCarry, DeleteResult]:
+        """One bulk step: update stats -> (maybe) re-decide mode -> apply the
+        batch under the selected mode.  Pure function; jit/scan friendly."""
+        c = self.config
+        state, stats = carry
+        B = ops.shape[0]
+        if num_clients is None:
+            num_clients = c.num_shards
+        num_clients = jnp.asarray(num_clients, jnp.int32)
+
+        ins_mask = ops == OP_INSERT
+        b_ins = jnp.sum(ins_mask).astype(jnp.int32)
+        b_del = jnp.sum(ops == OP_DELETE_MIN).astype(jnp.int32)
+
+        batch_min = jnp.min(jnp.where(ins_mask, keys, INF_KEY))
+        batch_max = jnp.max(jnp.where(ins_mask, keys, 0))
+        n_insert = stats.n_insert + b_ins
+        n_delete = stats.n_delete + b_del
+        min_key = jnp.minimum(stats.min_key, batch_min)
+        max_key = jnp.maximum(stats.max_key, batch_max)
+
+        # -- decision (paper Fig. 8 decisionTree(), on-device) ---------------
+        do_decide = (stats.step % c.decision_interval) == 0
+        total_ops = jnp.maximum(n_insert + n_delete, 1)
+        key_range = jnp.where(
+            min_key <= max_key, jnp.maximum(max_key - min_key, 1), 1
+        )
+        feats = _featurize_jnp(
+            num_clients,
+            state.total_size,
+            key_range,
+            n_insert.astype(jnp.float32) / total_ops.astype(jnp.float32),
+        )
+        pred = tree_predict(self.packed, feats)
+        keep = (~do_decide) | (pred == CLASS_NEUTRAL)
+        new_mode = jnp.where(keep, stats.mode, pred).astype(jnp.int32)
+        transitions = stats.transitions + (new_mode != stats.mode).astype(jnp.int32)
+        # Reset windowed op counters after each decision.
+        n_insert = jnp.where(do_decide, 0, n_insert)
+        n_delete = jnp.where(do_decide, 0, n_delete)
+
+        # -- apply batch under the selected mode ------------------------------
+        state, dropped = insert(state, keys, vals, mask=ins_mask)
+
+        def run(schedule: Schedule):
+            fn = SCH.SCHEDULE_FNS[schedule]
+
+            def branch(operand):
+                st, rng_ = operand
+                return fn(st, B, b_del, rng_, c.npods)
+
+            return branch
+
+        res: DeleteResult = jax.lax.switch(
+            new_mode,
+            [run(c.oblivious_schedule), run(c.aware_schedule)],
+            (state, rng),
+        )
+
+        new_stats = SmartPQStats(
+            step=stats.step + 1,
+            mode=new_mode,
+            n_insert=n_insert,
+            n_delete=n_delete,
+            min_key=min_key,
+            max_key=max_key,
+            transitions=transitions,
+        )
+        return SmartPQCarry(res.state, new_stats), res
+
+    # -- host-dispatch variant -------------------------------------------------
+
+    def make_mode_steps(self):
+        """Two independently-jitted per-mode step functions + the host-side
+        predictor.  State layout is identical between them, so the host
+        dispatcher can flip modes between calls with zero copies — the same
+        no-synchronization-point property, for runtimes that want smaller
+        programs than the fused lax.switch one."""
+        c = self.config
+
+        def _mk(schedule: Schedule):
+            fn = SCH.SCHEDULE_FNS[schedule]
+
+            @jax.jit
+            def mode_step(state: PQState, ops, keys, vals, rng):
+                B = ops.shape[0]
+                ins_mask = ops == OP_INSERT
+                b_del = jnp.sum(ops == OP_DELETE_MIN).astype(jnp.int32)
+                st, _ = insert(state, keys, vals, mask=ins_mask)
+                return fn(st, B, b_del, rng, c.npods)
+
+            return mode_step
+
+        return {
+            MODE_OBLIVIOUS: _mk(c.oblivious_schedule),
+            MODE_AWARE: _mk(c.aware_schedule),
+        }
+
+    def predict_mode_host(
+        self, num_clients: int, size: int, key_range: int, insert_frac: float
+    ) -> int:
+        from repro.core.classifier.features import featurize
+
+        return int(self.tree.predict(featurize(num_clients, size, key_range, insert_frac))[0])

@@ -1,0 +1,64 @@
+"""Sharded, prefetching host loader.
+
+Single-controller version of the multi-host input pipeline: the loader
+produces the GLOBAL batch, places it with the batch sharding, and prefetches
+`depth` batches ahead on a background thread so host data work overlaps
+device steps.  Under multi-host jax.distributed each process would build
+only its addressable shard (`process_slice`), same interface.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class ShardedLoader:
+    def __init__(
+        self,
+        make_batch: Callable[[int], dict],
+        sharding=None,
+        depth: int = 2,
+        start_step: int = 0,
+    ):
+        self._make = make_batch
+        self._sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._make(step)
+            if self._sharding is not None:
+                batch = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s), batch, self._sharding
+                )
+            try:
+                self._q.put((step, batch), timeout=1.0)
+            except queue.Full:
+                if self._stop.is_set():
+                    return
+                continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,8 @@
+from repro.distributed.mesh import (  # noqa: F401
+    AXIS_POD,
+    AXIS_DATA,
+    AXIS_MODEL,
+    batch_axes,
+    make_mesh,
+)
+from repro.distributed.sharding import ShardingRules, default_rules  # noqa: F401

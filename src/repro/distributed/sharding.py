@@ -1,0 +1,171 @@
+"""Sharding rules: logical param/activation names -> PartitionSpec.
+
+One place owns every sharding decision so the perf loop can flip a rule and
+re-lower (EXPERIMENTS.md §Perf iterates exactly here).
+
+Scheme (see mesh.py): 2D param storage over ('data', 'model') — the 'data'
+factor is the ZeRO-3 storage shard (XLA materializes the gather at use),
+the 'model' factor is Megatron-style tensor parallelism on dims that always
+divide 16 (flat qkv out-dims, d_ff, padded experts, padded vocab).  The
+residual stream is batch-sharded over ('pod', 'data') and sequence-sharded
+over 'model' for attention blocks (head counts need not divide the mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """PartitionSpecs by logical tensor role.  `L` marks the scanned layer
+    axis (always unsharded).  Trailing dims listed big-endian."""
+
+    # -- params ---------------------------------------------------------------
+    embed: P = P(AXIS_MODEL, AXIS_DATA)  # (V_pad, D)
+    head: P = P(AXIS_DATA, AXIS_MODEL)  # (D, V_pad) unembedding
+    norm_scale: P = P(None)  # (D,) replicated (tiny)
+    # attention projections (flat feature dims)
+    wq: P = P(None, AXIS_DATA, AXIS_MODEL)  # (L, D, Hq*hd)
+    wkv: P = P(None, AXIS_DATA, AXIS_MODEL)  # (L, D, Hkv*hd)
+    wo: P = P(None, AXIS_MODEL, AXIS_DATA)  # (L, Hq*hd, D) row-parallel
+    qkv_bias: P = P(None, AXIS_MODEL)  # (L, F)
+    # mlp
+    w_in: P = P(None, AXIS_DATA, AXIS_MODEL)  # (L, D, d_ff) column-parallel
+    w_out: P = P(None, AXIS_MODEL, AXIS_DATA)  # (L, d_ff, D) row-parallel
+    # moe (E padded to a multiple of the model axis)
+    router: P = P(None, AXIS_DATA, AXIS_MODEL)  # (L, D, E_pad)
+    expert_in: P = P(None, AXIS_MODEL, AXIS_DATA, None)  # (L, E_pad, D, d_ff)
+    expert_out: P = P(None, AXIS_MODEL, None, AXIS_DATA)  # (L, E_pad, d_ff, D)
+    # ssm (mamba2): flat inner dims divide 16 everywhere
+    ssm_in: P = P(None, AXIS_DATA, AXIS_MODEL)  # (L, D, 2*d_inner + ...)
+    ssm_out: P = P(None, AXIS_MODEL, AXIS_DATA)  # (L, d_inner, D)
+    ssm_small: P = P(None, AXIS_MODEL)  # (L, d_inner)-ish vectors
+    conv_kernel: P = P(None, None, AXIS_MODEL)  # (L, K, d_conv_channels)
+
+    # -- activations ----------------------------------------------------------
+    act_btd: P = P((AXIS_POD, AXIS_DATA), None, None)  # (B, S, D) dense zones
+    act_seq: P = P((AXIS_POD, AXIS_DATA), AXIS_MODEL, None)  # (B, S, D) attn zones
+    act_ffn: P = P((AXIS_POD, AXIS_DATA), None, AXIS_MODEL)  # (B, S, d_ff)
+    logits: P = P((AXIS_POD, AXIS_DATA), None, AXIS_MODEL)  # (B, S, V_pad)
+    tokens: P = P((AXIS_POD, AXIS_DATA), None)  # (B, S)
+    # KV cache: batch over data axes, sequence over model (decode SP)
+    kv_cache: P = P(None, (AXIS_POD, AXIS_DATA), AXIS_MODEL, None, None)
+    ssm_state: P = P(None, (AXIS_POD, AXIS_DATA), AXIS_MODEL, None)
+    # (L, B, d_inner, d_state): d_inner over model
+    scalar: P = P()
+
+
+def default_rules(single_axis_fallback: bool = False) -> ShardingRules:
+    return ShardingRules()
+
+
+def strip_pod(rules: ShardingRules, mesh: Mesh) -> ShardingRules:
+    """Drop the pod axis from every spec when the mesh has none (single-pod
+    dry-run) — PartitionSpec axis names must exist in the mesh."""
+    if AXIS_POD in mesh.axis_names:
+        return rules
+
+    def fix(spec: P) -> P:
+        out = []
+        for entry in spec:
+            if isinstance(entry, tuple):
+                kept = tuple(a for a in entry if a != AXIS_POD)
+                out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+            elif entry == AXIS_POD:
+                out.append(None)
+            else:
+                out.append(entry)
+        return P(*out)
+
+    return ShardingRules(
+        **{
+            f.name: fix(getattr(rules, f.name))
+            for f in dataclasses.fields(ShardingRules)
+        }
+    )
+
+
+def drop_batch_axes(rules: ShardingRules) -> ShardingRules:
+    """Strip ('pod','data') batch-group entries from ACTIVATION specs —
+    for cells whose global batch doesn't divide the batch-device count
+    (long_500k: batch 1).  Param specs keep their 'data' ZeRO factor."""
+    batch_group = {AXIS_POD, AXIS_DATA}
+    act_fields = {
+        "act_btd", "act_seq", "act_ffn", "logits", "tokens",
+        "kv_cache", "ssm_state",
+    }
+
+    def fix(spec: P) -> P:
+        out = []
+        for e in spec:
+            if isinstance(e, tuple) and set(e) & batch_group:
+                kept = tuple(a for a in e if a not in batch_group)
+                out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+            elif e in batch_group:
+                out.append(None)
+            else:
+                out.append(e)
+        return P(*out)
+
+    updates = {}
+    for f in dataclasses.fields(ShardingRules):
+        spec = getattr(rules, f.name)
+        updates[f.name] = fix(spec) if f.name in act_fields else spec
+    return ShardingRules(**updates)
+
+
+def tp_only_params(rules: ShardingRules) -> ShardingRules:
+    """Serving-mode param placement: drop the 'data' (ZeRO) factor from
+    PARAM specs so weights are stored TP-sharded + data-replicated.
+    Inference has no optimizer states, so the ZeRO storage factor only buys
+    per-step all-gathers (observed: GiBs of collectives per decoded token);
+    replicating over 'data' eliminates them wherever the model fits."""
+    param_fields = {
+        "embed", "head", "wq", "wkv", "wo", "qkv_bias", "w_in", "w_out",
+        "router", "expert_in", "expert_out", "ssm_in", "ssm_out",
+        "ssm_small", "conv_kernel",
+    }
+
+    def fix(spec: P) -> P:
+        out = []
+        for e in spec:
+            if isinstance(e, tuple):
+                kept = tuple(a for a in e if a != AXIS_DATA)
+                out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+            elif e == AXIS_DATA:
+                out.append(None)
+            else:
+                out.append(e)
+        return P(*out)
+
+    updates = {}
+    for f in dataclasses.fields(ShardingRules):
+        spec = getattr(rules, f.name)
+        updates[f.name] = fix(spec) if f.name in param_fields else spec
+    return ShardingRules(**updates)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def constraint(x, mesh: Mesh, spec: P):
+    """with_sharding_constraint that tolerates rank mismatch by right-padding
+    the spec with None (scanned bodies see specs without the L dim)."""
+    ndim = x.ndim
+    entries = list(spec) + [None] * (ndim - len(spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries[:ndim]))
+    )
+
+
+def pad_to_multiple(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult

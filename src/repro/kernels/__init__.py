@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the PQ hot spots.
+
+bitonic_topk  — the deleteMin tournament's candidate selection
+sorted_merge  — the insert path's run-into-buffer merge
+
+Each kernel ships with a pure-jnp oracle in ref.py and a jit'd public
+wrapper in ops.py that dispatches kernel vs. reference (interpret=True on
+CPU).  Networks are fully static (directions precomputed with numpy), so the
+kernels lower to reshapes + selects only — no gathers, no data-dependent
+control flow: MXU-free, VPU-saturating, VMEM-resident.
+"""
+
+from repro.kernels.ops import topk_smallest, merge_sorted_runs  # noqa: F401

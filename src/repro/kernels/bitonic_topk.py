@@ -1,0 +1,157 @@
+"""Bitonic top-k Pallas kernel — the deleteMin tournament hot spot.
+
+Selects the k smallest (key, value) pairs of each row of an (R, N) batch,
+returning them ascending.  This is the compute core of every exact deleteMin
+schedule (flat / hier / ffwd all run it over gathered candidate frames) and
+of MoE expert-capacity overflow resolution.
+
+TPU adaptation of the classic GPU bitonic top-k:
+  * the row block lives in VMEM (BlockSpec tiles (rows_per_block, N));
+  * a running top-k accumulator merges with successive k-wide column chunks
+    via a bitonic MERGE network (not a full sort): O(N log k) compare ops
+    per row instead of O(N log^2 N);
+  * direction-free formulation: GPU bitonic networks alternate compare
+    directions (a per-element direction mask — a constant Mosaic cannot
+    capture).  Instead every compare-exchange here is ascending and the
+    second operand run is *data-flipped* before concatenation, which turns
+    the full sort into a merge-sort of bitonic merges.  The kernel body is
+    pure reshape/flip/where — VPU lanes stay full, no scalar core
+    round-trips, no dynamic gathers, no captured constants.
+
+Constraints handled by ops.py padding: N % k == 0, k a power of two.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cmp_exchange_asc(keys, vals, stride: int):
+    """One ascending compare-exchange stage over the last axis.
+    Pairs are (i, i+stride) within blocks of 2*stride.
+
+    Comparison is LEXICOGRAPHIC on (key, val): callers pass unique position
+    tags as vals, which makes the whole network deterministic ("stable")
+    despite bitonic networks being unstable — required so the tournament's
+    returned instances match the instances the shards remove."""
+    n = keys.shape[-1]
+    nb = n // (2 * stride)
+    shape = keys.shape[:-1]
+    k2 = keys.reshape(shape + (nb, 2, stride))
+    v2 = vals.reshape(shape + (nb, 2, stride))
+    lo_k, hi_k = k2[..., 0, :], k2[..., 1, :]
+    lo_v, hi_v = v2[..., 0, :], v2[..., 1, :]
+
+    swap = (lo_k > hi_k) | ((lo_k == hi_k) & (lo_v > hi_v))
+    new_lo_k = jnp.where(swap, hi_k, lo_k)
+    new_hi_k = jnp.where(swap, lo_k, hi_k)
+    new_lo_v = jnp.where(swap, hi_v, lo_v)
+    new_hi_v = jnp.where(swap, lo_v, hi_v)
+
+    out_k = jnp.stack([new_lo_k, new_hi_k], axis=-2).reshape(shape + (n,))
+    out_v = jnp.stack([new_lo_v, new_hi_v], axis=-2).reshape(shape + (n,))
+    return out_k, out_v
+
+
+def clean_bitonic(keys, vals):
+    """Sort a bitonic sequence (last axis, power-of-two length) ascending:
+    log2(n) ascending compare-exchange stages."""
+    n = keys.shape[-1]
+    stride = n // 2
+    while stride >= 1:
+        keys, vals = _cmp_exchange_asc(keys, vals, stride)
+        stride //= 2
+    return keys, vals
+
+
+def bitonic_sort(keys, vals):
+    """Ascending sort over the last axis (power-of-two length) as a
+    merge-sort of bitonic merges: at run length r, adjacent ascending runs
+    (a, b) become concat(a, flip(b)) — a bitonic sequence — then a clean
+    merge sorts them into one ascending 2r-run.  Direction-mask free."""
+    n = keys.shape[-1]
+    assert n & (n - 1) == 0, f"bitonic_sort needs power-of-two n, got {n}"
+    shape = keys.shape[:-1]
+    run = 1
+    while run < n:
+        nb = n // (2 * run)
+        k2 = keys.reshape(shape + (nb, 2, run))
+        v2 = vals.reshape(shape + (nb, 2, run))
+        cat_k = jnp.concatenate(
+            [k2[..., 0, :], jnp.flip(k2[..., 1, :], axis=-1)], axis=-1
+        )
+        cat_v = jnp.concatenate(
+            [v2[..., 0, :], jnp.flip(v2[..., 1, :], axis=-1)], axis=-1
+        )
+        cat_k, cat_v = clean_bitonic(cat_k, cat_v)
+        keys = cat_k.reshape(shape + (n,))
+        vals = cat_v.reshape(shape + (n,))
+        run *= 2
+    return keys, vals
+
+
+def bitonic_merge_topk(acc_k, acc_v, run_k, run_v):
+    """Merge two ascending k-runs, keep the k smallest, ascending.
+
+    concat(acc, flip(run)) is bitonic; the elementwise min of the halves is
+    the smallest-k set (still bitonic); log2(k) clean stages sort it."""
+    rr_k = jnp.flip(run_k, axis=-1)
+    rr_v = jnp.flip(run_v, axis=-1)
+    take_acc = (acc_k < rr_k) | ((acc_k == rr_k) & (acc_v <= rr_v))
+    small_k = jnp.where(take_acc, acc_k, rr_k)
+    small_v = jnp.where(take_acc, acc_v, rr_v)
+    return clean_bitonic(small_k, small_v)
+
+
+def _topk_kernel(keys_ref, vals_ref, out_k_ref, out_v_ref, *, k: int):
+    """Row-block kernel: (rows, N) VMEM tile -> (rows, k) smallest."""
+    keys = keys_ref[...]
+    vals = vals_ref[...]
+    _, n = keys.shape
+    n_chunks = n // k
+
+    acc_k, acc_v = bitonic_sort(keys[:, :k], vals[:, :k])
+    for c in range(1, n_chunks):
+        chunk_k, chunk_v = bitonic_sort(
+            keys[:, c * k : (c + 1) * k], vals[:, c * k : (c + 1) * k]
+        )
+        acc_k, acc_v = bitonic_merge_topk(acc_k, acc_v, chunk_k, chunk_v)
+    out_k_ref[...] = acc_k
+    out_v_ref[...] = acc_v
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rows_per_block", "interpret"))
+def topk_smallest_pallas(
+    keys: jnp.ndarray,  # (R, N)
+    vals: jnp.ndarray,  # (R, N)
+    k: int,
+    rows_per_block: int = 8,
+    interpret: bool = True,
+):
+    """pallas_call wrapper.  N % k == 0, k power of two, R % rows_per_block == 0."""
+    R, N = keys.shape
+    assert N % k == 0 and k & (k - 1) == 0, (N, k)
+    assert R % rows_per_block == 0, (R, rows_per_block)
+    grid = (R // rows_per_block,)
+
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_block, N), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_block, N), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows_per_block, k), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_block, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, k), keys.dtype),
+            jax.ShapeDtypeStruct((R, k), vals.dtype),
+        ],
+        interpret=interpret,
+    )(keys, vals)

@@ -1,0 +1,80 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Handle padding (arbitrary N/R/k up to power-of-two network sizes), dtype
+plumbing, and backend dispatch: `interpret=True` on CPU (kernel body runs in
+Python — the validation mode for this container), compiled Mosaic on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pqueue.state import INF_KEY
+from repro.kernels import ref as R
+from repro.kernels.bitonic_topk import topk_smallest_pallas
+from repro.kernels.sorted_merge import merge_sorted_pallas
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
+def topk_smallest(
+    keys: jnp.ndarray,  # (R, N) any int dtype
+    vals: jnp.ndarray,
+    k: int,
+    use_kernel: bool = True,
+):
+    """k smallest per row, ascending.  Pads N up to a multiple of the
+    power-of-two k' >= k with INF sentinels, then slices back."""
+    if not use_kernel:
+        return R.topk_smallest_ref(keys, vals, k)
+
+    Rr, N = keys.shape
+    kp = _next_pow2(k)
+    Np = max(_next_pow2(N), kp)
+    if Np % kp:
+        Np = (Np // kp + 1) * kp
+    pad_n = Np - N
+    if pad_n:
+        keys = jnp.pad(keys, ((0, 0), (0, pad_n)), constant_values=INF_KEY)
+        vals = jnp.pad(vals, ((0, 0), (0, pad_n)))
+    rows_per_block = 8
+    while Rr % rows_per_block:
+        rows_per_block //= 2
+    out_k, out_v = topk_smallest_pallas(
+        keys, vals, kp, rows_per_block=max(rows_per_block, 1),
+        interpret=not _on_tpu(),
+    )
+    return out_k[:, :k], out_v[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def merge_sorted_runs(
+    buf_k: jnp.ndarray,  # (S, C) ascending INF-padded — C power of two
+    buf_v: jnp.ndarray,
+    run_k: jnp.ndarray,  # (S, R) ascending INF-padded, R <= C
+    run_v: jnp.ndarray,
+    use_kernel: bool = True,
+):
+    """Smallest C of (buffer ∪ run), ascending per row."""
+    if not use_kernel:
+        return R.merge_sorted_runs_ref(buf_k, buf_v, run_k, run_v)
+
+    S, C = buf_k.shape
+    Rw = run_k.shape[1]
+    assert Rw <= C, (Rw, C)
+    if Rw < C:
+        run_k = jnp.pad(run_k, ((0, 0), (0, C - Rw)), constant_values=INF_KEY)
+        run_v = jnp.pad(run_v, ((0, 0), (0, C - Rw)))
+    return merge_sorted_pallas(
+        buf_k, buf_v, run_k, run_v, interpret=not _on_tpu()
+    )

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets).
+
+Contract shared with the kernels: ordering is LEXICOGRAPHIC on (key, val).
+Callers that need payloads pass a unique position tag as val and gather the
+payload by tag afterwards — this is what makes the unstable bitonic networks
+deterministic and lets tests demand exact equality.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _lex_order(keys: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    return jnp.lexsort((vals, keys), axis=-1)
+
+
+def topk_smallest_ref(keys: jnp.ndarray, vals: jnp.ndarray, k: int):
+    """(R, N) -> k lexicographically-smallest (key, val) per row, ascending."""
+    order = _lex_order(keys, vals)[..., :k]
+    return (
+        jnp.take_along_axis(keys, order, axis=-1),
+        jnp.take_along_axis(vals, order, axis=-1),
+    )
+
+
+def merge_sorted_runs_ref(buf_k, buf_v, run_k, run_v):
+    """(S, C) buffer + (S, R) run (both ascending, INF-padded) -> smallest C
+    of the union, ascending (lexicographic on (key, val))."""
+    C = buf_k.shape[-1]
+    cat_k = jnp.concatenate([buf_k, run_k], axis=-1)
+    cat_v = jnp.concatenate([buf_v, run_v], axis=-1)
+    order = _lex_order(cat_k, cat_v)[..., :C]
+    return (
+        jnp.take_along_axis(cat_k, order, axis=-1),
+        jnp.take_along_axis(cat_v, order, axis=-1),
+    )

@@ -1,0 +1,78 @@
+"""Sorted-merge Pallas kernel — the insert path's hot spot.
+
+Merges an ascending incoming run (R wide, INF-padded) into each shard's
+ascending capacity-C buffer, keeping the C smallest of the union (overflow
+— necessarily the largest elements — is dropped; the wrapper reports the
+count, mirroring `local.merge_sorted`).
+
+TPU adaptation: a CPU/GPU merge walks two pointers (data-dependent control
+flow — hostile to the VPU) or rank-scatters (dynamic scatter — hostile to
+Mosaic).  Instead we use a single bitonic MERGE network:
+
+    concat(buffer_asc, reverse(pad(run)_asc))  is bitonic (2C wide)
+    -> log2(2C) static clean stages sort it ascending
+    -> the first C lanes are exactly the merge result.
+
+All stages are static reshapes + selects on a VMEM-resident (rows, 2C)
+tile.  Compare ops: 2C * log2(2C) per shard row vs. C*R for the
+broadcast-compare rank method — for C=4096, R=256 that is 106K vs. 1M.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitonic_topk import clean_bitonic
+
+
+def _merge_kernel(buf_k_ref, buf_v_ref, run_k_ref, run_v_ref, out_k_ref, out_v_ref):
+    """Row-block kernel: buffer (rows, C) + run (rows, C, INF-padded from R)
+    -> merged (rows, C) ascending (smallest C of the union)."""
+    buf_k = buf_k_ref[...]
+    buf_v = buf_v_ref[...]
+    run_k = run_k_ref[...]
+    run_v = run_v_ref[...]
+
+    cat_k = jnp.concatenate([buf_k, jnp.flip(run_k, axis=-1)], axis=-1)
+    cat_v = jnp.concatenate([buf_v, jnp.flip(run_v, axis=-1)], axis=-1)
+    merged_k, merged_v = clean_bitonic(cat_k, cat_v)
+
+    C = buf_k.shape[-1]
+    out_k_ref[...] = merged_k[:, :C]
+    out_v_ref[...] = merged_v[:, :C]
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
+def merge_sorted_pallas(
+    buf_k: jnp.ndarray,  # (S, C) ascending, INF-padded
+    buf_v: jnp.ndarray,
+    run_k: jnp.ndarray,  # (S, C) ascending, INF-padded (R <= C padded up)
+    run_v: jnp.ndarray,
+    rows_per_block: int = 4,
+    interpret: bool = True,
+):
+    """pallas_call wrapper.  C must be a power of two; the run array must
+    already be padded to width C (ops.py handles padding from R)."""
+    S, C = buf_k.shape
+    assert C & (C - 1) == 0, f"capacity must be a power of two, got {C}"
+    assert run_k.shape == (S, C), (run_k.shape, (S, C))
+    while S % rows_per_block:
+        rows_per_block //= 2
+    grid = (S // rows_per_block,)
+
+    spec = pl.BlockSpec((rows_per_block, C), lambda i: (i, 0))
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, C), buf_k.dtype),
+            jax.ShapeDtypeStruct((S, C), buf_v.dtype),
+        ],
+        interpret=interpret,
+    )(buf_k, buf_v, run_k, run_v)

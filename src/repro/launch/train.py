@@ -1,0 +1,70 @@
+"""Training launcher.
+
+Single-host CPU (default) runs reduced configs end-to-end; with
+--dry-devices 512 it builds the production mesh for AOT compile checks
+(use dryrun.py for the full cell sweep).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --reduced \
+      --steps 50 --ckpt-dir /tmp/ckpt --resume auto
+"""
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--state-dtype", default="fp32",
+                    choices=("fp32", "bf16", "int8"))
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="auto", choices=("auto", "never"))
+    ap.add_argument("--dry-devices", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.dry_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.dry_devices}"
+        )
+
+    from repro.configs.registry import get_config, reduced_config
+    from repro.data.synthetic import SyntheticLMDataset
+    from repro.train.loop import LoopConfig, run
+    from repro.train.optimizer import AdamWConfig
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if args.resume == "never" and args.ckpt_dir:
+        import shutil
+
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    data = SyntheticLMDataset(vocab=cfg.vocab, seq_len=args.seq, fixed_map=True)
+    res = run(
+        cfg,
+        LoopConfig(
+            steps=args.steps,
+            batch_size=args.batch,
+            ckpt_every=args.ckpt_every,
+            ckpt_dir=args.ckpt_dir,
+        ),
+        opt_cfg=AdamWConfig(lr=args.lr, state_dtype=args.state_dtype),
+        data=data,
+        install_signals=True,
+    )
+    print(
+        f"[train] {cfg.name}: steps={res['steps_done']} "
+        f"loss {res['losses'][0]:.3f} -> {res['losses'][-1]:.3f} "
+        f"resumed_from={res['resumed_from']} events={len(res['events'])}"
+    )
+
+
+if __name__ == "__main__":
+    main()

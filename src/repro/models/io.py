@@ -1,0 +1,119 @@
+"""Cache init + input_specs — ShapeDtypeStruct stand-ins for the dry-run.
+
+`input_specs(cfg, shape)` returns the exact input pytree each step function
+lowers against (weak-type-correct, shardable, no allocation).  `init_caches`
+builds real zero caches for smoke tests and serving; `cache_specs` builds
+the ShapeDtypeStruct mirror for decode dry-runs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.params import padded_vocab
+
+Tree = Dict[str, Any]
+
+
+def _cache_shapes(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.bfloat16,
+                  kv_int8: bool = False):
+    """Family-specific cache pytree of (shape, dtype) tuples."""
+    hd = cfg.resolved_head_dim
+    Hkv = cfg.n_kv_heads
+    fam = cfg.family
+    out: Tree = {}
+    if fam in ("dense", "moe"):
+        kv_dtype = jnp.int8 if kv_int8 else dtype
+        out["k"] = ((cfg.n_layers, B, S_max, Hkv, hd), kv_dtype)
+        out["v"] = ((cfg.n_layers, B, S_max, Hkv, hd), kv_dtype)
+        if kv_int8:
+            out["k_scale"] = ((cfg.n_layers, B, S_max, Hkv), jnp.bfloat16)
+            out["v_scale"] = ((cfg.n_layers, B, S_max, Hkv), jnp.bfloat16)
+    elif fam == "ssm":
+        s = cfg.ssm
+        H = s.d_inner // s.head_dim
+        conv_ch = s.d_inner + 2 * s.n_groups * s.d_state
+        out["ssm_h"] = ((cfg.n_layers, B, H, s.d_state, s.head_dim), jnp.float32)
+        out["ssm_conv"] = ((cfg.n_layers, B, s.d_conv - 1, conv_ch), jnp.float32)
+    elif fam == "hybrid":
+        s = cfg.ssm
+        H = s.d_inner // s.head_dim
+        conv_ch = s.d_inner + 2 * s.n_groups * s.d_state
+        nsb = cfg.n_layers // cfg.hybrid_period
+        nm = cfg.hybrid_period - 1
+        out["k"] = ((nsb, B, S_max, Hkv, hd), dtype)
+        out["v"] = ((nsb, B, S_max, Hkv, hd), dtype)
+        out["ssm_h"] = ((nsb, nm, B, H, s.d_state, s.head_dim), jnp.float32)
+        out["ssm_conv"] = ((nsb, nm, B, s.d_conv - 1, conv_ch), jnp.float32)
+    elif fam == "encdec":
+        Ld = cfg.n_layers
+        S_enc = S_max  # encoder context sized like the cell's seq_len
+        out["k"] = ((Ld, B, S_max, Hkv, hd), dtype)
+        out["v"] = ((Ld, B, S_max, Hkv, hd), dtype)
+        out["xk"] = ((Ld, B, S_enc, Hkv, hd), dtype)
+        out["xv"] = ((Ld, B, S_enc, Hkv, hd), dtype)
+    elif fam == "vlm":
+        k = cfg.cross_attn_every
+        ng = cfg.n_layers // k
+        out["k"] = ((ng, k, B, S_max, Hkv, hd), dtype)
+        out["v"] = ((ng, k, B, S_max, Hkv, hd), dtype)
+        out["xk"] = ((ng, B, cfg.n_image_tokens, Hkv, hd), dtype)
+        out["xv"] = ((ng, B, cfg.n_image_tokens, Hkv, hd), dtype)
+    else:
+        raise ValueError(fam)
+    return out
+
+
+def init_caches(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.bfloat16,
+                kv_int8: bool = False) -> Tree:
+    return jax.tree.map(
+        lambda sd: jnp.zeros(sd[0], sd[1]),
+        _cache_shapes(cfg, B, S_max, dtype, kv_int8),
+        is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple),
+    )
+
+
+def cache_specs(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.bfloat16,
+                kv_int8: bool = False) -> Tree:
+    return jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct(sd[0], sd[1]),
+        _cache_shapes(cfg, B, S_max, dtype, kv_int8),
+        is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple),
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, kv_int8: bool = False) -> Tree:
+    """The step function's input pytree as ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    D = cfg.d_model
+    tok = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    emb = lambda *s: jax.ShapeDtypeStruct(s, jnp.bfloat16)
+
+    if shape.kind == "train":
+        batch: Tree = {"tokens": tok(B, S), "labels": tok(B, S)}
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = emb(B, S, D)  # conv frontend stubbed
+        if cfg.family == "vlm":
+            batch["image_embeds"] = emb(B, cfg.n_image_tokens, D)
+        return batch
+
+    if shape.kind == "prefill":
+        batch = {"tokens": tok(B, S)}
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = emb(B, S, D)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = emb(B, cfg.n_image_tokens, D)
+        return batch
+
+    if shape.kind == "decode":
+        use_int8 = kv_int8 and cfg.family in ("dense", "moe")
+        return {
+            "tokens": tok(B, 1),
+            "lengths": tok(B),
+            "caches": cache_specs(cfg, B, S, kv_int8=use_int8),
+        }
+    raise ValueError(shape.kind)

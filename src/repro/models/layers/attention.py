@@ -1,0 +1,230 @@
+"""GQA/MQA attention with RoPE — train, prefill, and decode paths.
+
+Sharding strategy (DESIGN.md §3): head counts in the assigned pool rarely
+divide the 16-wide model axis (qwen 40H, gemma 8H, granite-moe 24H), so
+heads are NEVER a sharded dim.  Instead:
+  * projections shard on flat feature dims (always multiples of 16),
+  * the query SEQUENCE shards over 'model' (sequence parallelism) while K/V
+    are materialized full-length per device (one all-gather per layer,
+    inserted by SPMD from the sharding constraints),
+  * scores are bounded by chunking over the KV length (flash-style
+    lax.scan with running max/sum), so 32k/500k contexts never materialize
+    an (S, S) matrix.
+
+All paths take an explicit `q_positions` so the same code serves training
+(iota), chunked prefill (offset iota), and decode (cache length).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 500000.0
+    causal: bool = True
+    qk_scale: Optional[float] = None
+
+    @property
+    def q_out(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_out(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+def project_qkv(
+    x: jnp.ndarray,  # (B, S, D)
+    wq: jnp.ndarray,  # (D, Hq*hd)
+    wk: jnp.ndarray,  # (D, Hkv*hd)
+    wv: jnp.ndarray,  # (D, Hkv*hd)
+    dims: AttnDims,
+    q_positions: jnp.ndarray,  # (B, S)
+    kv_positions: jnp.ndarray,  # (B, S)
+    bias: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None,
+    rope: bool = True,
+):
+    B, S, _ = x.shape
+    q = x @ wq
+    k = x @ wk
+    v = x @ wv
+    if bias is not None:
+        bq, bk, bv = bias
+        q, k, v = q + bq, k + bk, v + bv
+    q = q.reshape(B, S, dims.n_heads, dims.head_dim)
+    k = k.reshape(B, S, dims.n_kv_heads, dims.head_dim)
+    v = v.reshape(B, S, dims.n_kv_heads, dims.head_dim)
+    if rope:
+        q = apply_rope(q, q_positions, dims.rope_theta)
+        k = apply_rope(k, kv_positions, dims.rope_theta)
+    return q, k, v
+
+
+def _scale(dims: AttnDims) -> float:
+    return dims.qk_scale if dims.qk_scale is not None else dims.head_dim ** -0.5
+
+
+def attend_chunked(
+    q: jnp.ndarray,  # (B, Sq, Hq, hd)
+    k: jnp.ndarray,  # (B, Skv, Hkv, hd) — bf16/f32, or int8 with k_scale
+    v: jnp.ndarray,  # (B, Skv, Hkv, hd)
+    dims: AttnDims,
+    q_positions: jnp.ndarray,  # (B, Sq) absolute positions (causal mask)
+    kv_positions: jnp.ndarray,  # (B, Skv)
+    kv_valid: Optional[jnp.ndarray] = None,  # (B, Skv) bool
+    kv_chunk: int = 2048,
+    k_scale: Optional[jnp.ndarray] = None,  # (B, Skv, Hkv) int8-KV scales
+    v_scale: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Flash-style attention: scan over KV chunks with running (max, sum,
+    acc) — the live score block is (B, Hq, Sq, kv_chunk).  Exact (not an
+    approximation).  Returns (B, Sq, Hq, hd).
+
+    int8 KV path: when k/v are int8 with per-(token, head) scales, each
+    chunk is dequantized INSIDE the scan body — the peak working set stays
+    int8-cache + one bf16 chunk (the decode memory-roofline win)."""
+    B, Sq, Hq, hd = q.shape
+    Skv = k.shape[1]
+    G = dims.q_per_kv
+    scale = _scale(dims)
+
+    def _dq(x, s):
+        if s is None:
+            return x
+        return x.astype(jnp.float32) * s.astype(jnp.float32)[..., None]
+
+    if Skv <= kv_chunk:
+        kd = _dq(k, k_scale).astype(q.dtype) if k_scale is not None else k
+        vd = _dq(v, v_scale).astype(q.dtype) if v_scale is not None else v
+        return _attend_dense(q, kd, vd, dims, q_positions, kv_positions, kv_valid)
+
+    assert Skv % kv_chunk == 0, (Skv, kv_chunk)
+    n_chunks = Skv // kv_chunk
+
+    kc = k.reshape(B, n_chunks, kv_chunk, dims.n_kv_heads, hd)
+    vc = v.reshape(B, n_chunks, kv_chunk, dims.n_kv_heads, hd)
+    ksc = (
+        k_scale.reshape(B, n_chunks, kv_chunk, dims.n_kv_heads)
+        if k_scale is not None else None
+    )
+    vsc = (
+        v_scale.reshape(B, n_chunks, kv_chunk, dims.n_kv_heads)
+        if v_scale is not None else None
+    )
+    pc = kv_positions.reshape(B, n_chunks, kv_chunk)
+    if kv_valid is None:
+        kv_valid = jnp.ones((B, Skv), bool)
+    mc = kv_valid.reshape(B, n_chunks, kv_chunk)
+
+    qh = (q * scale).astype(jnp.float32).reshape(B, Sq, dims.n_kv_heads, G, hd)
+
+    def body(carry, chunk):
+        m_run, l_run, acc = carry
+        if ksc is not None:
+            kcb, vcb, pcb, mcb, kscb, vscb = chunk
+            kcb = _dq(kcb, kscb)
+            vcb = _dq(vcb, vscb)
+        else:
+            kcb, vcb, pcb, mcb = chunk  # (B, C, Hkv, hd), ..., (B, C)
+        # scores: (B, Sq, Hkv, G, C)
+        s = jnp.einsum(
+            "bqkgd,bckd->bqkgc", qh, kcb.astype(jnp.float32)
+        )
+        mask = mcb[:, None, None, None, :]
+        if dims.causal:
+            mask = mask & (
+                pcb[:, None, None, None, :] <= q_positions[:, :, None, None, None]
+            )
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgc,bckd->bqkgd", p, vcb.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, dims.n_kv_heads, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, dims.n_kv_heads, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, dims.n_kv_heads, G, hd), jnp.float32)
+    chunks = (
+        jnp.moveaxis(kc, 1, 0),
+        jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(pc, 1, 0),
+        jnp.moveaxis(mc, 1, 0),
+    )
+    if ksc is not None:
+        chunks = chunks + (jnp.moveaxis(ksc, 1, 0), jnp.moveaxis(vsc, 1, 0))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), chunks)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def _attend_dense(
+    q, k, v, dims: AttnDims, q_positions, kv_positions, kv_valid=None
+) -> jnp.ndarray:
+    """Direct-scores path for short KV (train seq 4k, single chunks)."""
+    B, Sq, Hq, hd = q.shape
+    G = dims.q_per_kv
+    scale = _scale(dims)
+    qh = (q * scale).astype(jnp.float32).reshape(B, Sq, dims.n_kv_heads, G, hd)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qh, k.astype(jnp.float32))
+    mask = jnp.ones((B, 1, 1, 1, k.shape[1]), bool)
+    if kv_valid is not None:
+        mask = mask & kv_valid[:, None, None, None, :]
+    if dims.causal:
+        mask = mask & (
+            kv_positions[:, None, None, None, :]
+            <= q_positions[:, :, None, None, None]
+        )
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+class KVCacheSlice(NamedTuple):
+    """One layer's decode cache."""
+
+    k: jnp.ndarray  # (B, S_max, Hkv, hd)
+    v: jnp.ndarray  # (B, S_max, Hkv, hd)
+
+
+def decode_attend(
+    q: jnp.ndarray,  # (B, 1, Hq, hd) — already roped at position `length`
+    cache: KVCacheSlice,
+    new_k: jnp.ndarray,  # (B, 1, Hkv, hd) roped
+    new_v: jnp.ndarray,
+    dims: AttnDims,
+    length: jnp.ndarray,  # () int32 — tokens already in cache
+    kv_chunk: int = 4096,
+) -> Tuple[jnp.ndarray, KVCacheSlice]:
+    """One-token decode: append to cache, attend over valid prefix."""
+    B, _, Hkv, hd = new_k.shape
+    S_max = cache.k.shape[1]
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, new_k, length, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, new_v, length, axis=1)
+    pos = jnp.arange(S_max, dtype=jnp.int32)[None, :].repeat(B, 0)
+    valid = pos < (length + 1)
+    qpos = jnp.full((B, 1), length, jnp.int32)
+    out = attend_chunked(
+        q, k, v, dims, qpos, pos, kv_valid=valid, kv_chunk=kv_chunk
+    )
+    return out, KVCacheSlice(k, v)

@@ -1,0 +1,35 @@
+"""Gated MLPs (SwiGLU / GeGLU) and the plain GELU MLP (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gated_mlp(
+    x: jnp.ndarray,  # (B, S, D)
+    w_gate: jnp.ndarray,  # (D, F)
+    w_up: jnp.ndarray,  # (D, F)
+    w_down: jnp.ndarray,  # (F, D)
+    act: str = "silu",
+) -> jnp.ndarray:
+    g = x @ w_gate
+    u = x @ w_up
+    if act == "silu":
+        h = jax.nn.silu(g) * u
+    elif act == "gelu":  # GeGLU (gemma)
+        h = jax.nn.gelu(g, approximate=True) * u
+    else:
+        raise ValueError(act)
+    return h @ w_down
+
+
+def dense_mlp(
+    x: jnp.ndarray,
+    w_in: jnp.ndarray,  # (D, F)
+    b_in: jnp.ndarray,  # (F,)
+    w_out: jnp.ndarray,  # (F, D)
+    b_out: jnp.ndarray,  # (D,)
+) -> jnp.ndarray:
+    h = jax.nn.gelu(x @ w_in + b_in, approximate=True)
+    return h @ w_out + b_out

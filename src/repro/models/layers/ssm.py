@@ -1,0 +1,229 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan formulation.
+
+Follows the Mamba-2 paper's chunked algorithm (arXiv:2405.21060 §6):
+within-chunk terms are attention-like batched einsums (MXU-friendly),
+across-chunk state flows through a short lax.scan — O(S·N·P) work, no
+(S, S) materialization, which is what makes `long_500k` serveable.
+
+Decode keeps a constant-size recurrent state (B, H, N, P) + a (K-1)-deep
+conv tail: one token costs O(H·N·P) — attention-free decode.
+
+Jamba note (DESIGN.md): Jamba-1.5's Mamba layers are Mamba-1; we implement
+both archs with this SSD layer (SSD subsumes S6 up to the scalar-vs-diag A
+parameterization) and record the substitution as a hardware-adaptation
+choice: SSD's chunk matmuls map onto the MXU, S6's per-element scan does
+not.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_inner: int  # = expand * d_model
+    head_dim: int  # P
+    d_state: int  # N
+    n_groups: int  # G (B/C shared across heads within a group)
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def in_proj_out(self) -> int:
+        # [z, x, B, C, dt]
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray  # (B, H, N, P) recurrent state
+    conv: jnp.ndarray  # (B, K-1, conv_channels) conv tail
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv via K shifted multiply-adds (partitioning-
+    friendly: no conv op to shard).  x: (B, S, C), w: (K, C), b: (C,)."""
+    K = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + shifted * w[K - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _split_proj(zxbcdt: jnp.ndarray, dims: SSMDims):
+    d, g, n, hh = dims.d_inner, dims.n_groups, dims.d_state, dims.n_heads
+    z = zxbcdt[..., :d]
+    xbc = zxbcdt[..., d : d + dims.conv_channels]
+    dt = zxbcdt[..., d + dims.conv_channels :]  # (..., H)
+    return z, xbc, dt
+
+
+def ssd_forward(
+    x_in: jnp.ndarray,  # (B, S, D)
+    params: dict,
+    dims: SSMDims,
+    h0: jnp.ndarray | None = None,  # (B, H, N, P) initial state
+    cstr=None,  # Callable[(array, head_axis:int), array] — shard H@'model'
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence SSD.  Returns (y (B,S,D), final_state (B,H,N,P),
+    conv_tail (B, K-1, conv_channels)) — the tail feeds decode.
+
+    `cstr(arr, axis)` pins the HEAD dim of every chunk tensor to the model
+    axis; without it XLA replicates the (B,NC,H,Q,Q) score blocks per
+    device (observed: 170 GiB/device, 1.5 TB of resharding gathers for
+    jamba train)."""
+    B, S, D = x_in.shape
+    H, P, N, G = dims.n_heads, dims.head_dim, dims.d_state, dims.n_groups
+    Q = dims.chunk
+    assert S % Q == 0, (S, Q)
+    NC = S // Q
+    if cstr is None:
+        cstr = lambda a, axis: a
+    # Big chunk einsums run in the input dtype (bf16 on TPU); decay /
+    # cumulative terms stay fp32 for stability.  fp32 chunk tensors were
+    # the memory bottleneck of mamba2 train (27 GiB/device).
+    ed = x_in.dtype
+
+    zxbcdt = x_in @ params["in_proj"]  # (B, S, in_proj_out)
+    zxbcdt = cstr(zxbcdt, -1)  # flat feature dim over 'model'
+    z, xbc, dt = _split_proj(zxbcdt, dims)
+    conv_tail = xbc[:, S - (dims.d_conv - 1) :, :].astype(jnp.float32)
+    xbc = cstr(_causal_conv(xbc, params["conv_w"], params["conv_b"]), -1)
+    xs = xbc[..., : dims.d_inner].reshape(B, S, H, P)
+    Bm = xbc[..., dims.d_inner : dims.d_inner + G * N].reshape(B, S, G, N)
+    Cm = xbc[..., dims.d_inner + G * N :].reshape(B, S, G, N)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+
+    # -- chunk views --------------------------------------------------------
+    xs_c = cstr(xs.reshape(B, NC, Q, H, P).astype(ed), 3)
+    B_c = Bm.reshape(B, NC, Q, G, N).astype(ed)  # G small: replicated
+    C_c = Cm.reshape(B, NC, Q, G, N).astype(ed)
+    dt_c = cstr(dt.reshape(B, NC, Q, H), 3)
+    dA = dt_c * A  # (B, NC, Q, H)
+    dA_cum = cstr(jnp.cumsum(dA, axis=2), 3)  # within-chunk
+
+    hpg = H // G  # heads per B/C group
+
+    # Intra-chunk (attention-like): scores[i,j] = C_i·B_j * exp(Acum_i-Acum_j)*dt_j , j<=i
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", C_c, B_c)  # (B,NC,G,Q,Q)
+    CB = cstr(jnp.repeat(CB, hpg, axis=2), 2)  # (B,NC,H,Q,Q)
+    seg = dA_cum.transpose(0, 1, 3, 2)  # (B,NC,H,Q)
+    L = jnp.exp(
+        jnp.clip(seg[..., :, None] - seg[..., None, :], -60.0, 0.0)
+    )  # (B,NC,H,Q,Q)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    scores = (
+        jnp.where(causal, CB.astype(jnp.float32) * L, 0.0)
+        * dt_c.transpose(0, 1, 3, 2)[..., None, :]
+    )
+    scores = cstr(scores.astype(ed), 2)
+    y_intra = cstr(jnp.einsum("bchqk,bckhp->bcqhp", scores, xs_c), 3)
+
+    # Chunk states: S_c = sum_j exp(Acum_Q - Acum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(
+        jnp.clip(dA_cum[:, :, -1:, :] - dA_cum, -60.0, 0.0)
+    )  # (B,NC,Q,H)
+    wgt = (decay_to_end * dt_c).astype(ed)  # (B,NC,Q,H)
+    B_h = jnp.repeat(B_c, hpg, axis=3).reshape(B, NC, Q, H, N)
+    chunk_state = cstr(
+        jnp.einsum("bcqhn,bcqhp,bcqh->bchnp", B_h, xs_c, wgt).astype(jnp.float32),
+        2,
+    )
+
+    # Inter-chunk recurrence over NC chunks.
+    chunk_decay = cstr(
+        jnp.exp(jnp.clip(dA_cum[:, :, -1, :], -60.0, 0.0)), 2
+    )  # (B,NC,H)
+
+    def scan_body(h_prev, inp):
+        s_c, d_c = inp  # (B,H,N,P), (B,H)
+        h_new = cstr(h_prev * d_c[..., None, None] + s_c, 1)
+        return h_new, h_prev  # emit the state ENTERING this chunk
+
+    h_init = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((B, H, N, P), jnp.float32)
+    )
+    h_last, h_in = jax.lax.scan(
+        scan_body,
+        h_init,
+        (
+            jnp.moveaxis(chunk_state, 1, 0),
+            jnp.moveaxis(chunk_decay, 1, 0),
+        ),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,NC,H,N,P) state entering each chunk
+
+    # Inter-chunk output: y_i += C_i · exp(Acum_i) h_in
+    C_h = jnp.repeat(C_c, hpg, axis=3).reshape(B, NC, Q, H, N)
+    in_decay = jnp.exp(jnp.clip(dA_cum, -60.0, 0.0)).astype(ed)  # (B,NC,Q,H)
+    y_inter = cstr(
+        jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", C_h, h_in.astype(ed), in_decay), 3
+    )
+
+    y = (y_intra.astype(jnp.float32) + y_inter.astype(jnp.float32)).reshape(
+        B, S, H, P
+    )
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(
+        jnp.float32
+    )
+    y = cstr(y.reshape(B, S, dims.d_inner), -1)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return (y.astype(x_in.dtype)) @ params["out_proj"], h_last, conv_tail
+
+
+def ssd_decode_step(
+    x_in: jnp.ndarray,  # (B, 1, D)
+    state: SSMState,
+    params: dict,
+    dims: SSMDims,
+) -> Tuple[jnp.ndarray, SSMState]:
+    """One-token recurrent update."""
+    B = x_in.shape[0]
+    H, P, N, G = dims.n_heads, dims.head_dim, dims.d_state, dims.n_groups
+
+    zxbcdt = x_in[:, 0, :] @ params["in_proj"]  # (B, F)
+    z, xbc, dt = _split_proj(zxbcdt, dims)
+
+    # Conv tail update: window = [conv_state, xbc]
+    window = jnp.concatenate([state.conv, xbc[:, None, :]], axis=1)  # (B,K,C)
+    w = params["conv_w"]  # (K, C)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"])
+    new_conv = window[:, 1:, :]
+
+    xs = conv_out[..., : dims.d_inner].reshape(B, H, P)
+    Bm = conv_out[..., dims.d_inner : dims.d_inner + G * N].reshape(B, G, N)
+    Cm = conv_out[..., dims.d_inner + G * N :].reshape(B, G, N)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt_v = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    decay = jnp.exp(dt_v * A)  # (B,H)
+
+    hpg = H // G
+    B_h = jnp.repeat(Bm, hpg, axis=1)  # (B,H,N)
+    C_h = jnp.repeat(Cm, hpg, axis=1)
+    h = state.h * decay[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhnp", B_h, xs.astype(jnp.float32), dt_v
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", C_h, h)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xs
+    y = y.reshape(B, dims.d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(x_in.dtype)) @ params["out_proj"]
+    return out[:, None, :], SSMState(h=h, conv=new_conv)

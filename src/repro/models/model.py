@@ -1,0 +1,808 @@
+"""Unified model: train / prefill / decode paths for all six families.
+
+Depth always runs under lax.scan over layer-stacked params (hybrid scans
+period-8 superblocks; vlm scans cross-attn groups) — compile time at 512
+devices stays proportional to ONE block, not the full depth.
+
+Sharding is applied as with_sharding_constraint at block boundaries using
+the rules in distributed/sharding.py; when mesh is None (CPU smoke tests)
+constraints are no-ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules, constraint, strip_pod
+from repro.models.layers.attention import (
+    AttnDims,
+    attend_chunked,
+    project_qkv,
+)
+from repro.models.layers.mlp import dense_mlp, gated_mlp
+from repro.models.layers.moe import MoEDims, moe_block
+from repro.models.layers.norm import layer_norm, rms_norm
+from repro.models.layers.rope import apply_rope
+from repro.models.layers.ssm import (
+    SSMDims,
+    SSMState,
+    ssd_decode_step,
+    ssd_forward,
+)
+from repro.models.params import init_params, padded_experts, padded_vocab
+
+Tree = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    mesh: Optional[Mesh] = None
+    rules: Optional[ShardingRules] = None
+    compute_dtype: Any = jnp.bfloat16
+    kv_chunk: int = 2048
+    remat: bool = True
+    model_axis_size: int = 16
+    # perf knobs (EXPERIMENTS.md §Perf iterations)
+    cast_before_scan: bool = False  # bf16-cast stacked params OUTSIDE the
+    # layer scan: ZeRO gathers then move bf16 (half the collective bytes)
+    kv_int8: bool = False  # int8 KV cache with per-(token, head) scales —
+    # halves the decode memory sweep (dense/moe families; It-8)
+
+    def __post_init__(self):
+        if self.mesh is not None and self.rules is None:
+            self.rules = strip_pod(ShardingRules(), self.mesh)
+        self.attn_dims = AttnDims(
+            n_heads=self.cfg.n_heads,
+            n_kv_heads=self.cfg.n_kv_heads,
+            head_dim=self.cfg.resolved_head_dim,
+            rope_theta=self.cfg.rope_theta,
+        )
+        if self.cfg.ssm:
+            s = self.cfg.ssm
+            self.ssm_dims = SSMDims(
+                d_model=self.cfg.d_model,
+                d_inner=s.d_inner,
+                head_dim=s.head_dim,
+                d_state=s.d_state,
+                n_groups=s.n_groups,
+                d_conv=s.d_conv,
+                chunk=s.chunk,
+            )
+        if self.cfg.moe:
+            self.moe_dims = MoEDims(
+                n_experts=self.cfg.moe.n_experts,
+                n_experts_pad=padded_experts(self.cfg, self.model_axis_size),
+                top_k=self.cfg.moe.top_k,
+                capacity_factor=self.cfg.moe.capacity_factor,
+            )
+
+    # -- helpers -------------------------------------------------------------
+
+    def _c(self, x, spec):
+        if self.mesh is None:
+            return x
+        return constraint(x, self.mesh, spec)
+
+    def _norm(self, x, scale, bias=None):
+        if self.cfg.norm == "layer":
+            return layer_norm(x, scale, bias)
+        return rms_norm(x, scale)
+
+    def _cast(self, tree):
+        return jax.tree.map(
+            lambda x: x.astype(self.compute_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating)
+            else x,
+            tree,
+        )
+
+    def _w(self, w, rule_name: str):
+        """FSDP weight-gather: constrain a per-layer weight slice to its
+        COMPUTE sharding — the param rule minus the leading scan dim and
+        minus the 'data' (ZeRO) factor.  Without this, XLA resolves the
+        (batch@data x weight@data) contraction conflict by gathering the
+        ACTIVATION instead (observed: a 432 GiB/step all-gather of the FFN
+        hidden on qwen train)."""
+        if self.mesh is None:
+            return w
+        from jax.sharding import PartitionSpec as P
+
+        spec = getattr(self.rules or ShardingRules(), rule_name)
+        entries = list(spec)
+        if len(entries) == w.ndim + 1:  # strip the scanned layer dim
+            entries = entries[1:]
+
+        def fix(e):
+            if isinstance(e, tuple):
+                kept = tuple(a for a in e if a != "data")
+                return kept if len(kept) > 1 else (kept[0] if kept else None)
+            return None if e == "data" else e
+
+        entries = [fix(e) for e in entries][: w.ndim]
+        entries += [None] * (w.ndim - len(entries))
+        return constraint(w, self.mesh, P(*entries))
+
+    def init(self, rng: jax.Array) -> Tuple[Tree, Tree]:
+        return init_params(self.cfg, rng, self.rules or ShardingRules(),
+                           self.model_axis_size)
+
+    # -- sublayers -------------------------------------------------------------
+
+    def _attn_full(self, x, p, q_pos, kv_pos, collect_cache: bool):
+        """Self-attention over a full sequence.  Returns (y, (k, v)|None)."""
+        r = self.rules or ShardingRules()
+        h = self._norm(x, p["norm"], p.get("norm_b"))
+        h = self._c(h, r.act_seq)
+        bias = (p["bq"], p["bk"], p["bv"]) if "bq" in p else None
+        q, k, v = project_qkv(
+            h, self._w(p["wq"], "wq"), self._w(p["wk"], "wkv"),
+            self._w(p["wv"], "wkv"), self.attn_dims, q_pos, kv_pos, bias
+        )
+        out = attend_chunked(
+            q, k, v, self.attn_dims, q_pos, kv_pos, kv_chunk=self.kv_chunk
+        )
+        B, S = out.shape[:2]
+        y = out.reshape(B, S, -1) @ self._w(p["wo"], "wo")
+        y = self._c(y, r.act_btd)
+        cache = (k, v) if collect_cache else None
+        return x + y, cache
+
+    @staticmethod
+    def _q8_kv(x):  # (B, 1, H, hd) -> (int8 values, (B,1,H) scale)
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) + 1e-8
+        s = amax / 127.0
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]), -127, 127)
+        return q.astype(jnp.int8), s.astype(jnp.bfloat16)
+
+    def _attn_decode(self, x, p, cache_k, cache_v, lengths, scales=None):
+        """One-token self-attention against a per-request-length cache.
+        `scales`: (k_scale, v_scale) (B, S, Hkv) for the int8-KV path."""
+        r = self.rules or ShardingRules()
+        B = x.shape[0]
+        h = self._norm(x, p["norm"], p.get("norm_b"))
+        bias = (p["bq"], p["bk"], p["bv"]) if "bq" in p else None
+        qpos = lengths[:, None]
+        q, k_new, v_new = project_qkv(
+            h, self._w(p["wq"], "wq"), self._w(p["wk"], "wkv"),
+            self._w(p["wv"], "wkv"), self.attn_dims, qpos, qpos, bias
+        )
+        bi = jnp.arange(B)
+        if scales is not None:
+            ks, vs = scales
+            k_q, k_s = self._q8_kv(k_new)
+            v_q, v_s = self._q8_kv(v_new)
+            cache_k = cache_k.at[bi, lengths].set(k_q[:, 0])
+            cache_v = cache_v.at[bi, lengths].set(v_q[:, 0])
+            ks = ks.at[bi, lengths].set(k_s[:, 0])
+            vs = vs.at[bi, lengths].set(v_s[:, 0])
+            scales = (ks, vs)
+        else:
+            cache_k = cache_k.at[bi, lengths].set(k_new[:, 0].astype(cache_k.dtype))
+            cache_v = cache_v.at[bi, lengths].set(v_new[:, 0].astype(cache_v.dtype))
+        S_max = cache_k.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(S_max, dtype=jnp.int32), (B, S_max))
+        valid = pos < (lengths[:, None] + 1)
+        out = attend_chunked(
+            q,
+            cache_k if scales is not None else cache_k.astype(q.dtype),
+            cache_v if scales is not None else cache_v.astype(q.dtype),
+            self.attn_dims,
+            qpos,
+            pos,
+            kv_valid=valid,
+            kv_chunk=self.kv_chunk,
+            k_scale=scales[0] if scales is not None else None,
+            v_scale=scales[1] if scales is not None else None,
+        )
+        y = out.reshape(B, 1, -1) @ self._w(p["wo"], "wo")
+        if scales is not None:
+            return x + y, cache_k, cache_v, scales
+        return x + y, cache_k, cache_v
+
+    def _cross_attn(self, x, p, ctx_k, ctx_v, gate=None):
+        """Cross-attention to precomputed context K/V (no RoPE, non-causal)."""
+        r = self.rules or ShardingRules()
+        dims = dataclasses.replace(self.attn_dims, causal=False)
+        h = self._norm(x, p["norm"], p.get("norm_b"))
+        B, S, _ = h.shape
+        q = (h @ self._w(p["wq"], "wq")).reshape(B, S, dims.n_heads, dims.head_dim)
+        if "bq" in p:
+            q = q + p["bq"].reshape(1, 1, dims.n_heads, dims.head_dim)
+        qpos = jnp.zeros((B, S), jnp.int32)
+        kpos = jnp.zeros((B, ctx_k.shape[1]), jnp.int32)
+        out = attend_chunked(
+            q, ctx_k, ctx_v, dims, qpos, kpos, kv_chunk=self.kv_chunk
+        )
+        y = out.reshape(B, S, -1) @ self._w(p["wo"], "wo")
+        if gate is not None:
+            y = jnp.tanh(gate).astype(y.dtype) * y
+        return x + self._c(y, r.act_btd)
+
+    def _context_kv(self, p, ctx):
+        """Project a context (image / encoder states) into cross K/V."""
+        dims = self.attn_dims
+        B, S, _ = ctx.shape
+        k = (ctx @ self._w(p["wk"], "wkv")).reshape(B, S, dims.n_kv_heads, dims.head_dim)
+        v = (ctx @ self._w(p["wv"], "wkv")).reshape(B, S, dims.n_kv_heads, dims.head_dim)
+        if "bk" in p:
+            k = k + p["bk"].reshape(1, 1, dims.n_kv_heads, dims.head_dim)
+            v = v + p["bv"].reshape(1, 1, dims.n_kv_heads, dims.head_dim)
+        return k, v
+
+    def _ffn(self, x, p):
+        """Megatron column->row parallel FFN with the hidden PINNED to
+        (B, S, F@model).  Without the pin, sharding propagation from the
+        sequence-parallel attention zone put the hidden at S@model and XLA
+        materialized a full (B, S_full, F_full) gather per layer (432
+        GiB/step on qwen train)."""
+        r = self.rules or ShardingRules()
+        h = self._norm(x, p["norm"], p.get("norm_b"))
+        h = self._c(h, r.act_btd)
+        if self.cfg.act == "gelu_mlp":
+            g = self._c(h @ self._w(p["w_in"], "w_in") + p["b_in"], r.act_ffn)
+            mid = jax.nn.gelu(g, approximate=True)
+            y = mid @ self._w(p["w_out"], "w_out") + p["b_out"]
+        else:
+            g = self._c(h @ self._w(p["w_gate"], "w_in"), r.act_ffn)
+            u = self._c(h @ self._w(p["w_up"], "w_in"), r.act_ffn)
+            act = jax.nn.silu if self.cfg.act == "silu" else (
+                lambda v: jax.nn.gelu(v, approximate=True)
+            )
+            mid = self._c(act(g) * u, r.act_ffn)
+            y = mid @ self._w(p["w_down"], "w_out")
+        return x + self._c(y, r.act_btd)
+
+    def _moe_ffn(self, x, p):
+        r = self.rules or ShardingRules()
+        h = self._norm(x, p["norm"])
+        if self.mesh is not None and "model" in self.mesh.axis_names:
+            from repro.models.layers.moe import moe_block_ep
+
+            tok = r.tokens[0]
+            if isinstance(tok, str):
+                batch_axes = (tok,)
+            else:
+                batch_axes = tuple(tok) if tok else ()
+            y, aux = moe_block_ep(
+                h, p["router"], p["e_gate"], p["e_up"], p["e_down"],
+                self.moe_dims, self.mesh, batch_axes,
+            )
+        else:
+            y, aux = moe_block(
+                h, p["router"], p["e_gate"], p["e_up"], p["e_down"], self.moe_dims
+            )
+        return x + self._c(y, r.act_btd), aux
+
+    def _ssm_cstr(self):
+        """Head-dim sharding callback for SSD internals (None when the mesh
+        can't shard H or there is no mesh)."""
+        if self.mesh is None or "model" not in self.mesh.axis_names:
+            return None
+        n_model = self.mesh.shape["model"]
+        if self.ssm_dims.n_heads % n_model or self.ssm_dims.d_inner % n_model:
+            return None
+        from jax.sharding import PartitionSpec as P
+
+        mesh = self.mesh
+        r = self.rules or ShardingRules()
+        batch_entry = r.act_btd[0]  # respects drop_batch_axes
+
+        def cstr(a, axis):
+            entries = [None] * a.ndim
+            entries[0] = batch_entry
+            entries[axis if axis >= 0 else a.ndim + axis] = "model"
+            return constraint(a, mesh, P(*entries))
+
+        return cstr
+
+    def _ssm_layer(self, x, p, h0=None):
+        h = self._norm(x, p["norm"])
+        p = dict(p)
+        p["in_proj"] = self._w(p["in_proj"], "ssm_in")
+        p["out_proj"] = self._w(p["out_proj"], "ssm_out")
+        y, h_last, conv_tail = ssd_forward(
+            h, p, self.ssm_dims, h0, cstr=self._ssm_cstr()
+        )
+        return x + y, h_last, conv_tail
+
+    # -- family stacks: full sequence -----------------------------------------
+
+    def _maybe_remat(self, fn):
+        return jax.checkpoint(fn) if self.remat else fn
+
+    def _pre_scan(self, stacked):
+        """Optionally move the compute-dtype cast outside the scan so the
+        per-layer ZeRO all-gathers transfer bf16, not fp32."""
+        return self._cast(stacked) if self.cast_before_scan else stacked
+
+    def _stack_full(self, params, x, positions, collect_cache: bool):
+        """Returns (x, caches) — caches is a family-specific pytree of
+        stacked per-layer state (decode feeds on it)."""
+        cfg = self.cfg
+        fam = cfg.family
+        cast = self._cast
+
+        if fam in ("dense", "moe", "vlm"):
+            every = cfg.moe.every if cfg.moe else 0
+
+            def body(carry, layer):
+                x, aux = carry
+                ap = cast(layer["attn"])
+                x, kv = self._attn_full(x, ap, positions, positions, collect_cache)
+                if cfg.moe:
+                    x, a = self._moe_ffn(x, cast(layer["moe"]))
+                    aux = aux + a
+                else:
+                    x = self._ffn(x, cast(layer["mlp"]))
+                return (x, aux), kv
+
+            if fam == "vlm":
+                return self._vlm_stack_full(params, x, positions, collect_cache)
+
+            stacked = {"attn": params["attn"]}
+            if cfg.moe:
+                stacked["moe"] = params["moe"]
+            else:
+                stacked["mlp"] = params["mlp"]
+            (x, aux), kvs = jax.lax.scan(
+                self._maybe_remat(body), (x, jnp.float32(0)), self._pre_scan(stacked)
+            )
+            return x, {"k": kvs[0], "v": kvs[1]} if collect_cache else None, aux
+
+        if fam == "ssm":
+
+            def body(carry, layer):
+                x, _ = carry
+                x, h_last, conv_tail = self._ssm_layer(x, cast(layer))
+                return (x, jnp.float32(0)), (h_last, conv_tail)
+
+            (x, _), states = jax.lax.scan(
+                self._maybe_remat(body), (x, jnp.float32(0)), self._pre_scan(params["ssm"])
+            )
+            cache = (
+                {"ssm_h": states[0], "ssm_conv": states[1]} if collect_cache else None
+            )
+            return x, cache, jnp.float32(0)
+
+        if fam == "hybrid":
+            return self._hybrid_stack_full(params, x, positions, collect_cache)
+
+        raise ValueError(fam)
+
+    def _vlm_stack_full(self, params, x, positions, collect_cache):
+        cfg = self.cfg
+        cast = self._cast
+        k = cfg.cross_attn_every
+        L = cfg.n_layers
+        ng = L // k
+        reshaped_attn = jax.tree.map(
+            lambda a: a.reshape((ng, k) + a.shape[1:]), params["attn"]
+        )
+        reshaped_mlp = jax.tree.map(
+            lambda a: a.reshape((ng, k) + a.shape[1:]), params["mlp"]
+        )
+
+        def body(carry, group):
+            x, aux = carry
+            kvs = []
+            for i in range(k - 1):
+                ap = cast(jax.tree.map(lambda a: a[i], group["attn"]))
+                x, kv = self._attn_full(x, ap, positions, positions, collect_cache)
+                kvs.append(kv)
+                x = self._ffn(x, cast(jax.tree.map(lambda a: a[i], group["mlp"])))
+            # k-th layer: self-attn + gated cross-attn + mlp
+            ap = cast(jax.tree.map(lambda a: a[k - 1], group["attn"]))
+            x, kv = self._attn_full(x, ap, positions, positions, collect_cache)
+            kvs.append(kv)
+            cp = cast(group["cross"])
+            ck, cv = self._context_kv(cp, self._img_ctx)
+            x = self._cross_attn(x, cp, ck, cv, gate=group["cross"]["gate"])
+            x = self._ffn(x, cast(jax.tree.map(lambda a: a[k - 1], group["mlp"])))
+            if collect_cache:
+                kv_stack = (
+                    jnp.stack([c[0] for c in kvs]),
+                    jnp.stack([c[1] for c in kvs]),
+                    ck,
+                    cv,
+                )
+            else:
+                kv_stack = None
+            return (x, aux), kv_stack
+
+        stacked = {
+            "attn": reshaped_attn,
+            "mlp": reshaped_mlp,
+            "cross": params["cross"],
+        }
+        (x, aux), kvs = jax.lax.scan(
+            self._maybe_remat(body), (x, jnp.float32(0)), self._pre_scan(stacked)
+        )
+        cache = None
+        if collect_cache:
+            cache = {"k": kvs[0], "v": kvs[1], "xk": kvs[2], "xv": kvs[3]}
+        return x, cache, aux
+
+    def _hybrid_stack_full(self, params, x, positions, collect_cache):
+        cfg = self.cfg
+        cast = self._cast
+        period = cfg.hybrid_period
+        attn_pos = cfg.hybrid_attn_pos
+        every = cfg.moe.every
+
+        def body(carry, sb):
+            x, aux = carry
+            kv = None
+            h_states, conv_tails = [], []
+            mi = di = si = 0
+            for pos in range(period):
+                if pos == attn_pos:
+                    ap = cast(sb["attn"])
+                    x, kv = self._attn_full(
+                        x, ap, positions, positions, collect_cache
+                    )
+                else:
+                    sp = cast(jax.tree.map(lambda a: a[si], sb["ssm"]))
+                    x, h_last, conv_tail = self._ssm_layer(x, sp)
+                    h_states.append(h_last)
+                    conv_tails.append(conv_tail)
+                    si += 1
+                if pos % every == 1:  # MoE on odd positions
+                    x, a = self._moe_ffn(
+                        x, cast(jax.tree.map(lambda m: m[mi], sb["moe"]))
+                    )
+                    aux = aux + a
+                    mi += 1
+                else:
+                    x = self._ffn(
+                        x, cast(jax.tree.map(lambda m: m[di], sb["mlp"]))
+                    )
+                    di += 1
+            out = None
+            if collect_cache:
+                out = (kv[0], kv[1], jnp.stack(h_states), jnp.stack(conv_tails))
+            return (x, aux), out
+
+        stacked = {
+            "attn": params["attn"],
+            "ssm": params["ssm"],
+            "moe": params["moe"],
+            "mlp": params["mlp"],
+        }
+        (x, aux), caches = jax.lax.scan(
+            self._maybe_remat(body), (x, jnp.float32(0)), self._pre_scan(stacked)
+        )
+        cache = None
+        if collect_cache:
+            cache = {
+                "k": caches[0],
+                "v": caches[1],
+                "ssm_h": caches[2],
+                "ssm_conv": caches[3],
+            }
+        return x, cache, aux
+
+    # -- public entry points ---------------------------------------------------
+
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.compute_dtype)
+        if self.cfg.embed_scale:
+            x = x * jnp.asarray(self.cfg.d_model ** 0.5, self.compute_dtype)
+        r = self.rules or ShardingRules()
+        return self._c(x, r.act_btd)
+
+    def _unembed(self, params, x):
+        r = self.rules or ShardingRules()
+        x = self._norm(
+            x, params["final_norm"].astype(self.compute_dtype),
+            params.get("final_norm_b"),
+        )
+        if self.cfg.tie_embeddings:
+            logits = x @ params["embed"].astype(self.compute_dtype).T
+        else:
+            logits = x @ params["head"].astype(self.compute_dtype)
+        return self._c(logits, r.logits)
+
+    def train_logits(self, params, batch: Tree):
+        """batch: tokens (B,S) [+ enc_embeds | image_embeds].  Returns
+        (logits (B,S,V_pad), aux_loss)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self._embed(params, tokens)
+
+        if cfg.family == "encdec":
+            enc = batch["enc_embeds"].astype(self.compute_dtype)
+            enc_out = self._encoder(params, enc)
+            x, aux = self._decoder_full(params, x, positions, enc_out, False)[:2]
+            return self._unembed(params, x), aux
+
+        if cfg.family == "vlm":
+            self._img_ctx = batch["image_embeds"].astype(self.compute_dtype)
+            self._img_kv = None
+        x, _, aux = self._stack_full(params, x, positions, collect_cache=False)
+        return self._unembed(params, x), aux
+
+    def _encoder(self, params, enc_x):
+        """Whisper encoder: non-causal self-attn + MLP stack."""
+        B, S, _ = enc_x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        dims = dataclasses.replace(self.attn_dims, causal=False)
+        cast = self._cast
+
+        def body(x, layer):
+            ap = cast(layer["attn"])
+            saved = self.attn_dims
+            self.attn_dims = dims
+            x, _ = self._attn_full(x, ap, positions, positions, False)
+            self.attn_dims = saved
+            x = self._ffn(x, cast(layer["mlp"]))
+            return x, None
+
+        x, _ = jax.lax.scan(
+            self._maybe_remat(body),
+            enc_x,
+            self._pre_scan({"attn": params["enc_attn"], "mlp": params["enc_mlp"]}),
+        )
+        return x
+
+    def _decoder_full(self, params, x, positions, enc_out, collect_cache):
+        cast = self._cast
+
+        def body(carry, layer):
+            x, aux = carry
+            x, kv = self._attn_full(
+                x, cast(layer["attn"]), positions, positions, collect_cache
+            )
+            cp = cast(layer["cross"])
+            ck, cv = self._context_kv(cp, enc_out)
+            x = self._cross_attn(x, cp, ck, cv)
+            x = self._ffn(x, cast(layer["mlp"]))
+            out = (kv[0], kv[1], ck, cv) if collect_cache else None
+            return (x, aux), out
+
+        (x, aux), caches = jax.lax.scan(
+            self._maybe_remat(body),
+            (x, jnp.float32(0)),
+            self._pre_scan({
+                "attn": params["dec_attn"],
+                "cross": params["dec_cross"],
+                "mlp": params["dec_mlp"],
+            }),
+        )
+        cache = None
+        if collect_cache:
+            cache = {"k": caches[0], "v": caches[1], "xk": caches[2], "xv": caches[3]}
+        return x, aux, cache
+
+    def prefill(self, params, batch: Tree):
+        """Full-context forward collecting decode caches.
+        Returns (last_logits (B, V_pad), caches)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self._embed(params, tokens)
+        if cfg.family == "encdec":
+            enc_out = self._encoder(
+                params, batch["enc_embeds"].astype(self.compute_dtype)
+            )
+            x, _, cache = self._decoder_full(params, x, positions, enc_out, True)
+        elif cfg.family == "vlm":
+            self._img_ctx = batch["image_embeds"].astype(self.compute_dtype)
+            self._img_kv = None
+            x, cache, _ = self._stack_full(params, x, positions, collect_cache=True)
+        else:
+            x, cache, _ = self._stack_full(params, x, positions, collect_cache=True)
+        logits = self._unembed(params, x[:, -1:, :])[:, 0, :]
+        return logits, cache
+
+    # -- decode ---------------------------------------------------------------
+
+    def decode_step(self, params, caches: Tree, tokens, lengths):
+        """One decode step.  tokens (B, 1), lengths (B,) current cache fill.
+        Returns (logits (B, V_pad), caches)."""
+        cfg = self.cfg
+        cast = self._cast
+        x = self._embed(params, tokens)
+        fam = cfg.family
+
+        if fam in ("dense", "moe"):
+            int8_kv = self.kv_int8 and "k_scale" in caches
+
+            def body(x, inp):
+                if int8_kv:
+                    layer, ck, cv, ks, vs = inp
+                    x, ck, cv, (ks, vs) = self._attn_decode(
+                        x, cast(layer["attn"]), ck, cv, lengths, scales=(ks, vs)
+                    )
+                else:
+                    layer, ck, cv = inp
+                    x, ck, cv = self._attn_decode(
+                        x, cast(layer["attn"]), ck, cv, lengths
+                    )
+                if cfg.moe:
+                    x, _ = self._moe_ffn(x, cast(layer["moe"]))
+                else:
+                    x = self._ffn(x, cast(layer["mlp"]))
+                return x, (ck, cv, ks, vs) if int8_kv else (ck, cv)
+
+            stacked = {"attn": params["attn"]}
+            stacked["moe" if cfg.moe else "mlp"] = params["moe" if cfg.moe else "mlp"]
+            if int8_kv:
+                x, kvs = jax.lax.scan(
+                    body, x,
+                    (self._pre_scan(stacked), caches["k"], caches["v"],
+                     caches["k_scale"], caches["v_scale"]),
+                )
+                caches = {"k": kvs[0], "v": kvs[1],
+                          "k_scale": kvs[2], "v_scale": kvs[3]}
+            else:
+                x, kvs = jax.lax.scan(
+                    body, x, (self._pre_scan(stacked), caches["k"], caches["v"])
+                )
+                caches = {"k": kvs[0], "v": kvs[1]}
+
+        elif fam == "ssm":
+
+            def body(x, inp):
+                layer, h, conv = inp
+                hn = self._norm(x, layer["norm"])
+                y, st = ssd_decode_step(
+                    hn, SSMState(h=h, conv=conv), cast(layer), self.ssm_dims
+                )
+                return x + y, (st.h, st.conv)
+
+            x, states = jax.lax.scan(
+                body, x, (self._pre_scan(params["ssm"]), caches["ssm_h"], caches["ssm_conv"])
+            )
+            caches = {"ssm_h": states[0], "ssm_conv": states[1]}
+
+        elif fam == "hybrid":
+            x, caches = self._hybrid_decode(params, caches, x, lengths)
+
+        elif fam == "encdec":
+
+            def body(x, inp):
+                layer, ck, cv, xk, xv = inp
+                x, ck, cv = self._attn_decode(x, cast(layer["attn"]), ck, cv, lengths)
+                cp = cast(layer["cross"])
+                x = self._cross_attn(x, cp, xk.astype(x.dtype), xv.astype(x.dtype))
+                x = self._ffn(x, cast(layer["mlp"]))
+                return x, (ck, cv)
+
+            stacked = {
+                "attn": params["dec_attn"],
+                "cross": params["dec_cross"],
+                "mlp": params["dec_mlp"],
+            }
+            x, kvs = jax.lax.scan(
+                body,
+                x,
+                (self._pre_scan(stacked), caches["k"], caches["v"], caches["xk"], caches["xv"]),
+            )
+            caches = {"k": kvs[0], "v": kvs[1], "xk": caches["xk"], "xv": caches["xv"]}
+
+        elif fam == "vlm":
+            x, caches = self._vlm_decode(params, caches, x, lengths)
+        else:
+            raise ValueError(fam)
+
+        logits = self._unembed(params, x)[:, 0, :]
+        return logits, caches
+
+    def _hybrid_decode(self, params, caches, x, lengths):
+        cfg = self.cfg
+        cast = self._cast
+        period, attn_pos = cfg.hybrid_period, cfg.hybrid_attn_pos
+        every = cfg.moe.every
+
+        def body(x, inp):
+            sb, ck, cv, hs, conv = inp
+            mi = di = si = 0
+            new_h, new_conv = [], []
+            for pos in range(period):
+                if pos == attn_pos:
+                    x, ck, cv = self._attn_decode(x, cast(sb["attn"]), ck, cv, lengths)
+                else:
+                    sp = cast(jax.tree.map(lambda a: a[si], sb["ssm"]))
+                    hn = self._norm(x, sp["norm"])
+                    y, st = ssd_decode_step(
+                        hn, SSMState(h=hs[si], conv=conv[si]), sp, self.ssm_dims
+                    )
+                    x = x + y
+                    new_h.append(st.h)
+                    new_conv.append(st.conv)
+                    si += 1
+                if pos % every == 1:
+                    x, _ = self._moe_ffn(
+                        x, cast(jax.tree.map(lambda m: m[mi], sb["moe"]))
+                    )
+                    mi += 1
+                else:
+                    x = self._ffn(x, cast(jax.tree.map(lambda m: m[di], sb["mlp"])))
+                    di += 1
+            return x, (ck, cv, jnp.stack(new_h), jnp.stack(new_conv))
+
+        stacked = {k: params[k] for k in ("attn", "ssm", "moe", "mlp")}
+        x, outs = jax.lax.scan(
+            body,
+            x,
+            (self._pre_scan(stacked), caches["k"], caches["v"], caches["ssm_h"], caches["ssm_conv"]),
+        )
+        return x, {"k": outs[0], "v": outs[1], "ssm_h": outs[2], "ssm_conv": outs[3]}
+
+    def _vlm_decode(self, params, caches, x, lengths):
+        cfg = self.cfg
+        cast = self._cast
+        k = cfg.cross_attn_every
+        ng = cfg.n_layers // k
+        reshaped_attn = jax.tree.map(
+            lambda a: a.reshape((ng, k) + a.shape[1:]), params["attn"]
+        )
+        reshaped_mlp = jax.tree.map(
+            lambda a: a.reshape((ng, k) + a.shape[1:]), params["mlp"]
+        )
+
+        def body(x, inp):
+            group, ck, cv, xk, xv = inp
+            new_k, new_v = [], []
+            for i in range(k):
+                ap = cast(jax.tree.map(lambda a: a[i], group["attn"]))
+                x, cki, cvi = self._attn_decode(x, ap, ck[i], cv[i], lengths)
+                new_k.append(cki)
+                new_v.append(cvi)
+                if i == k - 1:
+                    cp = cast(group["cross"])
+                    x = self._cross_attn(
+                        x, cp, xk.astype(x.dtype), xv.astype(x.dtype),
+                        gate=group["cross"]["gate"],
+                    )
+                x = self._ffn(x, cast(jax.tree.map(lambda a: a[i], group["mlp"])))
+            return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+        stacked = {
+            "attn": reshaped_attn,
+            "mlp": reshaped_mlp,
+            "cross": params["cross"],
+        }
+        x, kvs = jax.lax.scan(
+            body, x, (self._pre_scan(stacked), caches["k"], caches["v"], caches["xk"], caches["xv"])
+        )
+        return x, {"k": kvs[0], "v": kvs[1], "xk": caches["xk"], "xv": caches["xv"]}
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray,  # (B, S, V_pad)
+    labels: jnp.ndarray,  # (B, S)
+    vocab: int,
+) -> jnp.ndarray:
+    """Vocab-parallel-safe CE: padded columns masked, fp32 statistics.
+
+    Memory note (§Perf It-6): the mask is applied in the LOGITS dtype and
+    the f32 convert feeds straight into the max/sum reductions, so XLA
+    fuses it — no materialized fp32 (B, S, V) copy (4.2 GiB/device for a
+    128k vocab at the vision cell)."""
+    V_pad = logits.shape[-1]
+    if V_pad > vocab:
+        mask = jnp.arange(V_pad) < vocab
+        neg = jnp.asarray(-1e30, logits.dtype)
+        logits = jnp.where(mask, logits, neg)
+    # max/sum with inline f32 accumulation (fusible convert+reduce).
+    m = jnp.max(logits.astype(jnp.float32), axis=-1)
+    se = jnp.sum(
+        jnp.exp(logits.astype(jnp.float32) - m[..., None]), axis=-1
+    )
+    lse = m + jnp.log(se)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[
+        ..., 0
+    ].astype(jnp.float32)
+    return jnp.mean(lse - picked)

@@ -1,0 +1,272 @@
+"""Parameter initialization + PartitionSpec trees for every family.
+
+Params are nested dicts with layer-stacked leaves (leading scan axis) so a
+single lax.scan covers the depth — the only way 72-layer/512-device
+programs compile in reasonable time.  Spec trees mirror the param trees
+exactly (jax.tree.map-able into NamedShardings).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules, pad_to_multiple
+
+Tree = Dict[str, Any]
+
+VOCAB_PAD = 128  # pad vocab to multiples of 128 (16-wide TP x 8 lanes)
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return pad_to_multiple(cfg.vocab, VOCAB_PAD)
+
+
+def padded_experts(cfg: ModelConfig, model_axis: int = 16) -> int:
+    assert cfg.moe is not None
+    return pad_to_multiple(cfg.moe.n_experts, model_axis)
+
+
+def _init(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+class _KeyGen:
+    def __init__(self, key):
+        self.key = key
+
+    def __call__(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+
+def _attn_params(kg, cfg: ModelConfig, n: int, rules: ShardingRules):
+    D = cfg.d_model
+    hd = cfg.resolved_head_dim
+    qo, kvo = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    s = 0.02
+    p = {
+        "norm": jnp.zeros((n, D)),
+        "wq": _init(kg(), (n, D, qo), s),
+        "wk": _init(kg(), (n, D, kvo), s),
+        "wv": _init(kg(), (n, D, kvo), s),
+        "wo": _init(kg(), (n, qo, D), s / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    spec = {
+        "norm": P(None, None),
+        "wq": rules.wq,
+        "wk": rules.wkv,
+        "wv": rules.wkv,
+        "wo": rules.wo,
+    }
+    if cfg.qkv_bias:
+        p |= {
+            "bq": jnp.zeros((n, qo)),
+            "bk": jnp.zeros((n, kvo)),
+            "bv": jnp.zeros((n, kvo)),
+        }
+        spec |= {"bq": rules.qkv_bias, "bk": rules.qkv_bias, "bv": rules.qkv_bias}
+    if cfg.norm == "layer":
+        p["norm_b"] = jnp.zeros((n, D))
+        spec["norm_b"] = P(None, None)
+    return p, spec
+
+
+def _mlp_params(kg, cfg: ModelConfig, n: int, rules: ShardingRules):
+    D, F = cfg.d_model, cfg.d_ff
+    s = 0.02
+    if cfg.act == "gelu_mlp":  # whisper: plain MLP with biases
+        p = {
+            "norm": jnp.zeros((n, D)),
+            "norm_b": jnp.zeros((n, D)),
+            "w_in": _init(kg(), (n, D, F), s),
+            "b_in": jnp.zeros((n, F)),
+            "w_out": _init(kg(), (n, F, D), s / math.sqrt(2 * cfg.n_layers)),
+            "b_out": jnp.zeros((n, D)),
+        }
+        spec = {
+            "norm": P(None, None),
+            "norm_b": P(None, None),
+            "w_in": rules.w_in,
+            "b_in": rules.qkv_bias,
+            "w_out": rules.w_out,
+            "b_out": P(None, None),
+        }
+    else:
+        p = {
+            "norm": jnp.zeros((n, D)),
+            "w_gate": _init(kg(), (n, D, F), s),
+            "w_up": _init(kg(), (n, D, F), s),
+            "w_down": _init(kg(), (n, F, D), s / math.sqrt(2 * cfg.n_layers)),
+        }
+        spec = {
+            "norm": P(None, None),
+            "w_gate": rules.w_in,
+            "w_up": rules.w_in,
+            "w_down": rules.w_out,
+        }
+    return p, spec
+
+
+def _moe_params(kg, cfg: ModelConfig, n: int, rules: ShardingRules, e_pad: int):
+    D, F = cfg.d_model, cfg.d_ff
+    s = 0.02
+    p = {
+        "norm": jnp.zeros((n, D)),
+        "router": _init(kg(), (n, D, e_pad), s),
+        "e_gate": _init(kg(), (n, e_pad, D, F), s),
+        "e_up": _init(kg(), (n, e_pad, D, F), s),
+        "e_down": _init(kg(), (n, e_pad, F, D), s / math.sqrt(2 * cfg.n_layers)),
+    }
+    spec = {
+        "norm": P(None, None),
+        "router": rules.router,
+        "e_gate": rules.expert_in,
+        "e_up": rules.expert_in,
+        "e_down": rules.expert_out,
+    }
+    return p, spec
+
+
+def _ssm_params(kg, cfg: ModelConfig, n: int, rules: ShardingRules):
+    from repro.models.layers.ssm import SSMDims
+
+    sc = cfg.ssm
+    dims = SSMDims(
+        d_model=cfg.d_model,
+        d_inner=sc.d_inner,
+        head_dim=sc.head_dim,
+        d_state=sc.d_state,
+        n_groups=sc.n_groups,
+        d_conv=sc.d_conv,
+        chunk=sc.chunk,
+    )
+    s = 0.02
+    H = dims.n_heads
+    p = {
+        "norm": jnp.zeros((n, cfg.d_model)),
+        "in_proj": _init(kg(), (n, cfg.d_model, dims.in_proj_out), s),
+        "conv_w": _init(kg(), (n, dims.d_conv, dims.conv_channels), 0.1),
+        "conv_b": jnp.zeros((n, dims.conv_channels)),
+        "A_log": jnp.tile(jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32))[None], (n, 1)),
+        "dt_bias": jnp.zeros((n, H)),
+        "D": jnp.ones((n, H)),
+        "out_proj": _init(kg(), (n, dims.d_inner, cfg.d_model), s / math.sqrt(2 * cfg.n_layers)),
+    }
+    spec = {
+        "norm": P(None, None),
+        "in_proj": rules.ssm_in,
+        "conv_w": rules.conv_kernel,
+        "conv_b": rules.ssm_small,
+        "A_log": P(None, None),
+        "dt_bias": P(None, None),
+        "D": P(None, None),
+        "out_proj": rules.ssm_out,
+    }
+    return p, spec, dims
+
+
+def init_params(
+    cfg: ModelConfig, rng: jax.Array, rules: ShardingRules, model_axis: int = 16
+) -> Tuple[Tree, Tree]:
+    """Returns (params, spec_tree) with identical structure."""
+    kg = _KeyGen(rng)
+    V = padded_vocab(cfg)
+    D = cfg.d_model
+    params: Tree = {
+        "embed": _init(kg(), (V, D), 1.0 / math.sqrt(D)),
+        "final_norm": jnp.zeros((D,)),
+    }
+    specs: Tree = {"embed": rules.embed, "final_norm": rules.norm_scale}
+    if cfg.norm == "layer":
+        params["final_norm_b"] = jnp.zeros((D,))
+        specs["final_norm_b"] = rules.norm_scale
+    if not cfg.tie_embeddings:
+        params["head"] = _init(kg(), (D, V), 1.0 / math.sqrt(D))
+        specs["head"] = rules.head
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        L = cfg.n_layers
+        a, sa = _attn_params(kg, cfg, L, rules)
+        params["attn"], specs["attn"] = a, sa
+        if cfg.moe:
+            e_pad = padded_experts(cfg, model_axis)
+            every = cfg.moe.every
+            n_moe = L // every
+            m, sm = _moe_params(kg, cfg, n_moe, rules, e_pad)
+            params["moe"], specs["moe"] = m, sm
+            if every > 1:
+                d, sd = _mlp_params(kg, cfg, L - n_moe, rules)
+                params["mlp"], specs["mlp"] = d, sd
+        else:
+            d, sd = _mlp_params(kg, cfg, L, rules)
+            params["mlp"], specs["mlp"] = d, sd
+
+    elif fam == "ssm":
+        s, ss, _ = _ssm_params(kg, cfg, cfg.n_layers, rules)
+        params["ssm"], specs["ssm"] = s, ss
+
+    elif fam == "hybrid":
+        period = cfg.hybrid_period
+        nsb = cfg.n_layers // period  # superblocks
+        n_mamba = period - 1
+        a, sa = _attn_params(kg, cfg, nsb, rules)
+        params["attn"], specs["attn"] = a, sa
+        s, ss, _ = _ssm_params(kg, cfg, nsb * n_mamba, rules)
+        # reshape leading to (nsb, n_mamba, ...)
+        params["ssm"] = jax.tree.map(
+            lambda x: x.reshape((nsb, n_mamba) + x.shape[1:]), s
+        )
+        specs["ssm"] = jax.tree.map(
+            lambda sp: P(*((None,) + tuple(sp))), ss
+        )
+        e_pad = padded_experts(cfg, model_axis)
+        n_moe_sb = period // cfg.moe.every // 1  # MoE slots per superblock
+        n_moe_sb = period // cfg.moe.every - 0  # every=2 -> 4
+        m, sm = _moe_params(kg, cfg, nsb * n_moe_sb, rules, e_pad)
+        params["moe"] = jax.tree.map(
+            lambda x: x.reshape((nsb, n_moe_sb) + x.shape[1:]), m
+        )
+        specs["moe"] = jax.tree.map(lambda sp: P(*((None,) + tuple(sp))), sm)
+        n_dense_sb = period - n_moe_sb
+        d, sd = _mlp_params(kg, cfg, nsb * n_dense_sb, rules)
+        params["mlp"] = jax.tree.map(
+            lambda x: x.reshape((nsb, n_dense_sb) + x.shape[1:]), d
+        )
+        specs["mlp"] = jax.tree.map(lambda sp: P(*((None,) + tuple(sp))), sd)
+
+    elif fam == "encdec":
+        Le, Ld = cfg.n_encoder_layers, cfg.n_layers
+        ea, sea = _attn_params(kg, cfg, Le, rules)
+        em, sem = _mlp_params(kg, cfg, Le, rules)
+        params["enc_attn"], specs["enc_attn"] = ea, sea
+        params["enc_mlp"], specs["enc_mlp"] = em, sem
+        da, sda = _attn_params(kg, cfg, Ld, rules)
+        dx, sdx = _attn_params(kg, cfg, Ld, rules)  # cross-attn
+        dm, sdm = _mlp_params(kg, cfg, Ld, rules)
+        params["dec_attn"], specs["dec_attn"] = da, sda
+        params["dec_cross"], specs["dec_cross"] = dx, sdx
+        params["dec_mlp"], specs["dec_mlp"] = dm, sdm
+
+    elif fam == "vlm":
+        L = cfg.n_layers
+        k = cfg.cross_attn_every
+        a, sa = _attn_params(kg, cfg, L, rules)
+        d, sd = _mlp_params(kg, cfg, L, rules)
+        params["attn"], specs["attn"] = a, sa
+        params["mlp"], specs["mlp"] = d, sd
+        nx = L // k
+        x, sx = _attn_params(kg, cfg, nx, rules)
+        params["cross"], specs["cross"] = x, sx
+        params["cross"]["gate"] = jnp.zeros((nx,))
+        specs["cross"]["gate"] = P(None)
+    else:
+        raise ValueError(fam)
+
+    return params, specs

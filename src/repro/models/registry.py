@@ -1,0 +1,38 @@
+"""Model construction from configs."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+
+MODEL_FAMILIES = ("dense", "moe", "hybrid", "ssm", "encdec", "vlm")
+
+
+def build_model(
+    cfg: ModelConfig,
+    mesh=None,
+    compute_dtype=None,
+    kv_chunk: int = 2048,
+    remat: bool = True,
+    model_axis_size: Optional[int] = None,
+    rules=None,
+    cast_before_scan: bool = False,
+    kv_int8: bool = False,
+) -> Model:
+    import jax.numpy as jnp
+
+    if model_axis_size is None:
+        model_axis_size = mesh.shape.get("model", 1) if mesh is not None else 1
+    return Model(
+        cfg=cfg,
+        mesh=mesh,
+        rules=rules,
+        compute_dtype=compute_dtype or jnp.bfloat16,
+        kv_chunk=kv_chunk,
+        remat=remat,
+        model_axis_size=max(model_axis_size, 1),
+        cast_before_scan=cast_before_scan,
+        kv_int8=kv_int8,
+    )

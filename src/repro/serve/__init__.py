@@ -1,0 +1,2 @@
+from repro.serve.scheduler import SmartPQScheduler, Request  # noqa: F401
+from repro.serve.engine import ServeEngine, EngineConfig  # noqa: F401

@@ -1,0 +1,68 @@
+"""Elastic rescaling: move a training state between meshes/device counts.
+
+The scenario: a 512-chip job loses a pod (or gains one back) — the
+replacement job builds whatever mesh its surviving devices support and
+resumes from the checkpoint.  Because checkpoints store unsharded leaves
+keyed by tree path (train/checkpoint.py), restore is placement-agnostic;
+this module adds the explicit API and the live (no-checkpoint) device_put
+path for in-process rescale.
+
+Semantics guarantee: optimizer state and params are placement-invariant
+(pure data), so training continues bit-identically modulo batch-sharding
+summation order.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import ShardingRules, strip_pod
+
+
+def shardings_for(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def reshard_state(state: Any, new_shardings: Any) -> Any:
+    """Live rescale: re-place every leaf onto the new mesh.  Works across
+    device counts (jax gathers + redistributes)."""
+    return jax.tree.map(jax.device_put, state, new_shardings)
+
+
+def resume_on_new_mesh(
+    ckpt_dir: str,
+    like: Any,
+    new_mesh: Mesh,
+    spec_tree: Any,
+    step: Optional[int] = None,
+) -> Any:
+    """Checkpoint-mediated rescale (the crash-recovery path)."""
+    from repro.train import checkpoint as ckpt
+
+    sh = shardings_for(new_mesh, spec_tree)
+    return ckpt.restore(ckpt_dir, like, step=step, shardings=sh)
+
+
+def fit_spec_to_mesh(spec_tree: Any, mesh: Mesh) -> Any:
+    """Drop axes the new mesh doesn't have (e.g. 'pod' after losing one)."""
+    names = set(mesh.axis_names)
+
+    def fix(spec: P) -> P:
+        out = []
+        for e in spec:
+            if isinstance(e, tuple):
+                kept = tuple(a for a in e if a in names)
+                out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+            else:
+                out.append(e if e in names else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,245 @@
+"""Step-function builders: train / eval / prefill / serve.
+
+These are what the launcher jits and the dry-run lowers.  One builder per
+step kind; each returns (fn, in_shardings, out_shardings, input_specs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD
+from repro.distributed.sharding import ShardingRules, strip_pod
+from repro.models.io import cache_specs, input_specs
+from repro.models.model import Model, cross_entropy_loss
+from repro.models.registry import build_model
+from repro.train.optimizer import (
+    AdamWConfig,
+    OptState,
+    adamw_init,
+    adamw_update,
+    opt_state_specs,
+)
+
+Tree = Dict[str, Any]
+
+
+def _shardings_of(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _drop_batch_axes(spec_tree):
+    """Replace the ('pod','data') batch group with None in every spec —
+    used when global_batch doesn't divide the batch-device count (e.g. the
+    long_500k cell's batch of 1)."""
+    batch_group = {AXIS_POD, AXIS_DATA}
+
+    def fix(spec):
+        out = []
+        for e in spec:
+            if isinstance(e, tuple) and set(e) & batch_group:
+                kept = tuple(a for a in e if a not in batch_group)
+                out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+            elif e in batch_group:
+                out.append(None)
+            else:
+                out.append(e)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec_tree(
+    cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules, mesh=None,
+    kv_int8: bool = False,
+):
+    """PartitionSpec tree matching models/io.input_specs structure."""
+    tree = _batch_spec_tree(cfg, shape, rules, kv_int8)
+    if mesh is not None:
+        n_batch = 1
+        for a in (AXIS_POD, AXIS_DATA):
+            n_batch *= mesh.shape.get(a, 1)
+        if shape.global_batch % n_batch != 0:
+            tree = _drop_batch_axes(tree)
+    return tree
+
+
+def _batch_spec_tree(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules,
+                     kv_int8: bool = False):
+    b = rules.tokens
+    out: Tree = {}
+    if shape.kind in ("train", "prefill"):
+        out["tokens"] = b
+        if shape.kind == "train":
+            out["labels"] = b
+        if cfg.family == "encdec":
+            out["enc_embeds"] = rules.act_btd
+        if cfg.family == "vlm":
+            out["image_embeds"] = rules.act_btd
+        return out
+    # decode
+    fam = cfg.family
+    caches: Tree = {}
+    if fam in ("dense", "moe", "encdec"):
+        caches["k"] = rules.kv_cache
+        caches["v"] = rules.kv_cache
+        if kv_int8 and fam in ("dense", "moe"):
+            scale_spec = P(*tuple(rules.kv_cache)[:-1])
+            caches["k_scale"] = scale_spec
+            caches["v_scale"] = scale_spec
+        if fam == "encdec":
+            caches["xk"] = rules.kv_cache
+            caches["xv"] = rules.kv_cache
+    elif fam == "ssm":
+        caches["ssm_h"] = rules.ssm_state
+        caches["ssm_conv"] = P(None, (AXIS_POD, AXIS_DATA), None, AXIS_MODEL)
+    elif fam == "hybrid":
+        caches["k"] = rules.kv_cache
+        caches["v"] = rules.kv_cache
+        caches["ssm_h"] = P(None, None, (AXIS_POD, AXIS_DATA), AXIS_MODEL, None, None)
+        caches["ssm_conv"] = P(None, None, (AXIS_POD, AXIS_DATA), None, AXIS_MODEL)
+    elif fam == "vlm":
+        caches["k"] = P(None, None, (AXIS_POD, AXIS_DATA), AXIS_MODEL, None, None)
+        caches["v"] = P(None, None, (AXIS_POD, AXIS_DATA), AXIS_MODEL, None, None)
+        caches["xk"] = P(None, (AXIS_POD, AXIS_DATA), None, None, None)
+        caches["xv"] = P(None, (AXIS_POD, AXIS_DATA), None, None, None)
+    return {
+        "tokens": P((AXIS_POD, AXIS_DATA), None),
+        "lengths": P((AXIS_POD, AXIS_DATA)),
+        "caches": caches,
+    }
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh: Optional[Mesh],
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    rules: Optional[ShardingRules] = None,
+    remat: bool = True,
+    kv_chunk: int = 2048,
+    microbatches: int = 1,
+    **model_kwargs,
+):
+    """Returns (train_step, model).  train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).
+
+    microbatches > 1: gradient accumulation — the global batch is scanned
+    in `microbatches` slices with fp32 grad accumulation, dividing
+    activation memory by the same factor (the production answer for cells
+    whose per-device activations exceed HBM; EXPERIMENTS.md §Perf It-5).
+    """
+    model = build_model(cfg, mesh=mesh, remat=remat, kv_chunk=kv_chunk,
+                        rules=rules, **model_kwargs)
+    if rules is None:
+        rules = model.rules or ShardingRules()
+
+    def loss_fn(params, batch):
+        logits, aux = model.train_logits(params, batch)
+        loss = cross_entropy_loss(logits, batch["labels"], cfg.vocab)
+        return loss + 0.01 * aux, (loss, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: OptState, batch: Tree):
+        if microbatches == 1:
+            (total, (loss, aux)), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            def acc_body(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (t, (l, a)), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda acc, gi: acc + gi.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l, a_acc + a), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.float32(0), jnp.float32(0)), micro
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss, aux = loss / microbatches, aux / microbatches
+            total = loss + 0.01 * aux
+        new_params, new_opt = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {
+            "loss": loss,
+            "aux_loss": aux,
+            "total_loss": total,
+            "step": new_opt.step,
+        }
+        return new_params, new_opt, metrics
+
+    return train_step, model
+
+
+def make_eval_step(cfg: ModelConfig, mesh, remat=False, kv_chunk: int = 2048):
+    model = build_model(cfg, mesh=mesh, remat=remat, kv_chunk=kv_chunk)
+
+    def eval_step(params, batch):
+        logits, _ = model.train_logits(params, batch)
+        return cross_entropy_loss(logits, batch["labels"], cfg.vocab)
+
+    return eval_step, model
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, kv_chunk: int = 2048, rules=None,
+                      **model_kwargs):
+    model = build_model(cfg, mesh=mesh, remat=False, kv_chunk=kv_chunk,
+                        rules=rules, **model_kwargs)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step, model
+
+
+def make_serve_step(cfg: ModelConfig, mesh, kv_chunk: int = 4096, rules=None,
+                    kv_int8: bool = False, **model_kwargs):
+    """Decode step + greedy sampling + length bump — the serving inner loop."""
+    model = build_model(cfg, mesh=mesh, remat=False, kv_chunk=kv_chunk,
+                        rules=rules, kv_int8=kv_int8, **model_kwargs)
+
+    def serve_step(params, batch):
+        logits, caches = model.decode_step(
+            params, batch["caches"], batch["tokens"], batch["lengths"]
+        )
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return {
+            "tokens": next_tokens,
+            "lengths": batch["lengths"] + 1,
+            "caches": caches,
+        }
+
+    return serve_step, model
+
+
+def training_state_shardings(
+    cfg: ModelConfig, mesh: Mesh, opt_cfg: AdamWConfig, params, param_specs
+):
+    rules = strip_pod(ShardingRules(), mesh)
+    p_sh = _shardings_of(mesh, param_specs)
+    o_specs = opt_state_specs(params, param_specs, opt_cfg)
+    o_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        o_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return p_sh, o_sh

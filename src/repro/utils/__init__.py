@@ -1,0 +1,2 @@
+from repro.utils.hashing import mix32, shard_of_key  # noqa: F401
+from repro.utils.treeutil import tree_bytes, tree_count  # noqa: F401

@@ -1,0 +1,32 @@
+"""Integer hashing used to route keys to shards.
+
+The paper load-balances client threads across server threads round-robin
+(Fig. 5, initServer).  The bulk-synchronous analogue is hash-routing each key
+to a shard so that (a) load is balanced regardless of key distribution and
+(b) the per-shard key stream looks uniform, which is what the SprayList-style
+relaxed deletion (`spray` schedule) relies on for its top-K envelope.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Knuth multiplicative hashing constant (2^32 / phi), and a xorshift finisher
+# (splitmix-style) so that adjacent keys land on unrelated shards.
+_GOLDEN = jnp.uint32(0x9E3779B1)
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """32-bit finalizer (xorshift-multiply avalanche). Input any int dtype."""
+    h = x.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * _GOLDEN
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def shard_of_key(keys: jnp.ndarray, num_shards: int) -> jnp.ndarray:
+    """Shard id in [0, num_shards) for each key. Balanced for any key dist."""
+    return (mix32(keys) % jnp.uint32(num_shards)).astype(jnp.int32)

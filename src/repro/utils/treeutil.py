@@ -1,0 +1,35 @@
+"""Small pytree utilities shared across substrates."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of all array leaves."""
+    return sum(
+        np.prod(x.shape) * x.dtype.itemsize
+        for x in jax.tree.leaves(tree)
+        if hasattr(x, "shape")
+    )
+
+
+def tree_count(tree) -> int:
+    """Total number of scalar elements across leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree) if hasattr(x, "shape"))
+
+
+def tree_cast(tree, dtype):
+    """Cast all inexact leaves to `dtype`."""
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)

@@ -1,0 +1,37 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches see
+1 device; multi-device tests spawn subprocesses with their own flags."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+sys.path.insert(0, str(SRC))
+DEVICE_SCRIPTS = Path(__file__).parent / "device_scripts"
+
+
+def run_device_script(name: str, n_devices: int = 8, timeout: int = 900):
+    """Run tests/device_scripts/<name> in a subprocess with N host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(SRC)
+    proc = subprocess.run(
+        [sys.executable, str(DEVICE_SCRIPTS / name)],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+    )
+    assert proc.returncode == 0, (
+        f"{name} failed\nSTDOUT:\n{proc.stdout[-4000:]}\nSTDERR:\n{proc.stderr[-4000:]}"
+    )
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def device_script_runner():
+    return run_device_script

@@ -1,0 +1,24 @@
+"""Guard the dry-run machinery itself: one cheap cell (gemma decode) must
+lower + compile on the production mesh and report sane analysis numbers."""
+
+import os
+
+assert "512" in os.environ.get("XLA_FLAGS", "")
+
+import sys
+
+sys.argv = ["dryrun_cell_check"]
+
+from repro.launch.dryrun import lower_cell
+
+rec = lower_cell("gemma-2b", "decode_32k", multi_pod=False, serve_tp_only=True)
+assert rec["status"] == "ok", rec
+assert rec["n_chips"] == 256
+assert rec["flops_per_device"] > 0
+assert rec["collective_bytes_per_device"] > 0
+assert rec["memory_per_device"]["peak_estimate_bytes"] < 16 * 2**30
+assert rec["fits_16gib_hbm"]
+
+rec2 = lower_cell("gemma-2b", "long_500k", multi_pod=False)
+assert rec2["status"] == "skipped" and "quadratic" in rec2["reason"]
+print("DRYRUN-CELL-OK")

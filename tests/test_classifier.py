@@ -1,0 +1,84 @@
+"""Decision-tree classifier: §3.1.2/§4.2.1 of the paper."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.classifier.cost_model import (
+    MeshGeom,
+    Workload,
+    best_mode,
+    throughput,
+)
+from repro.core.classifier.dataset import make_test_set, make_training_set
+from repro.core.classifier.features import (
+    CLASS_AWARE,
+    CLASS_NEUTRAL,
+    CLASS_OBLIVIOUS,
+    NUM_CLASSES,
+    featurize,
+)
+from repro.core.classifier.inference import pack_tree, tree_predict
+from repro.core.classifier.tree import train_tree
+
+
+def test_cost_model_regimes():
+    """The paper's qualitative regimes (Figs 1/7/9) hold in the cost model."""
+    insert_heavy = Workload(512, 65536, 1 << 20, 0.9)
+    delete_heavy_small = Workload(512, 4096, 1 << 20, 0.1)
+    assert best_mode(insert_heavy) == CLASS_OBLIVIOUS
+    assert best_mode(delete_heavy_small) == CLASS_AWARE
+    # single pod, few clients -> close to neutral (paper §3.1.2(1)(i))
+    w = Workload(8, 16384, 1 << 16, 0.5)
+    t_o = throughput(CLASS_OBLIVIOUS, w, g=MeshGeom(npods=1))
+    t_a = throughput(CLASS_AWARE, w, g=MeshGeom(npods=1))
+    assert t_o > 0 and t_a > 0
+
+
+def test_tree_training_deterministic_and_accurate():
+    X, y = make_training_set()
+    t1 = train_tree(X, y, NUM_CLASSES, max_depth=8)
+    t2 = train_tree(X, y, NUM_CLASSES, max_depth=8)
+    assert [(n.feature, n.threshold) for n in t1.nodes] == [
+        (n.feature, n.threshold) for n in t2.nodes
+    ]
+    assert (t1.predict(X) == y).mean() > 0.93
+    assert t1.depth() <= 8
+
+    Xt, yt, _ = make_test_set(1500)
+    acc = (t1.predict(Xt) == yt).mean()
+    assert acc > 0.8, f"test accuracy {acc} (paper reports 87.9%)"
+
+
+def test_packed_tree_matches_host_tree():
+    X, y = make_training_set()
+    tree = train_tree(X, y, NUM_CLASSES, max_depth=8)
+    packed = pack_tree(tree)
+    Xt, _, _ = make_test_set(300, seed=11)
+    host = tree.predict(Xt)
+    dev = np.array([int(tree_predict(packed, jnp.asarray(x))) for x in Xt])
+    np.testing.assert_array_equal(host, dev)
+
+
+def test_misprediction_cost_metric():
+    """Paper §4.2.1: ((X - Y)/Y) over mispredicted workloads is finite and
+    reported; we check the machinery, the value lands in EXPERIMENTS.md."""
+    X, y = make_training_set()
+    tree = train_tree(X, y, NUM_CLASSES)
+    Xt, yt, basis = make_test_set(800, seed=5)
+    pred = tree.predict(Xt)
+    wrong = (pred != yt) & (pred != CLASS_NEUTRAL) & (yt != CLASS_NEUTRAL)
+    costs = []
+    for i in np.where(wrong)[0]:
+        t = basis[i]
+        hi, lo = max(t), min(t)
+        costs.append((hi - lo) / max(lo, 1e-9))
+    if costs:  # geometric mean misprediction cost
+        gm = float(np.exp(np.mean(np.log(np.maximum(costs, 1e-9)))))
+        assert gm < 10.0
+
+
+def test_featurize_shapes():
+    f = featurize(64, 1024, 2048, 0.5)
+    assert f.shape == (4,) and f.dtype == np.float32
+    fb = featurize([1, 2], [10, 20], [100, 200], [0.1, 0.9])
+    assert fb.shape == (2, 4)

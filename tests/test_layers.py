@@ -1,0 +1,167 @@
+"""Layer-level correctness: attention chunking, SSD duality, MoE capacity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.layers.attention import (
+    AttnDims,
+    KVCacheSlice,
+    _attend_dense,
+    attend_chunked,
+    decode_attend,
+)
+from repro.models.layers.moe import MoEDims, moe_block
+from repro.models.layers.ssm import (
+    SSMDims,
+    SSMState,
+    ssd_decode_step,
+    ssd_forward,
+)
+
+
+def _qkv(B=2, S=256, Hq=4, Hkv=2, hd=32, seed=0):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.normal(size=(B, S, Hq, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    return q, k, v
+
+
+def test_chunked_attention_exact():
+    """Flash-style chunking is exact, not approximate."""
+    dims = AttnDims(n_heads=4, n_kv_heads=2, head_dim=32)
+    q, k, v = _qkv()
+    B, S = q.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    dense = _attend_dense(q, k, v, dims, pos, pos)
+    for chunk in (32, 64, 128):
+        out = attend_chunked(q, k, v, dims, pos, pos, kv_chunk=chunk)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(dense), rtol=2e-5, atol=2e-5
+        )
+
+
+def test_gqa_grouping():
+    """GQA with q_per_kv=2 equals MHA with duplicated KV heads."""
+    dims_gqa = AttnDims(n_heads=4, n_kv_heads=2, head_dim=32)
+    dims_mha = AttnDims(n_heads=4, n_kv_heads=4, head_dim=32)
+    q, k, v = _qkv()
+    B, S = q.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    out_g = _attend_dense(q, k, v, dims_gqa, pos, pos)
+    k_dup = jnp.repeat(k, 2, axis=2)
+    v_dup = jnp.repeat(v, 2, axis=2)
+    out_m = _attend_dense(q, k_dup, v_dup, dims_mha, pos, pos)
+    np.testing.assert_allclose(
+        np.asarray(out_g), np.asarray(out_m), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_decode_matches_full_recompute():
+    """Incremental decode attention == full-sequence attention at the last
+    position (per-request lengths respected)."""
+    dims = AttnDims(n_heads=2, n_kv_heads=2, head_dim=16)
+    B, S, hd = 2, 32, 16
+    r = np.random.default_rng(1)
+    k_hist = jnp.asarray(r.normal(size=(B, S, 2, hd)), jnp.float32)
+    v_hist = jnp.asarray(r.normal(size=(B, S, 2, hd)), jnp.float32)
+    q_new = jnp.asarray(r.normal(size=(B, 1, 2, hd)), jnp.float32)
+    k_new = jnp.asarray(r.normal(size=(B, 1, 2, hd)), jnp.float32)
+    v_new = jnp.asarray(r.normal(size=(B, 1, 2, hd)), jnp.float32)
+
+    length = jnp.int32(S - 4)
+    cache = KVCacheSlice(k=k_hist, v=v_hist)
+    out, _ = decode_attend(q_new, cache, k_new, v_new, dims, length, kv_chunk=8)
+
+    # reference: full attention over the first `length` entries + the new one
+    k_full = jnp.concatenate([k_hist[:, : S - 4], k_new], axis=1)
+    v_full = jnp.concatenate([v_hist[:, : S - 4], v_new], axis=1)
+    pos = jnp.broadcast_to(jnp.arange(S - 3, dtype=jnp.int32), (B, S - 3))
+    qpos = jnp.full((B, 1), S - 4, jnp.int32)
+    ref = _attend_dense(q_new, k_full, v_full, dims, qpos, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_chunked_equals_recurrent():
+    dims = SSMDims(d_model=32, d_inner=64, head_dim=16, d_state=8, n_groups=2, chunk=8)
+    kg = jax.random.split(jax.random.key(2), 4)
+    params = {
+        "in_proj": 0.3 * jax.random.normal(kg[0], (32, dims.in_proj_out)),
+        "conv_w": 0.3 * jax.random.normal(kg[1], (4, dims.conv_channels)),
+        "conv_b": jnp.zeros((dims.conv_channels,)),
+        "A_log": jnp.log(jnp.arange(1, dims.n_heads + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((dims.n_heads,)),
+        "D": jnp.ones((dims.n_heads,)),
+        "out_proj": 0.3 * jax.random.normal(kg[2], (64, 32)),
+    }
+    x = jax.random.normal(kg[3], (2, 16, 32))
+    y_full, h_full, _tail = ssd_forward(x, params, dims)
+    st = SSMState(
+        h=jnp.zeros((2, dims.n_heads, 8, 16)),
+        conv=jnp.zeros((2, 3, dims.conv_channels)),
+    )
+    ys = []
+    for t in range(16):
+        y_t, st = ssd_decode_step(x[:, t : t + 1, :], st, params, dims)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_seq), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(st.h), atol=1e-4)
+
+
+def test_ssd_conv_tail_continuation():
+    """Prefill conv tail + decode step == longer full forward."""
+    dims = SSMDims(d_model=16, d_inner=32, head_dim=8, d_state=4, n_groups=1, chunk=4)
+    kg = jax.random.split(jax.random.key(5), 4)
+    params = {
+        "in_proj": 0.3 * jax.random.normal(kg[0], (16, dims.in_proj_out)),
+        "conv_w": 0.3 * jax.random.normal(kg[1], (4, dims.conv_channels)),
+        "conv_b": jnp.zeros((dims.conv_channels,)),
+        "A_log": jnp.log(jnp.arange(1, dims.n_heads + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((dims.n_heads,)),
+        "D": jnp.ones((dims.n_heads,)),
+        "out_proj": 0.3 * jax.random.normal(kg[2], (32, 16)),
+    }
+    x = jax.random.normal(kg[3], (1, 12, 16))
+    y_all, h_all, _ = ssd_forward(x, params, dims)
+    y_pre, h_pre, tail = ssd_forward(x[:, :8, :], params, dims)
+    st = SSMState(h=h_pre, conv=tail)
+    ys = []
+    for t in range(8, 12):
+        y_t, st = ssd_decode_step(x[:, t : t + 1, :], st, params, dims)
+        ys.append(y_t)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(ys, 1)), np.asarray(y_all[:, 8:, :]), atol=1e-4
+    )
+
+
+def test_moe_capacity_drops_renormalize():
+    dims = MoEDims(n_experts=4, n_experts_pad=4, top_k=2, capacity_factor=0.25)
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(2, 8, 16)), jnp.float32)
+    rw = jnp.asarray(r.normal(size=(16, 4)), jnp.float32)
+    wg = jnp.asarray(r.normal(size=(4, 16, 32)) * 0.1, jnp.float32)
+    wu = jnp.asarray(r.normal(size=(4, 16, 32)) * 0.1, jnp.float32)
+    wd = jnp.asarray(r.normal(size=(4, 32, 16)) * 0.1, jnp.float32)
+    out, aux = moe_block(x, rw, wg, wu, wd, dims)
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) > 0
+
+
+def test_moe_padded_experts_never_selected():
+    dims = MoEDims(n_experts=3, n_experts_pad=4, top_k=3, capacity_factor=4.0)
+    r = np.random.default_rng(1)
+    x = jnp.asarray(r.normal(size=(1, 16, 8)), jnp.float32)
+    rw = jnp.asarray(r.normal(size=(8, 4)), jnp.float32)
+    # make pad expert's weights enormous: if it were ever selected the
+    # output would blow up
+    wg = jnp.asarray(np.concatenate([r.normal(size=(3, 8, 16)) * 0.1,
+                                     np.full((1, 8, 16), 1e6)]), jnp.float32)
+    wu = jnp.asarray(np.concatenate([r.normal(size=(3, 8, 16)) * 0.1,
+                                     np.full((1, 8, 16), 1e6)]), jnp.float32)
+    wd = jnp.asarray(np.concatenate([r.normal(size=(3, 16, 8)) * 0.1,
+                                     np.full((1, 16, 8), 1e6)]), jnp.float32)
+    out, _ = moe_block(x, rw, wg, wu, wd, dims)
+    assert float(jnp.max(jnp.abs(out))) < 1e3

@@ -1,0 +1,116 @@
+"""PQ semantics vs the numpy oracle: exact schedules bit-match, relaxed
+schedules satisfy the SprayList envelope + multiset conservation."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.pqueue import ops as O
+from repro.core.pqueue.ref import RefPQ
+from repro.core.pqueue.schedules import Schedule
+from repro.core.pqueue.state import INF_KEY, check_invariants, make_state
+
+
+@pytest.mark.parametrize("S,C,B", [(8, 64, 16), (4, 128, 32), (16, 32, 8)])
+def test_strict_matches_oracle(S, C, B):
+    rng = np.random.default_rng(0)
+    st, ref = make_state(S, C), RefPQ(S, C)
+    for step in range(12):
+        keys = rng.integers(0, 10000, B).astype(np.int32)
+        vals = rng.integers(0, 100, B).astype(np.int32)
+        st, dropped = O.insert(st, jnp.asarray(keys), jnp.asarray(vals))
+        assert int(jnp.sum(dropped)) == ref.insert_batch(keys, vals)
+        ok, msg = check_invariants(st)
+        assert ok, msg
+
+        n_del = int(rng.integers(0, B))
+        res = O.delete_min(st, B, schedule=Schedule.STRICT_FLAT, active=n_del)
+        st = res.state
+        rk, rv = ref.delete_min_exact(n_del)
+        got_k = np.asarray(res.keys)[: int(res.n_out)]
+        got_v = np.asarray(res.vals)[: int(res.n_out)]
+        assert int(res.n_out) == len(rk)
+        np.testing.assert_array_equal(got_k, rk)
+        np.testing.assert_array_equal(got_v, rv)
+        ok, msg = check_invariants(st)
+        assert ok, msg
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(st.keys[st.keys < INF_KEY]).ravel()),
+        ref.key_multiset(),
+    )
+
+
+def _filled(S=8, C=64, n=200, seed=3):
+    rng = np.random.default_rng(seed)
+    st = make_state(S, C)
+    ref = RefPQ(S, C)
+    keys = rng.integers(0, 5000, n).astype(np.int32)
+    vals = rng.integers(0, 99, n).astype(np.int32)
+    st, _ = O.insert(st, jnp.asarray(keys), jnp.asarray(vals))
+    ref.insert_batch(keys, vals)
+    return st, ref
+
+
+def test_exact_schedules_agree():
+    """STRICT_FLAT == HIER == FFWD — the 'same structure, different access
+    path' property that makes SmartPQ transitions free."""
+    st, _ = _filled()
+    a = O.delete_min(st, 8, schedule=Schedule.STRICT_FLAT, active=8)
+    b = O.delete_min(st, 8, schedule=Schedule.HIER, active=8, npods=4)
+    c = O.delete_min(st, 8, schedule=Schedule.FFWD, active=8)
+    for res in (b, c):
+        np.testing.assert_array_equal(np.asarray(a.keys), np.asarray(res.keys))
+        np.testing.assert_array_equal(np.asarray(a.vals), np.asarray(res.vals))
+        np.testing.assert_array_equal(
+            np.asarray(a.state.keys), np.asarray(res.state.keys)
+        )
+
+
+@pytest.mark.parametrize(
+    "variant", [Schedule.SPRAY_HERLIHY, Schedule.SPRAY_FRASER, Schedule.LOCAL]
+)
+def test_relaxed_envelope_and_conservation(variant):
+    st, ref = _filled()
+    res = O.delete_min(st, 8, schedule=variant, active=8, rng=jax.random.key(42))
+    got = np.asarray(res.keys)[: int(res.n_out)]
+    if variant != Schedule.LOCAL:
+        ok, msg = ref.check_spray_result(got, 8)
+        assert ok, msg
+    assert ref.remove_multiset(got), "returned keys not present in queue"
+    rem = np.sort(np.asarray(res.state.keys[res.state.keys < INF_KEY]).ravel())
+    np.testing.assert_array_equal(rem, ref.key_multiset())
+    ok, msg = check_invariants(res.state)
+    assert ok, msg
+
+
+def test_mixed_op_batch_linearization():
+    st, ref = _filled()
+    rng = np.random.default_rng(7)
+    ops = rng.integers(0, 2, 16).astype(np.int32)
+    keys = rng.integers(0, 5000, 16).astype(np.int32)
+    vals = rng.integers(0, 99, 16).astype(np.int32)
+    r = O.apply_op_batch(
+        st, jnp.asarray(ops), jnp.asarray(keys), jnp.asarray(vals),
+        schedule=Schedule.STRICT_FLAT,
+    )
+    ref.insert_batch(keys, vals, mask=ops == O.OP_INSERT)
+    rk, _ = ref.delete_min_exact(int((ops == O.OP_DELETE_MIN).sum()))
+    np.testing.assert_array_equal(
+        np.asarray(r.deleted_keys)[: int(r.n_deleted)], rk
+    )
+
+
+def test_empty_queue_delete():
+    st = make_state(4, 16)
+    res = O.delete_min(st, 8, schedule=Schedule.STRICT_FLAT, active=8)
+    assert int(res.n_out) == 0
+    assert np.all(np.asarray(res.keys) == INF_KEY)
+
+
+def test_capacity_overflow_reported():
+    st = make_state(2, 4)  # tiny capacity
+    keys = jnp.arange(32, dtype=jnp.int32)
+    st, dropped = O.insert(st, keys, jnp.zeros(32, jnp.int32))
+    assert int(st.total_size) == 8
+    assert int(jnp.sum(dropped)) == 32 - 8

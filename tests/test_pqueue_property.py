@@ -1,0 +1,104 @@
+"""Hypothesis property tests — the queue's invariants under arbitrary
+workloads (paper-level guarantees, machine-checked)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pqueue import ops as O
+from repro.core.pqueue.ref import RefPQ
+from repro.core.pqueue.schedules import Schedule, spray_bound
+from repro.core.pqueue.state import INF_KEY, check_invariants, make_state
+
+S, C, B = 4, 32, 8  # fixed shapes keep jit cache warm across examples
+
+op_batch = st.lists(
+    st.tuples(st.integers(0, 1), st.integers(0, 999)), min_size=1, max_size=6
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(batches=st.lists(op_batch, min_size=1, max_size=5), seed=st.integers(0, 2**20))
+def test_strict_linearizes_like_oracle(batches, seed):
+    """I3: any interleaving of batched insert/deleteMin matches the oracle's
+    inserts-then-deletes linearization, element for element."""
+    stq, ref = make_state(S, C), RefPQ(S, C)
+    for batch in batches:
+        ops = np.array([o for o, _ in batch] + [0] * (B - len(batch)), np.int32)
+        keys = np.array([k for _, k in batch] + [INF_KEY] * (B - len(batch)), np.int32)
+        # pad lanes are invalid inserts (key == INF)
+        r = O.apply_op_batch(
+            stq, jnp.asarray(ops), jnp.asarray(keys), jnp.asarray(keys % 97),
+            schedule=Schedule.STRICT_FLAT, rng=jax.random.key(seed),
+        )
+        stq = r.state
+        ref.insert_batch(keys, keys % 97, mask=(ops == 0) & (keys < INF_KEY))
+        rk, _ = ref.delete_min_exact(int(((ops == 1)).sum()))
+        np.testing.assert_array_equal(
+            np.asarray(r.deleted_keys)[: int(r.n_deleted)], rk
+        )
+        ok, msg = check_invariants(stq)
+        assert ok, msg
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(stq.keys[stq.keys < INF_KEY]).ravel()),
+        ref.key_multiset(),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    keys=st.lists(st.integers(0, 999), min_size=8, max_size=40),
+    m_del=st.integers(1, B),
+    seed=st.integers(0, 2**20),
+)
+def test_spray_envelope(keys, m_del, seed):
+    """Every spray-returned key ranks within spray_bound(S, m) of the head,
+    and the multiset is conserved."""
+    stq, ref = make_state(S, C), RefPQ(S, C)
+    arr = np.asarray(keys[: 4 * B], np.int32)
+    for i in range(0, len(arr), B):
+        chunk = arr[i : i + B]
+        pad = np.full(B - len(chunk), INF_KEY, np.int32)
+        kb = np.concatenate([chunk, pad])
+        stq, _ = O.insert(stq, jnp.asarray(kb), jnp.asarray(kb % 97))
+        ref.insert_batch(kb, kb % 97)
+    res = O.delete_min(
+        stq, B, schedule=Schedule.SPRAY_HERLIHY, active=m_del,
+        rng=jax.random.key(seed),
+    )
+    got = np.asarray(res.keys)[: int(res.n_out)]
+    ok, msg = ref.check_spray_result(got, B)
+    assert ok, msg
+    assert ref.remove_multiset(got)
+    rem = np.sort(np.asarray(res.state.keys[res.state.keys < INF_KEY]).ravel())
+    np.testing.assert_array_equal(rem, ref.key_multiset())
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 60), seed=st.integers(0, 2**20))
+def test_delete_all_returns_sorted(n, seed):
+    """Draining the whole queue with exact deletes yields a global sort."""
+    rng = np.random.default_rng(seed)
+    arr = rng.integers(0, 500, n).astype(np.int32)
+    stq = make_state(S, C)
+    for i in range(0, n, B):
+        chunk = arr[i : i + B]
+        kb = np.concatenate([chunk, np.full(B - len(chunk), INF_KEY, np.int32)])
+        stq, _ = O.insert(stq, jnp.asarray(kb), jnp.asarray(kb))
+    out = []
+    for _ in range(-(-n // B)):
+        res = O.delete_min(stq, B, schedule=Schedule.STRICT_FLAT, active=B)
+        stq = res.state
+        out.extend(np.asarray(res.keys)[: int(res.n_out)].tolist())
+    np.testing.assert_array_equal(np.asarray(out), np.sort(arr))
+    assert int(stq.total_size) == 0
+
+
+def test_spray_bound_monotone():
+    for m in (1, 8, 64):
+        prev = 0
+        for S_ in (2, 4, 16, 64, 256):
+            b = spray_bound(S_, m)
+            assert b >= prev or b >= m
+            prev = b

@@ -1,0 +1,54 @@
+"""Serving substrate: SmartPQ scheduler + engine end-to-end on CPU."""
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs.registry import reduced_config
+from repro.models.registry import build_model
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.scheduler import Request, SmartPQScheduler
+
+
+def test_scheduler_priority_order():
+    """Interactive (slo 0) requests dispatch before batch (slo 2) ones."""
+    sched = SmartPQScheduler(batch_size=32)
+    reqs = [Request(uid=i, prompt_len=64, max_new_tokens=4, slo_class=2)
+            for i in range(6)]
+    reqs += [Request(uid=100 + i, prompt_len=64, max_new_tokens=4, slo_class=0)
+             for i in range(2)]
+    got = sched.tick(reqs, n_dispatch=0)  # enqueue only
+    assert got == []
+    out = sched.tick([], n_dispatch=4)
+    uids = [r.uid for r in out]
+    assert set(uids[:2]) == {100, 101}, f"interactive first, got {uids}"
+
+
+def test_scheduler_drains():
+    sched = SmartPQScheduler(batch_size=16)
+    reqs = [Request(uid=i, prompt_len=8, max_new_tokens=2) for i in range(20)]
+    dispatched = []
+    dispatched += [r.uid for r in sched.tick(reqs[:10], 4)]
+    dispatched += [r.uid for r in sched.tick(reqs[10:], 8)]
+    for _ in range(10):
+        dispatched += [r.uid for r in sched.tick([], 8)]
+        if sched.pending == 0:
+            break
+    assert sorted(dispatched) == list(range(20))
+    assert sched.pending == 0
+
+
+@pytest.mark.slow
+def test_engine_end_to_end():
+    cfg = reduced_config("llama3.2-3b")
+    model = build_model(cfg, remat=False)
+    params, _ = model.init(jax.random.key(0))
+    eng = ServeEngine(cfg, params, EngineConfig(batch_size=4, max_seq=32))
+    # bursty arrivals then drain — the workload pattern that exercises the
+    # scheduler's adaptive mode switching
+    workload = [[Request(uid=i * 3 + j, prompt_len=8, max_new_tokens=4)
+                 for j in range(3)] for i in range(4)]
+    summary = eng.run(workload, max_steps=200)
+    assert summary["completed"] == 12
+    assert all(len(v) > 0 for v in eng.outputs.values())
+    assert len(summary["mode_trace"]) > 0

@@ -1,0 +1,133 @@
+"""SmartPQ adaptive behavior — the paper's §3 contributions."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.pqueue.ops import OP_DELETE_MIN, OP_INSERT
+from repro.core.pqueue.state import INF_KEY
+from repro.core.smartpq import (
+    MODE_AWARE,
+    MODE_OBLIVIOUS,
+    SmartPQ,
+    SmartPQConfig,
+)
+
+CFG = SmartPQConfig(num_shards=8, capacity=512, npods=2, decision_interval=2)
+
+
+def _batches(rng, n, B, ins_frac, key_range=1 << 20):
+    for i in range(n):
+        ops = (rng.random(B) > ins_frac).astype(np.int32)
+        keys = rng.integers(0, key_range, B).astype(np.int32)
+        yield jnp.asarray(ops), jnp.asarray(keys), jnp.zeros(B, jnp.int32)
+
+
+def test_adapts_to_contention_change():
+    """Insert burst -> oblivious; delete storm on a small queue -> aware."""
+    pq = SmartPQ(CFG)
+    carry = pq.init()
+    step = jax.jit(pq.step)
+    rng = np.random.default_rng(1)
+    key = jax.random.key(0)
+    modes = []
+    for phase_frac in (0.95, 0.05):
+        for ops, keys, vals in _batches(rng, 20, 32, phase_frac):
+            key, sub = jax.random.split(key)
+            carry, _ = step(carry, ops, keys, vals, sub, 512)
+            modes.append(int(carry.stats.mode))
+    assert MODE_OBLIVIOUS in modes[:20], "insert phase should run oblivious"
+    assert MODE_AWARE in modes[20:], "delete storm should trigger delegation"
+    assert int(carry.stats.transitions) >= 1
+
+
+def test_zero_copy_transition():
+    """Key idea 3: the mode flip changes NO queue data — state before a
+    decision step equals state after it minus exactly the batch effects.
+    We verify by running the same batch under both fixed modes from the
+    same state: the underlying representation is identical (same pytree
+    shapes, same sharding, same buffers semantics)."""
+    pq = SmartPQ(CFG)
+    carry = pq.init()
+    rng = np.random.default_rng(2)
+    key = jax.random.key(1)
+    # fill
+    step = jax.jit(pq.step)
+    for ops, keys, vals in _batches(rng, 5, 32, 1.0):
+        key, sub = jax.random.split(key)
+        carry, _ = step(carry, ops, keys, vals, sub, 512)
+
+    mode_steps = pq.make_mode_steps()
+    ops = jnp.full((32,), OP_DELETE_MIN, jnp.int32)
+    keys = jnp.full((32,), INF_KEY, jnp.int32)
+    vals = jnp.zeros((32,), jnp.int32)
+    r_obl = mode_steps[MODE_OBLIVIOUS](carry.state, ops, keys, vals, key)
+    r_aw = mode_steps[MODE_AWARE](carry.state, ops, keys, vals, key)
+    # identical state layout, identical multiset semantics
+    assert jax.tree.structure(r_obl.state) == jax.tree.structure(r_aw.state)
+    for a, b in zip(jax.tree.leaves(r_obl.state), jax.tree.leaves(r_aw.state)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    # conservation: both removed the same NUMBER of elements
+    assert int(r_obl.n_out) == int(r_aw.n_out)
+
+
+def test_aware_mode_exact_oblivious_relaxed():
+    """Aware (hier) returns the true minima; oblivious (spray) stays within
+    the envelope — on the same starting state."""
+    from repro.core.pqueue.ref import RefPQ
+    from repro.core.pqueue import ops as O
+
+    pq = SmartPQ(CFG)
+    carry = pq.init()
+    rng = np.random.default_rng(3)
+    key = jax.random.key(2)
+    step = jax.jit(pq.step)
+    ref = RefPQ(CFG.num_shards, CFG.capacity)
+    for ops, keys, vals in _batches(rng, 6, 32, 1.0, key_range=4096):
+        key, sub = jax.random.split(key)
+        carry, _ = step(carry, ops, keys, vals, sub, 512)
+        ref.insert_batch(np.asarray(keys), np.asarray(vals),
+                         mask=np.asarray(ops) == OP_INSERT)
+
+    mode_steps = pq.make_mode_steps()
+    ops = jnp.full((16,), OP_DELETE_MIN, jnp.int32)
+    keys = jnp.full((16,), INF_KEY, jnp.int32)
+    r_aw = mode_steps[MODE_AWARE](carry.state, ops, keys, jnp.zeros(16, jnp.int32), key)
+    exact_k, _ = ref.delete_min_exact(16)
+    np.testing.assert_array_equal(np.asarray(r_aw.keys)[: int(r_aw.n_out)], exact_k)
+
+    ref2 = RefPQ(CFG.num_shards, CFG.capacity)
+    ref2._items = list(ref._items)  # post-delete state? use fresh oracle
+    r_ob = mode_steps[MODE_OBLIVIOUS](
+        carry.state, ops, keys, jnp.zeros(16, jnp.int32), key
+    )
+    got = np.asarray(r_ob.keys)[: int(r_ob.n_out)]
+    # envelope vs the PRE-delete oracle
+    ref3 = RefPQ(CFG.num_shards, CFG.capacity)
+    ref3._items = sorted(ref._items + list(zip(exact_k.tolist(),
+                                               [0]*len(exact_k),
+                                               range(len(exact_k)),
+                                               [0]*len(exact_k))))
+    ok, msg = ref3.check_spray_result(got, 16)
+    assert ok, msg
+
+
+def test_neutral_keeps_current_mode():
+    pq = SmartPQ(CFG)
+    carry = pq.init()
+    # force mode AWARE then feed a neutral-ish workload: mode must not flip
+    # unless the tree says oblivious/aware explicitly (hysteresis).
+    stats = carry.stats._replace(mode=jnp.int32(MODE_AWARE))
+    carry = carry._replace(stats=stats)
+    step = jax.jit(pq.step)
+    rng = np.random.default_rng(4)
+    key = jax.random.key(3)
+    flips = 0
+    prev = MODE_AWARE
+    for ops, keys, vals in _batches(rng, 10, 32, 0.5):
+        key, sub = jax.random.split(key)
+        carry, _ = step(carry, ops, keys, vals, sub, 8)
+        m = int(carry.stats.mode)
+        flips += int(m != prev)
+        prev = m
+    assert flips <= 2, "mode oscillation under steady workload"
