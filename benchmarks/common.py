@@ -123,16 +123,19 @@ def smartpq_throughput_mops(workload: PQWorkload, steps: int = 12,
     carry = carry2
     t0 = time.perf_counter()
     done = 0
+    mode_trace = []
     for _ in range(steps):
         ops, keys, vals = workload.op_batch(rng)
         key, sub = jax.random.split(key)
         carry, _ = step(carry, ops, keys, vals, sub, workload.num_clients)
         done += workload.num_clients
+        mode_trace.append(carry.stats.mode)  # device value: no mid-loop sync
     jax.block_until_ready(carry.state.keys)
     dt = time.perf_counter() - t0
     return {
         "mops": done / dt / 1e6,
         "mode": int(carry.stats.mode),
+        "modes_seen": sorted({int(m) for m in mode_trace}),
         "transitions": int(carry.stats.transitions),
         "pq": pq,
         "carry": carry,

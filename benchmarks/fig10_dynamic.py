@@ -65,6 +65,7 @@ def _run_trace(name, phases, steps_per_phase=6, quick=False):
     results = {}
     for label, sched in (
         ("oblivious", Schedule.SPRAY_HERLIHY),
+        ("multiqueue", Schedule.MULTIQ),
         ("nuddle", Schedule.HIER),
     ):
         tot_ops, tot_t = 0, 0.0
@@ -80,22 +81,24 @@ def _run_trace(name, phases, steps_per_phase=6, quick=False):
     pq = SmartPQ(SmartPQConfig(num_shards=shards, capacity=cap, npods=2,
                                decision_interval=2))
     tot_ops, tot_t, transitions = 0, 0.0, 0
-    s = None
+    modes_seen = set()
     for ph in phases:
         w = PQWorkload(size=8192, num_shards=shards, capacity=cap, npods=2, **ph)
         s = smartpq_throughput_mops(w, steps=steps_per_phase, pq=pq)
         tot_ops += ph["num_clients"] * steps_per_phase
         tot_t += ph["num_clients"] * steps_per_phase / (s["mops"] * 1e6)
         transitions = s["transitions"]
+        modes_seen.update(s["modes_seen"])
     results["smartpq"] = tot_ops / tot_t / 1e6
 
-    best_fixed = max(results["oblivious"], results["nuddle"])
-    for label in ("oblivious", "nuddle", "smartpq"):
+    best_fixed = max(results[k] for k in ("oblivious", "multiqueue", "nuddle"))
+    for label in ("oblivious", "multiqueue", "nuddle", "smartpq"):
         emit(
             f"{name}/{label}", 1.0 / results[label],
             f"mops={results[label]:.2f}"
             + (f";vs_best_fixed={results['smartpq'] / best_fixed:.2f}"
-               f";transitions={transitions}" if label == "smartpq" else ""),
+               f";transitions={transitions}"
+               f";modes_seen={sorted(modes_seen)}" if label == "smartpq" else ""),
         )
 
 

@@ -1,9 +1,10 @@
 """Figure 9: the full implementation cast across sizes x op mixes.
 
-Six implementations (paper's evaluation set, DESIGN.md mapping):
+Seven implementations (paper's evaluation set + the MultiQueue mode,
+DESIGN.md mapping):
   lotan_shavit -> STRICT_FLAT, alistarh_fraser -> SPRAY_FRASER,
   alistarh_herlihy -> SPRAY_HERLIHY, ffwd -> FFWD, Nuddle -> HIER,
-  SmartPQ -> adaptive."""
+  multiqueue -> MULTIQ (Williams & Sanders), SmartPQ -> adaptive."""
 
 from benchmarks.common import (
     PQWorkload,
@@ -19,6 +20,7 @@ CAST = [
     ("alistarh_herlihy", Schedule.SPRAY_HERLIHY),
     ("ffwd", Schedule.FFWD),
     ("nuddle", Schedule.HIER),
+    ("multiqueue", Schedule.MULTIQ),
 ]
 
 

@@ -13,7 +13,13 @@ def main() -> None:
                     help="reduced sweep sizes (CI mode)")
     ap.add_argument(
         "--only", default=None,
-        help="comma list of: fig1,fig7,fig9,fig10,classifier,roofline,kernels",
+        help="comma list of: fig1,fig7,fig9,fig10,fig12,classifier,"
+             "roofline,kernels,rank_error",
+    )
+    ap.add_argument(
+        "--schedule", default="all",
+        help="relaxed schedule for the rank_error suite "
+             "(spray_herlihy | spray_fraser | multiq | all)",
     )
     args, _ = ap.parse_known_args()
 
@@ -25,6 +31,7 @@ def main() -> None:
         fig10_dynamic,
         fig12_cpu_adaptive,
         kernels_bench,
+        multiq_rank_error,
         roofline,
     )
 
@@ -37,6 +44,9 @@ def main() -> None:
         "classifier": classifier_eval.run,
         "kernels": kernels_bench.run,
         "roofline": roofline.run,
+        "rank_error": lambda quick=False: multiq_rank_error.run(
+            quick=quick, schedule=args.schedule
+        ),
     }
     selected = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

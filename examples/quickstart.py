@@ -33,7 +33,7 @@ def main():
         key, sub = jax.random.split(key)
         carry, _ = step(carry, ops, keys, jnp.arange(B, dtype=jnp.int32), sub, 512)
     print(f"  size={int(carry.state.total_size)} mode={int(carry.stats.mode)} "
-          f"(0=oblivious/spray, 1=aware/Nuddle)")
+          f"(0=oblivious/spray, 1=multiq, 2=aware/Nuddle)")
 
     print("phase 2: deleteMin storm (high contention -> aware mode expected)")
     drained = []

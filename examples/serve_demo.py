@@ -55,7 +55,7 @@ def main():
     trace = "".join(str(m) for m in summary["mode_trace"])
     print(f"completed: {summary['completed']}/{total} in {summary['steps']} steps "
           f"({summary['wall_s']:.1f}s)")
-    print(f"scheduler mode trace (0=oblivious, 1=Nuddle): {trace}")
+    print(f"scheduler mode trace (0=oblivious, 1=multiq, 2=Nuddle): {trace}")
     print(f"PQ mode transitions: {summary['pq_transitions']}")
     assert summary["completed"] == total
     sample = next(iter(engine.outputs.items()))

@@ -2,9 +2,12 @@ from repro.core.classifier.tree import DecisionTree, train_tree  # noqa: F401
 from repro.core.classifier.inference import PackedTree, pack_tree, tree_predict  # noqa: F401
 from repro.core.classifier.features import (  # noqa: F401
     FEATURE_NAMES,
+    MODE_NAMES,
     NUM_CLASSES,
+    NUM_MODES,
     CLASS_NEUTRAL,
     CLASS_OBLIVIOUS,
+    CLASS_MULTIQ,
     CLASS_AWARE,
     featurize,
 )
@@ -12,5 +15,6 @@ from repro.core.classifier.cost_model import (  # noqa: F401
     HardwareModel,
     TPU_V5E,
     schedule_cost,
+    mode_throughputs,
     best_mode,
 )

@@ -15,15 +15,27 @@ terms the roofline analysis uses (DESIGN.md §5-6):
     — the message-passing analogue of the head-contention the paper's
     oblivious mode suffers under deleteMin-dominated load.
 
+  MULTIQ (= relaxed MultiQueue, Williams & Sanders 2021): collective-free
+    like spray, but every deleter probes TWO sub-queue cached minima and
+    pops from the smaller — two-choice load balancing shrinks the rank-error
+    envelope from spray's m + S*(log2 S + 1)^2 to m + O(S log log S)
+    (`multiq_bound`).  Pays for it with double the probe traffic per
+    deleter, so on waste-free workloads spray stays marginally cheaper.
+
   AWARE (= hier, the Nuddle delegation): exact two-phase tournament.  Pays
     an intra-pod gather (fast ICI), a pod-axis candidate exchange (slow
     tier — the compact request/response frames of Nuddle), and two
     collective launch latencies; delivers exact semantics (no waste).
 
-Qualitative regimes reproduced (paper Figs. 1, 7, 9):
-  * insert-dominated                  -> OBLIVIOUS (delegation latency wasted)
-  * deleteMin-dominated, small/medium
-    queues or many clients            -> AWARE (contention analogue)
+Qualitative regimes reproduced (paper Figs. 1, 7, 9 + the MultiQueue
+mixed-contention regime of Engineering MultiQueues):
+  * insert-dominated / huge queues    -> OBLIVIOUS (delegation latency wasted,
+                                         relaxation free, fewest probes)
+  * deleteMin-dominated, queue deep
+    enough to absorb the two-choice
+    envelope but not the spray one    -> MULTIQ (mixed-contention regime)
+  * deleteMin-dominated, small queues
+    or many clients                   -> AWARE (contention analogue)
   * few clients / single pod          -> NEUTRAL band (paper §3.1.2 (1)(i))
 
 Divergence from the paper (documented in EXPERIMENTS.md): with very large
@@ -41,10 +53,12 @@ import math
 
 from repro.core.classifier.features import (
     CLASS_AWARE,
+    CLASS_MULTIQ,
     CLASS_NEUTRAL,
     CLASS_OBLIVIOUS,
+    NUM_MODES,
 )
-from repro.core.pqueue.schedules import spray_bound
+from repro.core.pqueue.schedules import multiq_bound, spray_bound
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,7 +71,13 @@ class HardwareModel:
     lat_dci: float = 30e-6  # s per cross-pod collective phase
     vpu_rate: float = 1e11  # key compare/merge element-ops per s per chip
     relax_alpha: float = 3.0  # wasted ops per fully-inverted deletion
-    relax_wmax: float = 0.98  # cap on wasted-work fraction
+    # Cap on the wasted-work fraction.  At envelope saturation (rank error
+    # ~1) essentially every relaxed deletion returns junk the application
+    # re-queues, so the cap must sit close enough to 1 that a saturated
+    # relaxed mode cannot out-throughput the exact mode on raw step speed
+    # alone — otherwise the delete-storm regime (paper Fig. 9, deleteMin-
+    # dominated) mislabels as OBLIVIOUS.
+    relax_wmax: float = 0.999
     bytes_per_item: int = 8  # key + value
     cand_slack: float = 1.5  # expected-case candidate oversampling factor
 
@@ -112,10 +132,13 @@ def _insert_cost(w: Workload, hw: HardwareModel, g: MeshGeom) -> float:
     return t_route + t_merge
 
 
-def _rank_error(w: Workload, b_del: float) -> float:
-    """Expected relative rank displacement of a spray deletion, in [0, 1]."""
+def _rank_error(w: Workload, b_del: float, mode: int = CLASS_OBLIVIOUS) -> float:
+    """Expected relative rank displacement of a relaxed deletion, in [0, 1].
+    The envelope is the mode's: spray pays the full O(S log^2 S) window,
+    multiq's two-choice sampling pays only O(S log log S)."""
     S = max(w.num_clients, 1)
-    envelope = spray_bound(S, int(max(b_del, 1)))
+    m = int(max(b_del, 1))
+    envelope = multiq_bound(S, m) if mode == CLASS_MULTIQ else spray_bound(S, m)
     distinct = max(min(w.size, w.key_range), 1)
     dup_discount = max(w.size / distinct, 1.0)  # equal keys are interchangeable
     return min(envelope / max(w.size, 1), 1.0) / dup_discount
@@ -130,6 +153,21 @@ def _delete_cost_oblivious(w: Workload, hw: HardwareModel, g: MeshGeom) -> float
     m_s = b_del / S
     window = m_s + (math.log2(max(S, 2)) + 1) ** 2
     return window * math.log2(max(window, 2)) / hw.vpu_rate
+
+
+def _delete_cost_multiq(w: Workload, hw: HardwareModel, g: MeshGeom) -> float:
+    """Relaxed MultiQueue: collective-free two-choice pops.  Each of the
+    b_del deleters reads TWO cached sub-queue minima and compares (the probe
+    term — double spray's single landing), then the chosen sub-queues serve
+    balanced prefix pops (expected max load m/S + O(log log S))."""
+    b_del = w.num_clients * w.ops_per_client * (1.0 - w.insert_frac)
+    if b_del <= 0:
+        return 0.0
+    S = max(w.num_clients, 1)
+    probes = 2.0 * b_del  # two min-cache reads + one compare per deleter
+    load = b_del / S + math.log2(math.log2(max(S, 4))) + 1.0
+    pops = load * math.log2(max(load, 2.0))
+    return (probes + pops) / hw.vpu_rate
 
 
 def _delete_cost_aware(w: Workload, hw: HardwareModel, g: MeshGeom) -> float:
@@ -182,36 +220,51 @@ def _delete_cost_flat(w: Workload, hw: HardwareModel, g: MeshGeom) -> float:
     return t
 
 
-def _waste_fraction(w: Workload, hw: HardwareModel) -> float:
-    """Fraction of oblivious-mode work lost to priority inversion."""
+def _waste_fraction(
+    w: Workload, hw: HardwareModel, mode: int = CLASS_OBLIVIOUS
+) -> float:
+    """Fraction of a relaxed mode's work lost to priority inversion."""
     b_del = w.num_clients * w.ops_per_client * (1.0 - w.insert_frac)
     if b_del <= 0:
         return 0.0
-    rank_err = _rank_error(w, b_del)
+    rank_err = _rank_error(w, b_del, mode)
     return min(hw.relax_alpha * rank_err * (1.0 - w.insert_frac), hw.relax_wmax)
+
+
+_DELETE_COSTS = {
+    CLASS_OBLIVIOUS: _delete_cost_oblivious,
+    CLASS_MULTIQ: _delete_cost_multiq,
+    CLASS_AWARE: _delete_cost_aware,
+}
+
+_RELAXED_MODES = (CLASS_OBLIVIOUS, CLASS_MULTIQ)  # modes paying inversion waste
 
 
 def schedule_cost(
     mode: int, w: Workload, hw: HardwareModel = TPU_V5E, g: MeshGeom = MeshGeom()
 ) -> float:
-    """Seconds per bulk step for a mode (CLASS_OBLIVIOUS / CLASS_AWARE)."""
-    t_ins = _insert_cost(w, hw, g)
-    if mode == CLASS_OBLIVIOUS:
-        return t_ins + _delete_cost_oblivious(w, hw, g)
-    if mode == CLASS_AWARE:
-        return t_ins + _delete_cost_aware(w, hw, g)
-    raise ValueError(f"no cost for mode {mode}")
+    """Seconds per bulk step for an algorithmic mode (class id < NUM_MODES)."""
+    if mode not in _DELETE_COSTS:
+        raise ValueError(f"no cost for mode {mode}")
+    return _insert_cost(w, hw, g) + _DELETE_COSTS[mode](w, hw, g)
 
 
 def throughput(mode: int, w: Workload, hw=TPU_V5E, g=MeshGeom()) -> float:
-    """*Effective* ops/second — the paper's metric, with oblivious-mode
+    """*Effective* ops/second — the paper's metric, with relaxed-mode
     throughput discounted by the wasted-work fraction (see module doc)."""
     t = schedule_cost(mode, w, hw, g)
     total_ops = w.num_clients * w.ops_per_client
     raw = total_ops / max(t, 1e-12)
-    if mode == CLASS_OBLIVIOUS:
-        raw *= 1.0 - _waste_fraction(w, hw)
+    if mode in _RELAXED_MODES:
+        raw *= 1.0 - _waste_fraction(w, hw, mode)
     return raw
+
+
+def mode_throughputs(
+    w: Workload, hw: HardwareModel = TPU_V5E, g: MeshGeom = MeshGeom()
+) -> tuple:
+    """Effective throughput of every algorithmic mode, indexed by class id."""
+    return tuple(throughput(m, w, hw, g) for m in range(NUM_MODES))
 
 
 def best_mode(
@@ -220,12 +273,12 @@ def best_mode(
     g: MeshGeom = MeshGeom(),
     neutral_band: float = 0.07,
 ) -> int:
-    """Label: argmax-throughput mode, or NEUTRAL inside the tie band.
-    The paper uses an absolute 1.5 Mops/s band (§3.1.2 (4)); a relative band
-    is the scale-free equivalent for a 512-chip mesh."""
-    t_obl = throughput(CLASS_OBLIVIOUS, w, hw, g)
-    t_aw = throughput(CLASS_AWARE, w, hw, g)
-    hi, lo = max(t_obl, t_aw), min(t_obl, t_aw)
-    if hi <= 0 or (hi - lo) / hi < neutral_band:
+    """Label: argmax-throughput mode, or NEUTRAL when the runner-up is inside
+    the tie band.  The paper uses an absolute 1.5 Mops/s band (§3.1.2 (4)); a
+    relative band is the scale-free equivalent for a 512-chip mesh."""
+    ts = mode_throughputs(w, hw, g)
+    order = sorted(range(NUM_MODES), key=lambda m: ts[m], reverse=True)
+    hi, second = ts[order[0]], ts[order[1]]
+    if hi <= 0 or (hi - second) / hi < neutral_band:
         return CLASS_NEUTRAL
-    return CLASS_OBLIVIOUS if t_obl > t_aw else CLASS_AWARE
+    return order[0]

@@ -17,13 +17,9 @@ from repro.core.classifier.cost_model import (
     TPU_V5E,
     Workload,
     best_mode,
-    throughput,
+    mode_throughputs,
 )
-from repro.core.classifier.features import (
-    CLASS_AWARE,
-    CLASS_OBLIVIOUS,
-    featurize,
-)
+from repro.core.classifier.features import featurize
 
 # Paper-aligned sweep values (§4 uses sizes 1K..8M, ranges 2K..200M,
 # threads 1..64; rescaled to a 512-chip fleet).
@@ -52,9 +48,9 @@ def make_test_set(
     n: int = 10780, seed: int = 7, hw=TPU_V5E, geom: MeshGeom = MeshGeom()
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Random off-grid workloads (paper §4.2.1: 10780).  Returns
-    (features, labels, misprediction_cost_basis) where the basis row i is
-    (throughput_oblivious, throughput_aware) for computing the paper's
-    misprediction-cost metric ((X - Y)/Y)."""
+    (features, labels, misprediction_cost_basis) where the basis row i holds
+    the effective throughput of EVERY algorithmic mode (indexed by class id)
+    for computing the paper's misprediction-cost metric ((X - Y)/Y)."""
     rng = np.random.default_rng(seed)
     feats, labels, basis = [], [], []
     for _ in range(n):
@@ -65,7 +61,5 @@ def make_test_set(
         w = Workload(d, z, k, p)
         feats.append(featurize(d, z, k, p))
         labels.append(best_mode(w, hw, geom))
-        basis.append(
-            (throughput(CLASS_OBLIVIOUS, w, hw, geom), throughput(CLASS_AWARE, w, hw, geom))
-        )
+        basis.append(mode_throughputs(w, hw, geom))
     return np.stack(feats), np.asarray(labels, np.int32), np.asarray(basis)

@@ -18,11 +18,20 @@ import numpy as np
 
 FEATURE_NAMES = ("num_clients", "size", "key_range", "insert_frac")
 
-# Class labels — §3.1.2 (1): oblivious / aware / neutral.
+# Class labels — §3.1.2 (1), generalized from the paper's 2-way (oblivious /
+# aware) choice to an N-way mode set.  INVARIANT: classes 0..NUM_MODES-1 are
+# algorithmic modes and double as the `lax.switch` branch index in SmartPQ;
+# CLASS_NEUTRAL is always the LAST class (== NUM_MODES) and means "tie — keep
+# the current mode" (hysteresis, §3.1.2 (1)(ii)).  Adding a mode = append its
+# class id before NEUTRAL, give the cost model a throughput() arm, and give
+# SmartPQConfig.mode_schedules a schedule for it.
 CLASS_OBLIVIOUS = 0  # run the base algorithm directly (spray, collective-free)
-CLASS_AWARE = 1  # delegate: Nuddle pod-hierarchical schedule
-CLASS_NEUTRAL = 2  # tie — keep the current mode (hysteresis, §3.1.2 (1)(ii))
-NUM_CLASSES = 3
+CLASS_MULTIQ = 1  # relaxed MultiQueue: two-choice sampling, bounded rank error
+CLASS_AWARE = 2  # delegate: Nuddle pod-hierarchical schedule
+NUM_MODES = 3
+CLASS_NEUTRAL = NUM_MODES  # tie sentinel — never a switch branch
+NUM_CLASSES = NUM_MODES + 1
+MODE_NAMES = ("oblivious", "multiq", "aware")
 
 
 def featurize(

@@ -16,6 +16,11 @@ what the roofline analysis and the dry-run measure:
   SPRAY       : no collectives; each client pops from its own local shards
                 (hash placement makes local pops a uniform sample of the
                 global population — the SprayList random-walk analogue).
+  MULTIQ      : no collectives; each device runs the two-choice MultiQueue
+                schedule over its own local shards (the sub-queues).  Hash
+                placement again makes the device-local sub-queue population
+                a uniform sample, so the global rank-error envelope is the
+                local one scaled by the device count.
 
 All schedules mutate the SAME device-local state layout `(S_loc, C)` so a
 mode switch never moves queue data (the paper's zero-sync-transition
@@ -56,10 +61,18 @@ class AxisCfg:
         return ((self.pod_axis,) if self.pod_axis else ()) + tuple(self.shard_axes)
 
 
+def _one_axis_size(a: str) -> int:
+    # jax.lax.axis_size is a late addition; psum of the literal 1 is the
+    # long-lived spelling and folds to a static Python int inside shard_map.
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(a)
+    return jax.lax.psum(1, a)
+
+
 def _axis_size(axes: Sequence[str]) -> int:
     n = 1
     for a in axes:
-        n *= jax.lax.axis_size(a)
+        n *= _one_axis_size(a)
     return n
 
 
@@ -67,7 +80,7 @@ def _device_rank(axes: Sequence[str]) -> jnp.ndarray:
     """Row-major rank over the given axes."""
     rank = jnp.int32(0)
     for a in axes:
-        rank = rank * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        rank = rank * _one_axis_size(a) + jax.lax.axis_index(a)
     return rank
 
 
@@ -331,9 +344,24 @@ def delete_spray_dist(
     return res.state, res.keys, res.vals, res.n_out
 
 
+def delete_multiq_dist(
+    state: PQState, m_loc: int, active_loc: jnp.ndarray, rng: jax.Array, cfg: AxisCfg
+) -> Tuple[PQState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """MultiQueue mode: every device serves its local deleters by two-choice
+    sampling over its OWN local shards (the sub-queues), consulting the
+    per-shard min cache.  Like spray, ZERO collectives in the delete path —
+    but the two-choice probe keeps each device's pops within shard-rank <
+    m_loc, so the mode keeps a bounded rank error at mesh scale."""
+    from repro.core.pqueue.schedules import delete_multiq
+
+    res = delete_multiq(state, m_loc, active_loc, rng, npods=1)
+    return res.state, res.keys, res.vals, res.n_out
+
+
 DIST_SCHEDULE_FNS = {
     Schedule.STRICT_FLAT: delete_flat_dist,
     Schedule.HIER: delete_hier_dist,
     Schedule.FFWD: delete_ffwd_dist,
     Schedule.SPRAY_HERLIHY: delete_spray_dist,
+    Schedule.MULTIQ: delete_multiq_dist,
 }

@@ -153,6 +153,40 @@ def topk_of_merged(
     return cand_keys[order], cand_vals[order]
 
 
+def twochoice_pick(
+    shard_mins: jnp.ndarray,  # (S,) cached per-shard minima (INF when empty)
+    choice_a: jnp.ndarray,  # (m,) sampled shard ids
+    choice_b: jnp.ndarray,  # (m,)
+    act: jnp.ndarray,  # (m,) bool — inactive lanes commit nowhere
+    use_kernel: bool | None = None,
+) -> jnp.ndarray:
+    """MULTIQ probe/commit: each lane commits to the sampled shard with the
+    smaller cached min (tie: lower id); returns per-shard commit counts.
+    Kernel path is the gather-free Pallas one-hot formulation."""
+    if use_kernel is None:
+        use_kernel = _kernels_enabled()
+    from repro.kernels.ops import twochoice_counts
+
+    return twochoice_counts(
+        shard_mins, choice_a, choice_b, act, use_kernel=use_kernel
+    )
+
+
+def multiq_select(
+    win_k: jnp.ndarray,  # (S, m) ascending head windows
+    win_v: jnp.ndarray,  # (S, m) payloads
+    take: jnp.ndarray,  # (S,) commit counts (prefix pops)
+    use_kernel: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """m smallest of the masked head windows, ascending — the MULTIQ
+    commit-side tournament (bitonic merge network on TPU)."""
+    if use_kernel is None:
+        use_kernel = _kernels_enabled()
+    from repro.kernels.ops import multiq_select_topm
+
+    return multiq_select_topm(win_k, win_v, take, use_kernel=use_kernel)
+
+
 def count_winners_per_shard(
     cand_keys: jnp.ndarray,  # (S, m) each shard's candidate prefix
     threshold_key: jnp.ndarray,  # () the m-th smallest (winner cutoff)

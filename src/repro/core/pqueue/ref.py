@@ -17,7 +17,10 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core.pqueue.schedules import spray_bound  # noqa: F401  (re-export)
+from repro.core.pqueue.schedules import (  # noqa: F401  (re-export)
+    multiq_bound,
+    spray_bound,
+)
 from repro.core.pqueue.state import INF_KEY
 from repro.utils.hashing import shard_of_key
 
@@ -113,13 +116,46 @@ class RefPQ:
                 )
         return True, "ok"
 
-    def global_envelope_violations(self, returned_keys, m: int) -> Tuple[int, int]:
+    def check_multiq_result(self, returned_keys, m: int) -> Tuple[bool, str]:
+        """Validate a MULTIQ batch AGAINST THE PRE-DELETE STATE.
+
+        Deterministic guarantee of two-choice prefix pops: at most m lanes
+        commit per step, so every returned key sits within the first m
+        entries OF SOME shard — a strictly tighter window than the spray
+        check's m + (ilog2(S)+1)^2 (the probabilistic m + O(S log log S)
+        GLOBAL envelope, `multiq_bound`, is validated statistically by
+        `global_envelope_violations(..., bound=multiq_bound(S, m))`)."""
+        returned_keys = [int(k) for k in returned_keys if k < INF_KEY]
+        if not returned_keys:
+            return True, "empty"
+        per_shard: dict = {}
+        for key, shard, _seq, _v in self._items:
+            per_shard.setdefault(shard, []).append(key)
+        for s in per_shard:
+            per_shard[s].sort()
+        for k in returned_keys:
+            ranks = [
+                keys.index(k) for keys in per_shard.values() if k in keys
+            ]
+            if not ranks:
+                return False, f"key {k} not present pre-delete"
+            if min(ranks) >= m:
+                return False, (
+                    f"key {k} at best shard-rank {min(ranks)} >= window {m}"
+                )
+        return True, "ok"
+
+    def global_envelope_violations(
+        self, returned_keys, m: int, bound: int | None = None
+    ) -> Tuple[int, int]:
         """(violations, total): returned keys beyond the probabilistic
-        global top-spray_bound(S, m) envelope."""
+        global top-`bound` envelope (default: spray_bound(S, m); pass
+        multiq_bound(S, m) for the MULTIQ schedule)."""
         returned_keys = [int(k) for k in returned_keys if k < INF_KEY]
         if not returned_keys:
             return 0, 0
-        bound = spray_bound(self.S, m)
+        if bound is None:
+            bound = spray_bound(self.S, m)
         all_keys = sorted(t[0] for t in self._items)
         if len(all_keys) <= bound:
             return 0, len(returned_keys)

@@ -9,6 +9,8 @@ Nuddle (delegation)         -> HIER               exact       intra-pod gather +
                                                               exchange of npods*m cands
 ffwd (single server)        -> FFWD               exact       tree-funnel to shard 0
 (ablation lower bound)      -> LOCAL              per-shard   none, no global order
+MultiQueue (two-choice,     -> MULTIQ             relaxed     none (min-cache probes)
+ Williams & Sanders)
 
 This module implements the *semantics* vectorized over the full (S, C) state
 (single-controller path used by tests, benchmarks, and the oracle diff);
@@ -37,6 +39,7 @@ class Schedule(enum.IntEnum):
     FFWD = 3  # ffwd analogue (exact, single-server funnel)
     LOCAL = 4  # ablation: per-shard pops, no global order
     SPRAY_FRASER = 5  # alistarh_fraser analogue (relaxed, uniform window)
+    MULTIQ = 6  # MultiQueue analogue (relaxed, two-choice min-cache probes)
 
 
 class DeleteResult(NamedTuple):
@@ -58,6 +61,19 @@ def spray_bound(num_shards: int, m: int) -> int:
     at most ceil(m/S) + (log2 S + 1)^2 entries."""
     per_shard = -(-m // num_shards) + (_ilog2(num_shards) + 1) ** 2
     return min(num_shards * per_shard, 1 << 30)
+
+
+def multiq_bound(num_shards: int, m: int) -> int:
+    """Relaxation envelope of the two-choice MULTIQ deleteMin of batch m.
+
+    Two-choice load balancing bounds the per-shard load at m/S + O(log log S)
+    w.h.p. (balls-into-bins with the power of two choices), and a pop at
+    local rank r has global rank < S*(r+1), so the envelope is
+    m + O(S log log S) — asymptotically tighter than spray_bound's
+    m + O(S log^2 S).  The deterministic (any-rng) fallback is per-shard:
+    every returned key sits within the first m entries of SOME shard."""
+    loglog = _ilog2(_ilog2(max(num_shards, 2)) + 1) + 1
+    return min(m + num_shards * (loglog + 2), 1 << 30)
 
 
 # ---------------------------------------------------------------------------
@@ -210,6 +226,41 @@ def delete_spray_fraser(
     return _spray(state, m, active, rng, adaptive_window=False)
 
 
+def delete_multiq(
+    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
+) -> DeleteResult:
+    """Relaxed MultiQueue (Williams & Sanders): the S shards are the c*S
+    sharded sub-queues; each of the `active` deleters samples TWO of them
+    uniformly, reads their cached minima (`state.shard_mins` — column 0 of
+    the sorted buffers, maintained for free), and commits to the sub-queue
+    whose cached minimum is smaller.  Every chosen sub-queue then serves its
+    deleters from the head — a plain prefix pop, exactly the structure the
+    exact schedules already use, so the removal path is shared.
+
+    No cross-shard coordination of any kind (the oblivious scaling property),
+    but the two-choice probe keeps every pop within shard-rank < m
+    deterministically and within `multiq_bound(S, m)` global rank w.h.p. —
+    the paper's missing mixed-contention mode."""
+    del npods
+    S, C = state.keys.shape
+    k_a, k_b = jax.random.split(rng)
+
+    lane = jnp.arange(m, dtype=jnp.int32)
+    act = lane < jnp.minimum(active, m)
+    choice_a = jax.random.randint(k_a, (m,), 0, S)
+    choice_b = jax.random.randint(k_b, (m,), 0, S)
+    counts = L.twochoice_pick(state.shard_mins, choice_a, choice_b, act)
+    take = jnp.minimum(counts, state.size)
+
+    # Pops are head prefixes: the (S, m) head window masked to `take` feeds
+    # the commit-side tournament (fused mask+merge Pallas kernel on TPU).
+    out_k, out_v = L.multiq_select(state.keys[:, :m], state.vals[:, :m], take)
+
+    keys, vals, size = L.remove_prefix(state.keys, state.vals, state.size, take)
+    n = jnp.sum(take).astype(jnp.int32)
+    return DeleteResult(PQState(keys, vals, size), out_k, out_v, n)
+
+
 def delete_local(
     state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
 ) -> DeleteResult:
@@ -243,4 +294,5 @@ SCHEDULE_FNS = {
     Schedule.FFWD: delete_ffwd,
     Schedule.LOCAL: delete_local,
     Schedule.SPRAY_FRASER: delete_spray_fraser,
+    Schedule.MULTIQ: delete_multiq,
 }

@@ -49,6 +49,17 @@ class PQState:
     def total_size(self) -> jnp.ndarray:
         return jnp.sum(self.size)
 
+    @property
+    def shard_mins(self) -> jnp.ndarray:
+        """(S,) cached per-shard minimum — the MultiQueue min cache.
+
+        Because every shard buffer is kept ascending-sorted (I1) with INF
+        padding (I2), the cache is simply column 0: maintained for free by
+        every insert/delete, never stale, and INF exactly for empty shards.
+        This is what makes the two-choice MULTIQ schedule's probe step a
+        pair of O(1) reads instead of a scan."""
+        return self.keys[:, 0]
+
 
 def make_state(num_shards: int, capacity: int) -> PQState:
     """Empty queue: S shards of capacity C."""

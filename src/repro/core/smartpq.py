@@ -1,8 +1,8 @@
-"""SmartPQ — the paper's adaptive priority queue (§3), TPU form.
+"""SmartPQ — the paper's adaptive priority queue (§3), TPU form, N modes.
 
 Three key ideas of the paper, and where they live here:
-  1. Both algorithmic modes operate on the *same* underlying concurrent
-     structure  ->  both branches of `lax.switch` read/write the identical
+  1. Every algorithmic mode operates on the *same* underlying concurrent
+     structure  ->  all branches of `lax.switch` read/write the identical
      PQState pytree; the sharding never changes with the mode.
   2. A decision mechanism picks the mode  ->  packed decision tree evaluated
      on-device every `decision_interval` steps (paper: every second, host
@@ -10,6 +10,28 @@ Three key ideas of the paper, and where they live here:
   3. Transitions need no synchronization point  ->  the mode is a traced
      int32 in the carry; "switching" is literally the predicate of
      `lax.switch` changing value between two steps of one compiled program.
+
+N-mode architecture (generalized from the paper's 2-mode oblivious/aware
+choice).  The mode set is `SmartPQConfig.mode_schedules`: a tuple of
+`Schedule`s indexed by mode id, which is simultaneously (a) the classifier
+class id, (b) the `lax.switch` branch index, and (c) the `make_mode_steps`
+dict key.  Shipped modes:
+
+    0 MODE_OBLIVIOUS -> SPRAY_HERLIHY  relaxed, collective-free spray
+    1 MODE_MULTIQ    -> MULTIQ         relaxed MultiQueue: two-choice
+                                       min-cache sampling, bounded rank error
+    2 MODE_AWARE     -> HIER           exact Nuddle pod-delegation
+
+Adding a fourth mode (e.g. elimination/combining a la Calciu et al.) is a
+three-step recipe, no decision-plumbing changes:
+  1. implement the schedule in `pqueue.schedules` and register it in
+     `SCHEDULE_FNS` (plus `pqueue.dist` if it needs real collectives);
+  2. append a class id for it in `classifier.features` (before
+     CLASS_NEUTRAL, bumping NUM_MODES) and give `classifier.cost_model` a
+     `_delete_cost_*` arm so training labels exist;
+  3. append its Schedule to `mode_schedules`.  The switch, the stats loop,
+     `make_mode_steps`, and the decision tree all size off NUM_MODES /
+     len(mode_schedules) automatically.
 
 Workload statistics (paper §5's future-work sketch — implemented here): the
 step tracks completed insert/delete counts, min/max requested key, and the
@@ -28,9 +50,11 @@ import numpy as np
 from repro.core.classifier.dataset import make_training_set
 from repro.core.classifier.features import (
     CLASS_AWARE,
+    CLASS_MULTIQ,
     CLASS_NEUTRAL,
     CLASS_OBLIVIOUS,
     NUM_CLASSES,
+    NUM_MODES,
 )
 from repro.core.classifier.inference import PackedTree, pack_tree, tree_predict
 from repro.core.classifier.tree import DecisionTree, train_tree
@@ -39,9 +63,10 @@ from repro.core.pqueue.ops import OP_DELETE_MIN, OP_INSERT, insert
 from repro.core.pqueue.schedules import DeleteResult, Schedule
 from repro.core.pqueue.state import INF_KEY, PQState, make_state
 
-# Mode encoding in the carry (== classifier class ids for OBLIVIOUS/AWARE).
+# Mode encoding in the carry (== classifier class ids == switch branch ids).
 MODE_OBLIVIOUS = CLASS_OBLIVIOUS  # 0: base algorithm directly (spray)
-MODE_AWARE = CLASS_AWARE  # 1: Nuddle delegation (hier)
+MODE_MULTIQ = CLASS_MULTIQ  # 1: relaxed MultiQueue (two-choice sampling)
+MODE_AWARE = CLASS_AWARE  # 2: Nuddle delegation (hier)
 
 
 class SmartPQStats(NamedTuple):
@@ -67,9 +92,20 @@ class SmartPQConfig:
     capacity: int = 4096
     npods: int = 2
     decision_interval: int = 8  # steps between classifier calls
-    oblivious_schedule: Schedule = Schedule.SPRAY_HERLIHY
-    aware_schedule: Schedule = Schedule.HIER
+    # Schedule per mode id — index == classifier class == switch branch.
+    mode_schedules: Tuple[Schedule, ...] = (
+        Schedule.SPRAY_HERLIHY,  # MODE_OBLIVIOUS
+        Schedule.MULTIQ,  # MODE_MULTIQ
+        Schedule.HIER,  # MODE_AWARE
+    )
     initial_mode: int = MODE_OBLIVIOUS  # paper Fig. 8 line 106: default 1
+
+    def __post_init__(self):
+        assert len(self.mode_schedules) == NUM_MODES, (
+            f"mode_schedules must give one Schedule per classifier mode "
+            f"({NUM_MODES}); got {len(self.mode_schedules)} — did you add a "
+            f"mode without appending its class id in classifier.features?"
+        )
 
 
 def _featurize_jnp(
@@ -163,7 +199,8 @@ class SmartPQ:
             n_insert.astype(jnp.float32) / total_ops.astype(jnp.float32),
         )
         pred = tree_predict(self.packed, feats)
-        keep = (~do_decide) | (pred == CLASS_NEUTRAL)
+        # NEUTRAL (and any future >= NUM_MODES sentinel) keeps the mode.
+        keep = (~do_decide) | (pred >= NUM_MODES)
         new_mode = jnp.where(keep, stats.mode, pred).astype(jnp.int32)
         transitions = stats.transitions + (new_mode != stats.mode).astype(jnp.int32)
         # Reset windowed op counters after each decision.
@@ -184,7 +221,7 @@ class SmartPQ:
 
         res: DeleteResult = jax.lax.switch(
             new_mode,
-            [run(c.oblivious_schedule), run(c.aware_schedule)],
+            [run(s) for s in c.mode_schedules],
             (state, rng),
         )
 
@@ -202,7 +239,7 @@ class SmartPQ:
     # -- host-dispatch variant -------------------------------------------------
 
     def make_mode_steps(self):
-        """Two independently-jitted per-mode step functions + the host-side
+        """One independently-jitted step function per mode + the host-side
         predictor.  State layout is identical between them, so the host
         dispatcher can flip modes between calls with zero copies — the same
         no-synchronization-point property, for runtimes that want smaller
@@ -222,10 +259,7 @@ class SmartPQ:
 
             return mode_step
 
-        return {
-            MODE_OBLIVIOUS: _mk(c.oblivious_schedule),
-            MODE_AWARE: _mk(c.aware_schedule),
-        }
+        return {mode: _mk(s) for mode, s in enumerate(c.mode_schedules)}
 
     def predict_mode_host(
         self, num_clients: int, size: int, key_range: int, insert_frac: float

@@ -19,11 +19,24 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # sharding-in-types churn: AxisType landed after jax 0.4.x
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly Auto-typed
+    AxisType = None
 
 AXIS_POD = "pod"
 AXIS_DATA = "data"
 AXIS_MODEL = "model"
+
+
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """axis_types=(Auto,)*n on jax versions that have it, {} otherwise —
+    both spellings mean the same thing (fully Auto-partitioned mesh)."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_mesh(
@@ -38,9 +51,9 @@ def make_mesh(
         return Mesh(
             np.asarray(devices).reshape(shape),
             axes,
-            axis_types=(AxisType.Auto,) * len(axes),
+            **_axis_type_kwargs(len(axes)),
         )
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:

@@ -1,0 +1,30 @@
+"""shard_map version compat — one import site for the whole repo.
+
+jax moved shard_map twice during this repo's lifetime: old versions ship it
+as `jax.experimental.shard_map.shard_map` with a `check_rep` kwarg; new
+versions promote it to `jax.shard_map` and rename the kwarg `check_vma`.
+Every caller here (models.layers.moe, the device scripts) imports this
+wrapper, which speaks the NEW spelling and translates down when needed —
+the same guarded-compat pattern as `distributed.mesh.AxisType`.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+
+else:  # pre-promotion jax: experimental home, check_rep spelling
+    from jax.experimental.shard_map import shard_map as _shard_map_experimental
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map_experimental(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )

@@ -16,6 +16,7 @@ from repro.core.pqueue.state import INF_KEY
 from repro.kernels import ref as R
 from repro.kernels.bitonic_topk import topk_smallest_pallas
 from repro.kernels.sorted_merge import merge_sorted_pallas
+from repro.kernels.twochoice import multiq_select_pallas, twochoice_pick_pallas
 
 
 def _next_pow2(n: int) -> int:
@@ -55,6 +56,56 @@ def topk_smallest(
         interpret=not _on_tpu(),
     )
     return out_k[:, :k], out_v[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def twochoice_counts(
+    mins: jnp.ndarray,  # (S,) int32 cached per-shard minima
+    choice_a: jnp.ndarray,  # (m,) int32
+    choice_b: jnp.ndarray,  # (m,) int32
+    act: jnp.ndarray,  # (m,) bool/int32 active-lane mask
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """Per-shard commit counts of the MULTIQ two-choice probe.  (S,) int32."""
+    act = act.astype(jnp.int32)
+    if not use_kernel:
+        return R.twochoice_counts_ref(mins, choice_a, choice_b, act)
+    return twochoice_pick_pallas(
+        mins, choice_a, choice_b, act, interpret=not _on_tpu()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def multiq_select_topm(
+    win_k: jnp.ndarray,  # (S, m) ascending head windows
+    win_v: jnp.ndarray,  # (S, m) payloads
+    take: jnp.ndarray,  # (S,) commit counts
+    use_kernel: bool = True,
+):
+    """m smallest masked (key, val) pairs ascending, INF-key padded.
+
+    Tag trick as in `topk_smallest`: the merge network runs on (key,
+    position-tag) pairs, payloads gathered by tag afterwards — bit-identical
+    to the stable-argsort reference."""
+    S, m = win_k.shape
+    tags = jnp.arange(S * m, dtype=jnp.int32).reshape(S, m)
+    if not use_kernel:
+        out_k, out_t = R.multiq_select_ref(win_k, tags, take)
+    else:
+        mp = _next_pow2(m)
+        if mp != m:
+            win_k = jnp.pad(win_k, ((0, 0), (0, mp - m)), constant_values=INF_KEY)
+            tags = jnp.pad(
+                tags, ((0, 0), (0, mp - m)), constant_values=jnp.iinfo(jnp.int32).max
+            )
+        out_k, out_t = multiq_select_pallas(
+            win_k, tags, take, interpret=not _on_tpu()
+        )
+        out_k, out_t = out_k[0, :m], out_t[0, :m]
+    safe_t = jnp.clip(out_t, 0, S * m - 1)
+    out_v = jnp.where(out_k < INF_KEY, win_v.ravel()[safe_t], 0)
+    out_k = jnp.where(out_k < INF_KEY, out_k, INF_KEY)
+    return out_k, out_v
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))

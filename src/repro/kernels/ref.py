@@ -24,6 +24,34 @@ def topk_smallest_ref(keys: jnp.ndarray, vals: jnp.ndarray, k: int):
     )
 
 
+def twochoice_counts_ref(mins, choice_a, choice_b, act):
+    """Two-choice probe/commit reference: per-shard commit counts (S,).
+
+    Lane l commits to choice_a[l] iff its cached min is strictly smaller, or
+    equal with choice_a[l] <= choice_b[l] (deterministic tie toward the lower
+    shard id).  Inactive lanes are parked out of range."""
+    S = mins.shape[0]
+    min_a = mins[choice_a]
+    min_b = mins[choice_b]
+    pick_a = (min_a < min_b) | ((min_a == min_b) & (choice_a <= choice_b))
+    chosen = jnp.where(pick_a, choice_a, choice_b)
+    chosen = jnp.where(act != 0, chosen, S)
+    return jnp.zeros((S,), jnp.int32).at[chosen].add(1, mode="drop")
+
+
+def multiq_select_ref(win_k, win_v, take):
+    """(S, m) head windows + (S,) takes -> m smallest masked (key, val)
+    pairs, ascending (lexicographic on (key, val))."""
+    S, m = win_k.shape
+    col = jnp.arange(m, dtype=jnp.int32)[None, :]
+    mask = col < take[:, None]
+    INT32_MAX = jnp.iinfo(jnp.int32).max
+    mk = jnp.where(mask, win_k, INT32_MAX).ravel()
+    mv = jnp.where(mask, win_v, INT32_MAX).ravel()
+    order = _lex_order(mk, mv)[:m]
+    return mk[order], mv[order]
+
+
 def merge_sorted_runs_ref(buf_k, buf_v, run_k, run_v):
     """(S, C) buffer + (S, R) run (both ascending, INF-padded) -> smallest C
     of the union, ascending (lexicographic on (key, val))."""

@@ -7,8 +7,8 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    from repro.distributed.mesh import _axis_type_kwargs
+
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))

@@ -211,8 +211,10 @@ def moe_block_ep(
         out = jax.lax.psum(out, model_axis)  # row-parallel combine
         return out.reshape(Bl, Sl, D).astype(xb.dtype), aux
 
+    from repro.distributed.shardmap import shard_map
+
     bspec = batch_axes if batch_axes else None
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(

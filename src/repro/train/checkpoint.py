@@ -31,7 +31,9 @@ _SHARD_BYTES = 1 << 30  # 1 GiB per npz shard
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path is a late alias of
+    # jax.tree_util.tree_flatten_with_path — use the long-lived spelling.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(k) for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]
     return paths, leaves, treedef

@@ -258,3 +258,13 @@ def flops_and_bytes(cost: dict) -> Tuple[float, float]:
     flops = float(cost.get("flops", 0.0))
     nbytes = float(cost.get("bytes accessed", 0.0))
     return flops, nbytes
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Version-stable `compiled.cost_analysis()`: older jax returns a list of
+    per-module dicts (one entry per partition), newer returns the dict
+    directly.  Always hands back a dict (empty when XLA reports nothing)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}

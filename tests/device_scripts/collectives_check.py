@@ -17,18 +17,19 @@ from repro.distributed.collectives import (
     reduce_scatter_then_allgather,
 )
 from repro.distributed.mesh import make_mesh
+from repro.distributed.shardmap import shard_map
 
 mesh = make_mesh((2, 4), ("pod", "data"))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
 
 
-@partial(jax.shard_map, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")), check_vma=False)
+@partial(shard_map, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")), check_vma=False)
 def flat(x):
     return jnp.broadcast_to(jax.lax.psum(x, ("pod", "data")), x.shape)
 
 
-@partial(jax.shard_map, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")), check_vma=False)
+@partial(shard_map, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")), check_vma=False)
 def hier(x):
     return jnp.broadcast_to(hierarchical_psum(x, ("data",), "pod"), x.shape)
 
@@ -37,7 +38,7 @@ np.testing.assert_allclose(np.asarray(flat(x)), np.asarray(hier(x)), rtol=1e-5, 
 print("hierarchical == flat psum OK")
 
 
-@partial(jax.shard_map, mesh=mesh, in_specs=(P(("pod", "data")), P(("pod", "data"))),
+@partial(shard_map, mesh=mesh, in_specs=(P(("pod", "data")), P(("pod", "data"))),
          out_specs=(P(("pod", "data")), P(("pod", "data"))), check_vma=False)
 def compressed(x, err):
     out, new_err = compressed_cross_pod_psum(x[0], ("data",), "pod", err[0])
@@ -59,7 +60,7 @@ assert rel < 0.02, f"error-feedback drift {rel}"
 print(f"compressed cross-pod psum error-feedback OK (rel drift {rel:.4f})")
 
 
-@partial(jax.shard_map, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")), check_vma=False)
+@partial(shard_map, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")), check_vma=False)
 def rsag(x):
     return jnp.broadcast_to(
         reduce_scatter_then_allgather(x[0], "data", dim=0)[None], x.shape
@@ -69,7 +70,7 @@ def rsag(x):
 # shape (1, 64) per device; rs+ag over 'data' (4 devices) on dim0 of (64,)
 y = np.asarray(rsag(x))
 # compare against psum over data only
-@partial(jax.shard_map, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")), check_vma=False)
+@partial(shard_map, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")), check_vma=False)
 def psum_data(x):
     return jnp.broadcast_to(jax.lax.psum(x[0], "data")[None], x.shape)
 

@@ -17,6 +17,7 @@ from repro.core.pqueue import ops as O
 from repro.core.pqueue.schedules import Schedule
 from repro.core.pqueue.state import INF_KEY, PQState, make_state
 from repro.distributed.mesh import make_mesh
+from repro.distributed.shardmap import shard_map
 from repro.core.nuddle import (
     delegate_dist,
     delegate_single_controller,
@@ -37,7 +38,7 @@ st, _ = O.insert(st, keys, vals)
 
 def make_dist_step(fn):
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(("pod", "shard")),) * 5,
         out_specs=(
@@ -107,7 +108,7 @@ _, verdict_sc = delegate_single_controller(
 
 
 @partial(
-    jax.shard_map,
+    shard_map,
     mesh=mesh,
     in_specs=(P(("pod", "shard")), P(("pod", "shard"))),
     out_specs=(P(None), P(None)),

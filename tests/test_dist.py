@@ -10,6 +10,12 @@ def test_dist_pq_schedules(device_script_runner):
 
 
 @pytest.mark.slow
+def test_multiq_dist(device_script_runner):
+    out = device_script_runner("multiq_8dev.py")
+    assert "MULTIQ-8DEV-OK" in out
+
+
+@pytest.mark.slow
 def test_collectives(device_script_runner):
     out = device_script_runner("collectives_check.py")
     assert "ALL-COLLECTIVES-OK" in out

@@ -1,14 +1,75 @@
-"""Hypothesis property tests — the queue's invariants under arbitrary
-workloads (paper-level guarantees, machine-checked)."""
+"""Hypothesis-style property tests — the queue's invariants under arbitrary
+workloads (paper-level guarantees, machine-checked).
+
+Runs under real `hypothesis` when installed; otherwise a minimal seeded
+stand-in below provides the same `given/settings/strategies` surface
+(deterministic per-test example streams), so the tier-1 lane never depends
+on an optional package.
+"""
+
+import zlib
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container has no hypothesis — seeded stand-in
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 — mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(
+                lambda rng: [
+                    elem.draw(rng)
+                    for _ in range(int(rng.integers(min_size, max_size + 1)))
+                ]
+            )
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+    def settings(max_examples=20, deadline=None):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — copying fn's signature would make
+            # pytest treat the strategy params as fixtures.
+            def wrapper():
+                for ex in range(getattr(wrapper, "_max_examples", 20)):
+                    rng = np.random.default_rng(
+                        (zlib.crc32(fn.__name__.encode()) << 16) + ex
+                    )
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = getattr(fn, "_max_examples", 20)
+            return wrapper
+
+        return deco
+
 
 from repro.core.pqueue import ops as O
 from repro.core.pqueue.ref import RefPQ
-from repro.core.pqueue.schedules import Schedule, spray_bound
+from repro.core.pqueue.schedules import Schedule, multiq_bound, spray_bound
 from repro.core.pqueue.state import INF_KEY, check_invariants, make_state
 
 S, C, B = 4, 32, 8  # fixed shapes keep jit cache warm across examples
@@ -75,6 +136,74 @@ def test_spray_envelope(keys, m_del, seed):
     np.testing.assert_array_equal(rem, ref.key_multiset())
 
 
+@settings(max_examples=25, deadline=None)
+@given(
+    keys=st.lists(st.integers(0, 999), min_size=8, max_size=40),
+    m_del=st.integers(1, B),
+    seed=st.integers(0, 2**20),
+)
+def test_multiq_envelope(keys, m_del, seed):
+    """Every MULTIQ-returned key sits within the first m entries of some
+    shard (deterministic two-choice window), and the multiset is conserved."""
+    stq, ref = make_state(S, C), RefPQ(S, C)
+    arr = np.asarray(keys[: 4 * B], np.int32)
+    for i in range(0, len(arr), B):
+        chunk = arr[i : i + B]
+        kb = np.concatenate([chunk, np.full(B - len(chunk), INF_KEY, np.int32)])
+        stq, _ = O.insert(stq, jnp.asarray(kb), jnp.asarray(kb % 97))
+        ref.insert_batch(kb, kb % 97)
+    res = O.delete_min(
+        stq, B, schedule=Schedule.MULTIQ, active=m_del,
+        rng=jax.random.key(seed),
+    )
+    got = np.asarray(res.keys)[: int(res.n_out)]
+    ok, msg = ref.check_multiq_result(got, B)
+    assert ok, msg
+    assert ref.remove_multiset(got)
+    rem = np.sort(np.asarray(res.state.keys[res.state.keys < INF_KEY]).ravel())
+    np.testing.assert_array_equal(rem, ref.key_multiset())
+    ok, msg = check_invariants(res.state)
+    assert ok, msg
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    batches=st.lists(op_batch, min_size=2, max_size=5),
+    seed=st.integers(0, 2**20),
+)
+def test_no_loss_or_duplication_across_schedules(batches, seed):
+    """I3 across ALL THREE SmartPQ modes: drive the identical randomized op
+    stream (same seeds) through spray, multiq, and hier; each run must
+    conserve the element multiset exactly — everything inserted is either
+    still in the queue or was returned by a deleteMin, no key lost, none
+    duplicated.  The three runs are independent (relaxed schedules remove
+    different elements) but every one must balance its own books."""
+    for schedule in (Schedule.SPRAY_HERLIHY, Schedule.MULTIQ, Schedule.HIER):
+        stq = make_state(S, C)
+        inserted, deleted = [], []
+        for step, batch in enumerate(batches):
+            ops = np.array([o for o, _ in batch] + [1] * (B - len(batch)), np.int32)
+            keys = np.array(
+                [k for _, k in batch] + [INF_KEY] * (B - len(batch)), np.int32
+            )
+            r = O.apply_op_batch(
+                stq, jnp.asarray(ops), jnp.asarray(keys), jnp.asarray(keys % 97),
+                schedule=schedule, rng=jax.random.key(seed + step), npods=2,
+            )
+            stq = r.state
+            inserted.extend(keys[(ops == 0) & (keys < INF_KEY)].tolist())
+            got = np.asarray(r.deleted_keys)[: int(r.n_deleted)]
+            deleted.extend(got.tolist())
+            ok, msg = check_invariants(stq)
+            assert ok, f"{schedule.name}: {msg}"
+        remaining = np.asarray(stq.keys[stq.keys < INF_KEY]).ravel().tolist()
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(deleted + remaining)),
+            np.sort(np.asarray(inserted)),
+            err_msg=f"{schedule.name}: element loss or duplication",
+        )
+
+
 @settings(max_examples=20, deadline=None)
 @given(n=st.integers(1, 60), seed=st.integers(0, 2**20))
 def test_delete_all_returns_sorted(n, seed):
@@ -102,3 +231,12 @@ def test_spray_bound_monotone():
             b = spray_bound(S_, m)
             assert b >= prev or b >= m
             prev = b
+
+
+def test_multiq_bound_tighter_than_spray():
+    """The two-choice envelope is never looser than the spray envelope, and
+    asymptotically much tighter (the S log^2 S vs S log log S gap)."""
+    for m in (1, 8, 64, 512):
+        for S_ in (2, 4, 16, 64, 256, 1024):
+            assert multiq_bound(S_, m) <= spray_bound(S_, m)
+        assert multiq_bound(1024, m) * 4 < spray_bound(1024, m)
