@@ -10,6 +10,7 @@ and the classifier cost model.  What IS faithfully reproduced is the
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -75,12 +76,13 @@ class PQWorkload:
 def throughput_mops(
     workload: PQWorkload, schedule: Schedule, steps: int = 12
 ) -> float:
-    """Millions of ops/second for a fixed schedule on this workload."""
+    """Millions of ops/second for a fixed schedule on this workload.
+    The state carry is DONATED into the jitted step (no per-step copy)."""
     st = workload.init_state()
     rng = np.random.default_rng(workload.seed + 1)
     key = jax.random.key(workload.seed)
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(0,))
     def step(state, ops, keys, vals, k):
         return O.apply_op_batch(
             state, ops, keys, vals, schedule=schedule, rng=k,
@@ -89,7 +91,7 @@ def throughput_mops(
 
     ops, keys, vals = workload.op_batch(rng)
     r = step(st, ops, keys, vals, key)  # compile+warm
-    jax.block_until_ready(r.state.keys)
+    jax.block_until_ready(jax.tree.leaves(r.state))
     st = r.state
     t0 = time.perf_counter()
     done = 0
@@ -99,9 +101,41 @@ def throughput_mops(
         r = step(st, ops, keys, vals, sub)
         st = r.state
         done += workload.num_clients
-    jax.block_until_ready(st.keys)
+    jax.block_until_ready(jax.tree.leaves(st))
     dt = time.perf_counter() - t0
     return done / dt / 1e6
+
+
+def step_latency_us(
+    workload: PQWorkload, schedule: Schedule, iters: int = 16
+) -> float:
+    """Median microseconds per bulk step for a fixed schedule (donated
+    carry, per-step sync) — the latency metric BENCH_pq.json tracks."""
+    st = workload.init_state()
+    rng = np.random.default_rng(workload.seed + 1)
+    key = jax.random.key(workload.seed)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def step(state, ops, keys, vals, k):
+        return O.apply_op_batch(
+            state, ops, keys, vals, schedule=schedule, rng=k,
+            npods=workload.npods,
+        )
+
+    ops, keys, vals = workload.op_batch(rng)
+    r = step(st, ops, keys, vals, key)  # compile+warm
+    jax.block_until_ready(jax.tree.leaves(r.state))
+    st = r.state
+    times = []
+    for _ in range(iters):
+        ops, keys, vals = workload.op_batch(rng)
+        key, sub = jax.random.split(key)
+        t0 = time.perf_counter()
+        r = step(st, ops, keys, vals, sub)
+        jax.block_until_ready(jax.tree.leaves(r.state))
+        times.append((time.perf_counter() - t0) * 1e6)
+        st = r.state
+    return float(np.median(times))
 
 
 def smartpq_throughput_mops(workload: PQWorkload, steps: int = 12,
@@ -116,10 +150,10 @@ def smartpq_throughput_mops(workload: PQWorkload, steps: int = 12,
     carry = carry._replace(state=st)
     rng = np.random.default_rng(workload.seed + 2)
     key = jax.random.key(workload.seed + 3)
-    step = jax.jit(pq.step)
+    step = pq.jit_step  # donated carry: zero state copies per step
     ops, keys, vals = workload.op_batch(rng)
     carry2, _ = step(carry, ops, keys, vals, key, workload.num_clients)
-    jax.block_until_ready(carry2.state.keys)
+    jax.block_until_ready(jax.tree.leaves(carry2.state))
     carry = carry2
     t0 = time.perf_counter()
     done = 0
@@ -129,8 +163,10 @@ def smartpq_throughput_mops(workload: PQWorkload, steps: int = 12,
         key, sub = jax.random.split(key)
         carry, _ = step(carry, ops, keys, vals, sub, workload.num_clients)
         done += workload.num_clients
-        mode_trace.append(carry.stats.mode)  # device value: no mid-loop sync
-    jax.block_until_ready(carry.state.keys)
+        # device copy: readable after the next step donates the carry,
+        # still no mid-loop sync
+        mode_trace.append(jnp.copy(carry.stats.mode))
+    jax.block_until_ready(jax.tree.leaves(carry.state))
     dt = time.perf_counter() - t0
     return {
         "mops": done / dt / 1e6,
@@ -144,8 +180,28 @@ def smartpq_throughput_mops(workload: PQWorkload, steps: int = 12,
 
 CSV_ROWS: List[str] = []
 
+# Machine-readable benchmark records (written to BENCH_pq.json by run.py).
+# Schema per record — stable keys so successive commits diff cleanly:
+#   {"suite": str, "name": str, "us_per_call": float, "derived": str,
+#    <optional structured fields: schedule, workload, us_per_step, mops,
+#     capacity, size, insert_frac, num_clients, num_shards>}
+BENCH_RECORDS: List[Dict] = []
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+
+def emit(name: str, us_per_call: float, derived: str = "", **fields):
     row = f"{name},{us_per_call:.1f},{derived}"
     CSV_ROWS.append(row)
+    rec = {"suite": name.split("/", 1)[0], "name": name,
+           "us_per_call": round(float(us_per_call), 3), "derived": derived}
+    rec.update(fields)
+    BENCH_RECORDS.append(rec)
     print(row)
+
+
+def workload_fields(w: PQWorkload) -> Dict:
+    """The workload coordinates every BENCH_pq.json record carries."""
+    return {
+        "num_clients": w.num_clients, "size": w.size,
+        "key_range": w.key_range, "insert_frac": w.insert_frac,
+        "num_shards": w.num_shards, "capacity": w.capacity,
+    }

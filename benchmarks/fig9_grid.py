@@ -10,7 +10,9 @@ from benchmarks.common import (
     PQWorkload,
     emit,
     smartpq_throughput_mops,
+    step_latency_us,
     throughput_mops,
+    workload_fields,
 )
 from repro.core.pqueue.schedules import Schedule
 
@@ -38,7 +40,9 @@ def run(quick: bool = False):
             for name, sched in CAST:
                 t = throughput_mops(w, sched, steps=8 if quick else 12)
                 emit(f"fig9/size_{size}/ins{int(mix*100)}/{name}",
-                     64 / t, f"mops={t:.2f}")
+                     64 / t, f"mops={t:.2f}",
+                     schedule=sched.name, us_per_step=round(64 / t, 3),
+                     mops=round(t, 4), **workload_fields(w))
                 if t > best:
                     best_name, best = name, t
             s = smartpq_throughput_mops(w, steps=8 if quick else 12)
@@ -47,4 +51,29 @@ def run(quick: bool = False):
                 64 / s["mops"],
                 f"mops={s['mops']:.2f};best_fixed={best_name}"
                 f";smartpq_vs_best={s['mops'] / best:.2f}",
+                schedule="SMARTPQ", us_per_step=round(64 / s["mops"], 3),
+                mops=round(s["mops"], 4), **workload_fields(w),
             )
+
+
+# The acceptance-tracked latency slice: median us/step on the
+# deleteMin-dominated fig9 workload (capacity 1<<14), per schedule.
+LATENCY_CAST = [
+    ("lotan_shavit", Schedule.STRICT_FLAT),
+    ("alistarh_herlihy", Schedule.SPRAY_HERLIHY),
+    ("multiqueue", Schedule.MULTIQ),
+    ("nuddle", Schedule.HIER),
+]
+
+
+def run_latency(quick: bool = False):
+    w = PQWorkload(
+        num_clients=64, size=4096, key_range=8192, insert_frac=0.0,
+        num_shards=16, npods=2, capacity=1 << 14,
+    )
+    for name, sched in LATENCY_CAST:
+        us = step_latency_us(w, sched, iters=8 if quick else 16)
+        emit(f"fig9/latency/size_4096/ins0/{name}", us,
+             f"median_us_per_step={us:.1f}",
+             schedule=sched.name, us_per_step=round(us, 3),
+             **workload_fields(w))

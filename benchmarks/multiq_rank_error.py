@@ -49,7 +49,7 @@ def _measure(label: str, schedule: Schedule, size: int, steps: int,
 
     key = jax.random.key(w.seed)
     res = step(st, key)  # compile+warm
-    jax.block_until_ready(res.state.keys)
+    jax.block_until_ready(jax.tree.leaves(res.state))
 
     errors = []
     t_total = 0.0
@@ -58,7 +58,7 @@ def _measure(label: str, schedule: Schedule, size: int, steps: int,
         key, sub = jax.random.split(key)
         t0 = time.perf_counter()
         res = step(st, sub)
-        jax.block_until_ready(res.state.keys)
+        jax.block_until_ready(jax.tree.leaves(res.state))
         t_total += time.perf_counter() - t0
         got = np.asarray(res.keys)[: int(res.n_out)]
         # global rank of each returned key in the pre-delete population

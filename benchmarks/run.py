@@ -1,6 +1,13 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV and (with --json / --smoke) writes the machine-readable BENCH_pq.json:
+#   {"schema": 1, "backend": ..., "records": [{suite, name, us_per_call,
+#    derived, schedule?, us_per_step?, mops?, <workload coordinates>}]}
+# Record keys are stable across commits so before/after diffs are trivial —
+# the perf trajectory of the PQ hot paths is tracked through this file.
 import argparse
+import json
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
@@ -13,18 +20,28 @@ def main() -> None:
                     help="reduced sweep sizes (CI mode)")
     ap.add_argument(
         "--only", default=None,
-        help="comma list of: fig1,fig7,fig9,fig10,fig12,classifier,"
-             "roofline,kernels,rank_error",
+        help="comma list of: fig1,fig7,fig9,fig9_latency,fig10,fig12,"
+             "classifier,roofline,kernels,rank_error,smoke",
     )
     ap.add_argument(
         "--schedule", default="all",
         help="relaxed schedule for the rank_error suite "
              "(spray_herlihy | spray_fraser | multiq | all)",
     )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="write machine-readable records to PATH (BENCH_pq.json schema)",
+    )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="run only the seconds-scale smoke suite (fast tier-1 lane); "
+             "implies --json BENCH_pq.json unless --json is given",
+    )
     args, _ = ap.parse_known_args()
 
     from benchmarks import (
         classifier_eval,
+        common,
         fig1_mix,
         fig7_sweeps,
         fig9_grid,
@@ -33,12 +50,14 @@ def main() -> None:
         kernels_bench,
         multiq_rank_error,
         roofline,
+        smoke,
     )
 
     suites = {
         "fig1": fig1_mix.run,
         "fig7": fig7_sweeps.run,
         "fig9": fig9_grid.run,
+        "fig9_latency": fig9_grid.run_latency,
         "fig10": fig10_dynamic.run,
         "fig12": fig12_cpu_adaptive.run,
         "classifier": classifier_eval.run,
@@ -47,11 +66,33 @@ def main() -> None:
         "rank_error": lambda quick=False: multiq_rank_error.run(
             quick=quick, schedule=args.schedule
         ),
+        "smoke": smoke.run,
     }
-    selected = args.only.split(",") if args.only else list(suites)
+    if args.smoke:
+        selected = ["smoke"]
+        if args.json is None:
+            args.json = "BENCH_pq.json"
+    elif args.only:
+        selected = args.only.split(",")
+    else:
+        selected = [s for s in suites if s != "smoke"]
     print("name,us_per_call,derived")
     for name in selected:
         suites[name](quick=args.quick)
+
+    if args.json:
+        import jax
+
+        payload = {
+            "schema": 1,
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "generated_unix": int(time.time()),
+            "records": common.BENCH_RECORDS,
+        }
+        Path(args.json).write_text(json.dumps(payload, indent=1) + "\n")
+        print(f"# wrote {len(common.BENCH_RECORDS)} records to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""Smoke benchmark — the fast tier-1 lane's perf-trajectory probe.
+
+A tiny deleteMin-dominated workload (the fig9 latency slice scaled down)
+timed for the three acceptance schedules.  Runs in seconds, emits the same
+BENCH_pq.json record schema as the full suites, so CI can diff medians
+across commits without paying for the full grid.
+"""
+
+from benchmarks.common import PQWorkload, emit, step_latency_us, workload_fields
+from repro.core.pqueue.schedules import Schedule
+
+SMOKE_CAST = [
+    ("lotan_shavit", Schedule.STRICT_FLAT),
+    ("alistarh_herlihy", Schedule.SPRAY_HERLIHY),
+    ("multiqueue", Schedule.MULTIQ),
+]
+
+
+def run(quick: bool = False):
+    del quick  # smoke is already the minimal configuration
+    w = PQWorkload(
+        num_clients=64, size=2048, key_range=4096, insert_frac=0.0,
+        num_shards=16, npods=2, capacity=1 << 13,
+    )
+    for name, sched in SMOKE_CAST:
+        us = step_latency_us(w, sched, iters=8)
+        emit(f"smoke/ins0/{name}", us, f"median_us_per_step={us:.1f}",
+             schedule=sched.name, us_per_step=round(us, 3),
+             **workload_fields(w))

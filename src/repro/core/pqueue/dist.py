@@ -38,7 +38,7 @@ import jax.numpy as jnp
 
 from repro.core.pqueue import local as L
 from repro.core.pqueue.partition import route_dense
-from repro.core.pqueue.schedules import Schedule
+from repro.core.pqueue.schedules import Schedule, ensure_head
 from repro.core.pqueue.state import INF_KEY, PQState
 from repro.utils.hashing import shard_of_key
 
@@ -105,7 +105,7 @@ def insert_dist(
     B = keys.shape[0]
     axes = cfg.all_axes
     n_dev = _axis_size(axes)
-    S_loc, C = state.keys.shape
+    S_loc, C = state.num_shards, state.capacity
     S_total = n_dev * S_loc
 
     gshard = shard_of_key(keys, S_total)
@@ -131,12 +131,11 @@ def insert_dist(
     recv_v = jax.lax.all_to_all(send_v, axes, split_axis=0, concat_axis=0, tiled=True)
 
     flat_k, flat_v = recv_k.reshape(-1), recv_v.reshape(-1)
-    # Local sub-shard routing + sorted merge (Pallas kernel on TPU).
+    # Local sub-shard routing + tiered head/tail insert (windowed-merge
+    # Pallas kernel on TPU).
     rk, rv, counts = route_dense(flat_k, flat_v, flat_k < INF_KEY, S_loc)
-    nk, nv, ns, dropped = L.merge_sorted(
-        state.keys, state.vals, rk, rv, state.size, counts
-    )
-    return PQState(nk, nv, ns), dropped, rejected
+    new_state, dropped = L.tiered_insert(state, rk, rv, counts)
+    return new_state, dropped, rejected
 
 
 # ---------------------------------------------------------------------------
@@ -145,9 +144,10 @@ def insert_dist(
 
 
 def _local_candidates(state: PQState, m: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """This device's m smallest across its local shards (ascending run)."""
-    ck = state.keys[:, :m].ravel()
-    cv = state.vals[:, :m].ravel()
+    """This device's m smallest across its local shards (ascending run) —
+    head prefixes only; callers ensure_head first."""
+    ck = state.head_keys[:, :m].ravel()
+    cv = state.head_vals[:, :m].ravel()
     return L.topk_of_merged(ck, cv, m)
 
 
@@ -180,7 +180,7 @@ def _apply_take(state: PQState, my_take: jnp.ndarray, m: int) -> PQState:
     are exactly the first my_take entries of the device-local candidate
     order, i.e. prefixes of each local shard determined by a second local
     tournament-threshold computation."""
-    ck = state.keys[:, :m]  # (S_loc, m)
+    ck = state.head_keys[:, :m]  # (S_loc, m)
     flat = ck.ravel()
     kth = jnp.sort(flat)[jnp.maximum(my_take - 1, 0)]
     below = jnp.sum(ck < kth, axis=1).astype(jnp.int32)
@@ -189,14 +189,20 @@ def _apply_take(state: PQState, my_take: jnp.ndarray, m: int) -> PQState:
     tie_prefix = jnp.cumsum(at) - at
     tie_take = jnp.clip(rem - tie_prefix, 0, at).astype(jnp.int32)
     take = jnp.where(my_take > 0, below + tie_take, 0)
-    nk, nv, ns = L.remove_prefix(state.keys, state.vals, state.size, take)
-    return PQState(nk, nv, ns)
+    nk, nv, nq, ns = L.remove_prefix(
+        state.head_keys, state.head_vals, state.head_seq, state.head_size,
+        take,
+    )
+    return dataclasses.replace(
+        state, head_keys=nk, head_vals=nv, head_seq=nq, head_size=ns
+    )
 
 
 def delete_flat_dist(
     state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, cfg: AxisCfg
 ) -> Tuple[PQState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """lotan_shavit: single global gather over every axis (pod included)."""
+    state = ensure_head(state, m)
     axes = cfg.all_axes
     run_k, run_v = _local_candidates(state, m)
     gk = jax.lax.all_gather(run_k, axes, tiled=False).reshape(-1, m)
@@ -224,6 +230,7 @@ def delete_hier_dist(
     if cfg.pod_axis is None:
         return delete_flat_dist(state, m, active, rng, cfg)
 
+    state = ensure_head(state, m)
     run_k, run_v = _local_candidates(state, m)
     # Phase 1: gather within the pod (fast tier), pod-local select.
     pk = jax.lax.all_gather(run_k, cfg.shard_axes, tiled=False).reshape(-1, m)
@@ -276,6 +283,7 @@ def delete_ffwd_dist(
     axes = cfg.all_axes
     n_dev = _axis_size(axes)
     assert n_dev & (n_dev - 1) == 0, "ffwd funnel requires power-of-two mesh"
+    state = ensure_head(state, m)
     run_k, run_v = _local_candidates(state, m)
     me = _device_rank(axes)
 

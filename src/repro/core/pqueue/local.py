@@ -1,22 +1,379 @@
 """Per-shard local primitives, vectorized over the shard axis.
 
 These are the jnp reference paths; `repro.kernels` provides Pallas TPU
-kernels for the two hot spots (sorted merge for insert, bitonic top-k for the
-deleteMin tournament) that bit-match these functions (tests sweep both).
+kernels for the hot spots (windowed head merge for insert, bitonic top-k for
+the deleteMin tournament) that bit-match these functions (tests sweep both).
 
-All functions operate on (S, C) shard-major arrays so a single call covers
-every shard a device owns — on TPU this keeps the VPU lanes full and lets the
-Pallas kernels tile (shard, capacity) blocks into VMEM.
+All hot-path functions operate on the **head tier** ``(S, H)`` of the tiered
+`PQState` (H static, small) so per-step cost scales with the batch /
+head-window size rather than the queue capacity.  The cold tail arena
+``(S, T)`` is touched only by O(batch) appends and by the rare,
+``lax.cond``-guarded rebalances (`refill_head`, the overflow branch of
+`tiered_insert`), which are the only O(capacity) code paths left.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import os
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.pqueue.state import INF_KEY
+from repro.core.pqueue.state import INF_KEY, PQState
+
+_INT32_MIN = jnp.iinfo(jnp.int32).min
+
+# Kernel dispatch: the Pallas kernels run on TPU; the jnp paths are the
+# oracle (and the CPU default — interpret-mode kernels are Python-slow).
+# REPRO_PQ_KERNELS=1 forces the kernel path.
+_USE_KERNELS_ENV = os.environ.get("REPRO_PQ_KERNELS", "") == "1"
+
+
+def _kernels_enabled() -> bool:
+    if _USE_KERNELS_ENV:
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _key_seq_order(keys: jnp.ndarray, seq: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise argsort by (key, seq) lexicographic — the stable
+    linearization order.  (x64 is disabled in this container, so the order
+    is two chained stable sorts rather than a packed int64 key.)"""
+    return jnp.lexsort((seq, keys), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# windowed merge — the insert hot spot
+# ---------------------------------------------------------------------------
+
+
+def merge_head_run(
+    head_k: jnp.ndarray,  # (S, H) ascending, INF-padded
+    head_v: jnp.ndarray,
+    head_q: jnp.ndarray,
+    run_k: jnp.ndarray,  # (S, R) ascending, INF-padded
+    run_v: jnp.ndarray,
+    run_q: jnp.ndarray,
+    use_kernel: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-width merge of two ascending runs: (S, H) + (S, R) -> (S, H+R).
+
+    Positional-stable (ties order head before run, in-position within each),
+    which — together with the strict head/tail boundary split — keeps head
+    equal-key entries in seq order without ever comparing seqs on the hot
+    path.  Kernel path: bitonic windowed-merge network
+    (`kernels.windowed_merge`); jnp path: the rank merge below.  Both are
+    bit-identical (tested).
+
+    Cost is O(H + R) per shard row — independent of the queue capacity.
+    """
+    if use_kernel is None:
+        use_kernel = _kernels_enabled()
+    if use_kernel:
+        from repro.kernels.ops import windowed_merge
+
+        return windowed_merge(head_k, head_v, head_q, run_k, run_v, run_q)
+
+    S, H = head_k.shape
+    R = run_k.shape[1]
+    # searchsorted per row: rank of each head key among the run ('left':
+    # count strictly less) and of each run key among the head ('right':
+    # count <=, the stable head-before-run tie-break).  The resulting
+    # positions are a permutation of [0, H+R) — no drop guard needed.
+    rank_head = jax.vmap(
+        lambda inc, k: jnp.searchsorted(inc, k, side="left")
+    )(run_k, head_k).astype(jnp.int32)
+    rank_run = jax.vmap(
+        lambda k, inc: jnp.searchsorted(k, inc, side="right")
+    )(head_k, run_k).astype(jnp.int32)
+    pos_head = jnp.arange(H, dtype=jnp.int32)[None, :] + rank_head
+    pos_run = jnp.arange(R, dtype=jnp.int32)[None, :] + rank_run
+
+    row = jnp.arange(S, dtype=jnp.int32)[:, None]
+    out_k = jnp.full((S, H + R), INF_KEY, dtype=head_k.dtype)
+    out_v = jnp.zeros((S, H + R), dtype=head_v.dtype)
+    out_q = jnp.zeros((S, H + R), dtype=head_q.dtype)
+    out_k = out_k.at[row, pos_head].set(head_k).at[row, pos_run].set(run_k)
+    out_v = out_v.at[row, pos_head].set(head_v).at[row, pos_run].set(run_v)
+    out_q = out_q.at[row, pos_head].set(head_q).at[row, pos_run].set(run_q)
+    return out_k, out_v, out_q
+
+
+# ---------------------------------------------------------------------------
+# head-tier removal primitives (O(H) per shard, H static)
+# ---------------------------------------------------------------------------
+
+
+def remove_prefix(
+    keys: jnp.ndarray,  # (S, W) ascending head tier
+    vals: jnp.ndarray,
+    seq: jnp.ndarray,
+    size: jnp.ndarray,  # (S,)
+    take: jnp.ndarray,  # (S,) number of smallest elements to remove per shard
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Remove the `take[s]` smallest elements of shard s (always a prefix of
+    the sorted head — the tournament only ever consumes head prefixes).
+    Implemented as a per-row left shift."""
+    S, W = keys.shape
+    idx = jnp.arange(W, dtype=jnp.int32)[None, :] + take[:, None]  # (S, W)
+    in_range = idx < W
+    idx = jnp.minimum(idx, W - 1)
+    new_keys = jnp.where(
+        in_range, jnp.take_along_axis(keys, idx, axis=1), INF_KEY
+    )
+    new_vals = jnp.where(in_range, jnp.take_along_axis(vals, idx, axis=1), 0)
+    new_seq = jnp.where(in_range, jnp.take_along_axis(seq, idx, axis=1), 0)
+    new_size = jnp.maximum(size - take, 0).astype(jnp.int32)
+    return new_keys, new_vals, new_seq, new_size
+
+
+def remove_at(
+    keys: jnp.ndarray,  # (S, H) head tier
+    vals: jnp.ndarray,
+    seq: jnp.ndarray,
+    size: jnp.ndarray,
+    remove_mask: jnp.ndarray,  # (S, W) bool, W <= H — positions to delete
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Remove arbitrary positions inside the static spray window W (spray
+    pops random slots in the top region; columns beyond W are untouched by
+    construction).  Compaction trick, windowed: removed window slots become
+    INF, a stable argsort of ONLY the (S, W) window restores its order, and
+    a single (S, H) gather splices the untouched suffix back after the
+    surviving window entries — O(W log W + H) per row instead of the old
+    O(C log C) full-row sort."""
+    S, H = keys.shape
+    W = remove_mask.shape[1]
+    assert W <= H, (W, H)
+    win_k = keys[:, :W]
+    hit = remove_mask & (win_k != INF_KEY)
+    n_removed = jnp.sum(hit, axis=1).astype(jnp.int32)
+
+    masked_k = jnp.where(remove_mask, INF_KEY, win_k)
+    order = jnp.argsort(masked_k, axis=1, stable=True)  # (S, W)
+    win_sorted_k = jnp.take_along_axis(masked_k, order, axis=1)
+    win_sorted_v = jnp.take_along_axis(
+        jnp.where(remove_mask, 0, vals[:, :W]), order, axis=1
+    )
+    win_sorted_q = jnp.take_along_axis(
+        jnp.where(remove_mask, 0, seq[:, :W]), order, axis=1
+    )
+    pad = H - W
+    if pad:
+        win_sorted_k = jnp.pad(win_sorted_k, ((0, 0), (0, pad)),
+                               constant_values=INF_KEY)
+        win_sorted_v = jnp.pad(win_sorted_v, ((0, 0), (0, pad)))
+        win_sorted_q = jnp.pad(win_sorted_q, ((0, 0), (0, pad)))
+
+    # survivors in the window, then the suffix shifted left to close the gap
+    v_in_win = jnp.minimum(size, W) - n_removed  # (S,)
+    shift = W - v_in_win  # = n_removed + window INF padding
+    col = jnp.arange(H, dtype=jnp.int32)[None, :]
+    suf_idx = col + shift[:, None]
+    suf_ok = suf_idx < H
+    suf_idx = jnp.minimum(suf_idx, H - 1)
+    suf_k = jnp.where(suf_ok, jnp.take_along_axis(keys, suf_idx, axis=1),
+                      INF_KEY)
+    suf_v = jnp.where(suf_ok, jnp.take_along_axis(vals, suf_idx, axis=1), 0)
+    suf_q = jnp.where(suf_ok, jnp.take_along_axis(seq, suf_idx, axis=1), 0)
+
+    sel = col < v_in_win[:, None]
+    new_keys = jnp.where(sel, win_sorted_k, suf_k)
+    new_vals = jnp.where(sel, win_sorted_v, suf_v)
+    new_seq = jnp.where(sel, win_sorted_q, suf_q)
+    new_size = jnp.maximum(size - n_removed, 0).astype(jnp.int32)
+    return new_keys, new_vals, new_seq, new_size
+
+
+# ---------------------------------------------------------------------------
+# tiered insert + rebalance (the only O(capacity) paths, cond-guarded)
+# ---------------------------------------------------------------------------
+
+
+def tiered_insert(
+    state: PQState,
+    rk: jnp.ndarray,  # (S, R) routed runs, ascending, INF-padded
+    rv: jnp.ndarray,
+    counts: jnp.ndarray,  # (S,) valid entries per run
+) -> Tuple[PQState, jnp.ndarray]:
+    """Insert routed runs into the tiered state.  Returns (state, dropped).
+
+    Rank-split each run against the shard's head boundary key: head-bound
+    keys (strictly below the boundary) merge into the (S, H) hot tier via
+    the windowed merge; merge overflow (the largest elements) and tail-bound
+    keys append to the tail arena in O(batch).  Only when a shard's arena
+    cannot hold the append does the cond-guarded overflow branch run a full
+    (key, seq) sort that keeps the C smallest of the union and reports the
+    rest in `dropped` — the same semantics the old full-width merge had on
+    every step, now paid only at capacity.
+    """
+    S, H = state.head_keys.shape
+    T = state.tail_width
+    R = rk.shape[1]
+    col = jnp.arange(R, dtype=jnp.int32)[None, :]
+    valid = col < counts[:, None]
+    rq = jnp.where(valid, state.next_seq[:, None] + col, 0)
+
+    if T == 0:
+        # Single-tier degenerate case (capacity <= head width): plain
+        # windowed merge, overflow (necessarily the largest) is dropped.
+        mk, mv, mq = merge_head_run(
+            state.head_keys, state.head_vals, state.head_seq, rk, rv, rq
+        )
+        dropped = jnp.maximum(state.head_size + counts - H, 0).astype(jnp.int32)
+        new_state = dataclasses.replace(
+            state,
+            head_keys=mk[:, :H], head_vals=mv[:, :H], head_seq=mq[:, :H],
+            head_size=jnp.minimum(state.head_size + counts, H).astype(jnp.int32),
+            next_seq=state.next_seq + counts,
+        )
+        return new_state, dropped
+
+    # -- strict boundary split ------------------------------------------------
+    row = jnp.arange(S, dtype=jnp.int32)[:, None]
+    hmax = jnp.take_along_axis(
+        state.head_keys,
+        jnp.clip(state.head_size - 1, 0, H - 1)[:, None], axis=1,
+    )[:, 0]
+    hmax = jnp.where(state.head_size > 0, hmax, _INT32_MIN)
+    # tail empty: everything is head-bound (spill restores the boundary);
+    # tail non-empty: only keys STRICTLY below the head max may enter the
+    # head — ties go to the tail, which keeps equal-key seqs ordered across
+    # the boundary (I4) without any hot-path seq comparison.
+    bkey = jnp.where(state.tail_size > 0, hmax, INF_KEY)
+    n_head = jax.vmap(
+        lambda r, b: jnp.searchsorted(r, b, side="left")
+    )(rk, bkey).astype(jnp.int32)
+
+    hb_sel = col < n_head[:, None]
+    hrun_k = jnp.where(hb_sel, rk, INF_KEY)
+    hrun_v = jnp.where(hb_sel, rv, 0)
+    hrun_q = jnp.where(hb_sel, rq, 0)
+
+    n_tail_inc = counts - n_head
+    t_idx = jnp.minimum(col + n_head[:, None], R - 1)
+    tb_sel = col < n_tail_inc[:, None]
+    trun_k = jnp.where(tb_sel, jnp.take_along_axis(rk, t_idx, axis=1), INF_KEY)
+    trun_v = jnp.where(tb_sel, jnp.take_along_axis(rv, t_idx, axis=1), 0)
+    trun_q = jnp.where(tb_sel, jnp.take_along_axis(rq, t_idx, axis=1), 0)
+
+    # -- hot-tier merge + spill ----------------------------------------------
+    mk, mv, mq = merge_head_run(
+        state.head_keys, state.head_vals, state.head_seq,
+        hrun_k, hrun_v, hrun_q,
+    )
+    nh_k, nh_v, nh_q = mk[:, :H], mv[:, :H], mq[:, :H]
+    sp_k, sp_v, sp_q = mk[:, H:], mv[:, H:], mq[:, H:]  # (S, R) spill run
+    n_spill = jnp.maximum(state.head_size + n_head - H, 0).astype(jnp.int32)
+    new_hsize = jnp.minimum(state.head_size + n_head, H).astype(jnp.int32)
+
+    n_append = n_tail_inc + n_spill
+    valid_total = state.head_size + state.tail_size + counts
+
+    def no_overflow(op):
+        tk, tv, tq, tsize = op
+        pos1 = jnp.where(tb_sel, tsize[:, None] + col, T + R)
+        pos2 = jnp.where(
+            col < n_spill[:, None], tsize[:, None] + n_tail_inc[:, None] + col,
+            T + R,
+        )
+        tk = tk.at[row, pos1].set(trun_k, mode="drop")
+        tk = tk.at[row, pos2].set(sp_k, mode="drop")
+        tv = tv.at[row, pos1].set(trun_v, mode="drop")
+        tv = tv.at[row, pos2].set(sp_v, mode="drop")
+        tq = tq.at[row, pos1].set(trun_q, mode="drop")
+        tq = tq.at[row, pos2].set(sp_q, mode="drop")
+        return (
+            nh_k, nh_v, nh_q, tk, tv, tq,
+            new_hsize, (tsize + n_append).astype(jnp.int32),
+            jnp.zeros((S,), jnp.int32),
+        )
+
+    def overflow(op):
+        tk, tv, tq, tsize = op
+        cat_k = jnp.concatenate([nh_k, tk, trun_k, sp_k], axis=1)
+        cat_v = jnp.concatenate([nh_v, tv, trun_v, sp_v], axis=1)
+        cat_q = jnp.concatenate([nh_q, tq, trun_q, sp_q], axis=1)
+        order = _key_seq_order(cat_k, cat_q)
+        sk = jnp.take_along_axis(cat_k, order, axis=1)[:, : H + T]
+        sv = jnp.take_along_axis(cat_v, order, axis=1)[:, : H + T]
+        sq = jnp.take_along_axis(cat_q, order, axis=1)[:, : H + T]
+        dropped = jnp.maximum(valid_total - (H + T), 0).astype(jnp.int32)
+        return (
+            sk[:, :H], sv[:, :H], sq[:, :H],
+            sk[:, H:], sv[:, H:], sq[:, H:],
+            jnp.minimum(valid_total, H).astype(jnp.int32),
+            jnp.clip(valid_total - H, 0, T).astype(jnp.int32),
+            dropped,
+        )
+
+    out = jax.lax.cond(
+        jnp.any(state.tail_size + n_append > T),
+        overflow,
+        no_overflow,
+        (state.tail_keys, state.tail_vals, state.tail_seq, state.tail_size),
+    )
+    hk, hv, hq, tk, tv, tq, hsize, tsize, dropped = out
+    new_state = dataclasses.replace(
+        state,
+        head_keys=hk, head_vals=hv, head_seq=hq,
+        tail_keys=tk, tail_vals=tv, tail_seq=tq,
+        head_size=hsize, tail_size=tsize,
+        next_seq=state.next_seq + counts,
+    )
+    return new_state, dropped
+
+
+def refill_head(state: PQState) -> PQState:
+    """Restore the hot tier: pull the tail's (key, seq)-smallest elements
+    into the head until it is full (or the tail is drained).  O(T log T) —
+    called only from the cond-guarded `ensure_head` when a shard's head
+    underflows below its per-step draw bound, so the cost amortizes over the
+    many O(H) steps in between."""
+    S, H = state.head_keys.shape
+    T = state.tail_width
+    if T == 0:
+        return state
+    order = _key_seq_order(state.tail_keys, state.tail_seq)
+    st_k = jnp.take_along_axis(state.tail_keys, order, axis=1)
+    st_v = jnp.take_along_axis(state.tail_vals, order, axis=1)
+    st_q = jnp.take_along_axis(state.tail_seq, order, axis=1)
+
+    take = jnp.minimum(H - state.head_size, state.tail_size).astype(jnp.int32)
+    Wr = min(H, T)
+    col = jnp.arange(Wr, dtype=jnp.int32)[None, :]
+    sel = col < take[:, None]
+    run_k = jnp.where(sel, st_k[:, :Wr], INF_KEY)
+    run_v = jnp.where(sel, st_v[:, :Wr], 0)
+    run_q = jnp.where(sel, st_q[:, :Wr], 0)
+
+    mk, mv, mq = merge_head_run(
+        state.head_keys, state.head_vals, state.head_seq, run_k, run_v, run_q
+    )  # head_size + take <= H, so the spill region is empty by construction
+
+    colT = jnp.arange(T, dtype=jnp.int32)[None, :]
+    idx = colT + take[:, None]
+    in_range = idx < T
+    idx = jnp.minimum(idx, T - 1)
+    nt_k = jnp.where(in_range, jnp.take_along_axis(st_k, idx, axis=1), INF_KEY)
+    nt_v = jnp.where(in_range, jnp.take_along_axis(st_v, idx, axis=1), 0)
+    nt_q = jnp.where(in_range, jnp.take_along_axis(st_q, idx, axis=1), 0)
+
+    return dataclasses.replace(
+        state,
+        head_keys=mk[:, :H], head_vals=mv[:, :H], head_seq=mq[:, :H],
+        tail_keys=nt_k, tail_vals=nt_v, tail_seq=nt_q,
+        head_size=(state.head_size + take).astype(jnp.int32),
+        tail_size=(state.tail_size - take).astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# legacy full-width merge (kept as the reference for the capacity-wide
+# Pallas kernel in kernels/sorted_merge.py; the insert hot path now uses
+# merge_head_run + tiered_insert)
+# ---------------------------------------------------------------------------
 
 
 def merge_sorted(
@@ -27,22 +384,12 @@ def merge_sorted(
     size: jnp.ndarray,  # (S,)
     inc_count: jnp.ndarray,  # (S,)
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Merge a sorted incoming run into each shard's sorted buffer.
-
-    Rank-based merge (no data-dependent control flow — TPU friendly):
-      out_pos(existing_i) = i + #incoming strictly-less-than existing_i
-      out_pos(incoming_j) = j + #existing less-or-equal incoming_j
-    Ties break toward existing elements (stable). Elements ranked beyond C
-    are dropped (largest ones) and counted in `dropped`.
-
-    Returns (new_keys, new_vals, new_size, dropped).
-    """
+    """Merge a sorted incoming run into each shard's sorted buffer, keeping
+    the C smallest (rank-based merge, stable toward existing elements).
+    Returns (new_keys, new_vals, new_size, dropped)."""
     S, C = keys.shape
     R = inc_keys.shape[1]
 
-    # searchsorted per row: rank of each existing key among incoming ('left'
-    # side: count of incoming strictly less) and of each incoming key among
-    # existing ('right' side: count of existing <=, giving stable tie-break).
     rank_exist = jax.vmap(
         lambda inc, k: jnp.searchsorted(inc, k, side="left")
     )(inc_keys, keys).astype(jnp.int32)
@@ -53,16 +400,12 @@ def merge_sorted(
     pos_exist = jnp.arange(C, dtype=jnp.int32)[None, :] + rank_exist  # (S, C)
     pos_inc = jnp.arange(R, dtype=jnp.int32)[None, :] + rank_inc  # (S, R)
 
-    # INF sentinels must stay at the tail; rank math already guarantees that
-    # (INF >= everything), but positions may exceed C — scatter with drop.
     out_keys = jnp.full((S, C), INF_KEY, dtype=keys.dtype)
     out_vals = jnp.zeros((S, C), dtype=vals.dtype)
     row = jnp.arange(S, dtype=jnp.int32)[:, None]
 
     out_keys = out_keys.at[row, pos_exist].set(keys, mode="drop")
     out_vals = out_vals.at[row, pos_exist].set(vals, mode="drop")
-    # Guard incoming INF padding: give it an out-of-range position so it can
-    # never overwrite a real element that also ranked near the tail.
     inc_is_pad = inc_keys == INF_KEY
     pos_inc = jnp.where(inc_is_pad, C + R, pos_inc)
     out_keys = out_keys.at[row, pos_inc].set(inc_keys, mode="drop")
@@ -73,60 +416,9 @@ def merge_sorted(
     return out_keys, out_vals, new_size, dropped
 
 
-def remove_prefix(
-    keys: jnp.ndarray,  # (S, C)
-    vals: jnp.ndarray,
-    size: jnp.ndarray,  # (S,)
-    take: jnp.ndarray,  # (S,) number of smallest elements to remove per shard
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Remove the `take[s]` smallest elements of shard s (always a prefix of
-    the sorted buffer — the tournament only ever consumes shard prefixes).
-    Implemented as a per-row left shift."""
-    S, C = keys.shape
-    idx = jnp.arange(C, dtype=jnp.int32)[None, :] + take[:, None]  # (S, C)
-    in_range = idx < C
-    idx = jnp.minimum(idx, C - 1)
-    new_keys = jnp.where(
-        in_range, jnp.take_along_axis(keys, idx, axis=1), INF_KEY
-    )
-    new_vals = jnp.where(
-        in_range, jnp.take_along_axis(vals, idx, axis=1), 0
-    )
-    new_size = jnp.maximum(size - take, 0).astype(jnp.int32)
-    return new_keys, new_vals, new_size
-
-
-def remove_at(
-    keys: jnp.ndarray,  # (S, C)
-    vals: jnp.ndarray,
-    size: jnp.ndarray,
-    remove_mask: jnp.ndarray,  # (S, C) bool — positions to delete
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Remove arbitrary positions (spray pops random slots in the top
-    region).  Compaction trick: removed slots become INF, then a full-row
-    sort restores I1/I2 because the sentinel equals the padding value."""
-    n_removed = jnp.sum(remove_mask & (keys != INF_KEY), axis=1).astype(jnp.int32)
-    k = jnp.where(remove_mask, INF_KEY, keys)
-    # Stable single-key sort carrying vals along.
-    order = jnp.argsort(k, axis=1, stable=True)
-    new_keys = jnp.take_along_axis(k, order, axis=1)
-    new_vals = jnp.take_along_axis(jnp.where(remove_mask, 0, vals), order, axis=1)
-    new_size = jnp.maximum(size - n_removed, 0).astype(jnp.int32)
-    return new_keys, new_vals, new_size
-
-
-import os
-
-# Kernel dispatch: the Pallas bitonic_topk runs the tournament on TPU; the
-# jnp stable-argsort is the oracle (and the CPU default — interpret-mode
-# kernels are Python-slow).  REPRO_PQ_KERNELS=1 forces the kernel path.
-_USE_KERNELS_ENV = os.environ.get("REPRO_PQ_KERNELS", "") == "1"
-
-
-def _kernels_enabled() -> bool:
-    if _USE_KERNELS_ENV:
-        return True
-    return jax.default_backend() == "tpu"
+# ---------------------------------------------------------------------------
+# tournament / probe primitives (unchanged semantics, head-tier operands)
+# ---------------------------------------------------------------------------
 
 
 def topk_of_merged(

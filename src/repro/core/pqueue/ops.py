@@ -14,9 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.pqueue import schedules as SCH
-from repro.core.pqueue.local import merge_sorted, topk_of_merged
+from repro.core.pqueue.local import tiered_insert, topk_of_merged
 from repro.core.pqueue.partition import route_capped, route_dense
-from repro.core.pqueue.schedules import DeleteResult, Schedule
+from repro.core.pqueue.schedules import DeleteResult, Schedule, ensure_head
 from repro.core.pqueue.state import INF_KEY, PQState
 
 OP_INSERT = 0
@@ -48,10 +48,7 @@ def insert(
         rk, rv, counts, _rejected = route_capped(
             keys, vals, mask, S, capacity_factor
         )
-    new_keys, new_vals, new_size, dropped = merge_sorted(
-        state.keys, state.vals, rk, rv, state.size, counts
-    )
-    return PQState(new_keys, new_vals, new_size), dropped
+    return tiered_insert(state, rk, rv, counts)
 
 
 def delete_min(
@@ -78,9 +75,11 @@ def delete_min(
 
 
 def peek_min(state: PQState, m: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Top-m (ascending) without removal — exact."""
-    cand_k = state.keys[:, :m].ravel()
-    cand_v = state.vals[:, :m].ravel()
+    """Top-m (ascending) without removal — exact.  The (discarded) refill
+    makes the head candidacy exact even when the hot tier has drained."""
+    state = ensure_head(state, m)
+    cand_k = state.head_keys[:, :m].ravel()
+    cand_v = state.head_vals[:, :m].ravel()
     return topk_of_merged(cand_k, cand_v, m)
 
 

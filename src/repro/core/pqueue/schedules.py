@@ -12,8 +12,12 @@ ffwd (single server)        -> FFWD               exact       tree-funnel to sha
 MultiQueue (two-choice,     -> MULTIQ             relaxed     none (min-cache probes)
  Williams & Sanders)
 
-This module implements the *semantics* vectorized over the full (S, C) state
-(single-controller path used by tests, benchmarks, and the oracle diff);
+This module implements the *semantics* vectorized over the hot head tier
+(S, H) of the tiered state — every schedule begins with the cond-guarded
+`ensure_head`, after which candidate windows, spray windows, and prefix pops
+touch only (S, <= m + pad) head columns, so per-step cost scales with the
+batch, not the capacity.  This is the single-controller path used by tests,
+benchmarks, and the oracle diff;
 `repro.core.pqueue.dist` implements the same schedules with real collectives
 under shard_map.  STRICT_FLAT / HIER / FFWD are bit-identical in outcome and
 differ only in communication — exactly the paper's "same structure, different
@@ -22,6 +26,7 @@ access path" property that makes SmartPQ's mode switch free.
 
 from __future__ import annotations
 
+import dataclasses
 import enum
 from typing import NamedTuple, Tuple
 
@@ -77,6 +82,49 @@ def multiq_bound(num_shards: int, m: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Hot-tier precondition shared by every schedule.
+# ---------------------------------------------------------------------------
+
+
+def _head_pad(num_shards: int) -> int:
+    """The spray window padding — also the refill hysteresis margin."""
+    return (_ilog2(num_shards) + 1) ** 2
+
+
+def ensure_head(state: PQState, m: int) -> PQState:
+    """Restore the hot-tier precondition before a delete batch of bound m:
+    every shard's head must hold its smallest min(H, shard size) elements
+    and be at least `m + pad` deep (the widest per-step draw window) unless
+    the shard is smaller than that.  The refill is `lax.cond`-guarded: in
+    steady state the predicate is false and the step does no O(capacity)
+    work at all."""
+    H = state.head_width
+    if m > H:
+        raise ValueError(
+            f"delete batch bound m={m} exceeds the hot head tier width "
+            f"H={H}; raise head_width (H-sizing rule: H >= m + "
+            f"(ilog2(S)+1)^2 for spray, H >= m for exact/MULTIQ — see "
+            f"state.py)"
+        )
+    if state.tail_width == 0:
+        return state
+    need = min(H, m + _head_pad(state.num_shards))
+    pred = jnp.any((state.head_size < need) & (state.tail_size > 0))
+    return jax.lax.cond(pred, L.refill_head, lambda s: s, state)
+
+
+def _pop_head_prefix(state: PQState, take: jnp.ndarray) -> PQState:
+    """Remove per-shard head prefixes (the only way any schedule removes)."""
+    hk, hv, hq, hsize = L.remove_prefix(
+        state.head_keys, state.head_vals, state.head_seq, state.head_size,
+        take,
+    )
+    return dataclasses.replace(
+        state, head_keys=hk, head_vals=hv, head_seq=hq, head_size=hsize
+    )
+
+
+# ---------------------------------------------------------------------------
 # Exact schedules (STRICT_FLAT / HIER / FFWD share the tournament semantics).
 # ---------------------------------------------------------------------------
 
@@ -86,14 +134,15 @@ def _tournament(
 ) -> DeleteResult:
     """Exact top-`active` removal (active <= m static bound).
 
-    Each shard nominates its m smallest (a prefix — the buffer is sorted), a
-    global tournament selects the winners, and every shard removes the prefix
-    it lost.  Tie-break: (key, shard, slot) lexicographic, matching both the
-    flat argsort order and the oracle.
+    Each shard nominates its m smallest (a prefix of the sorted head, which
+    `ensure_head` guarantees holds the shard's true smallest-m), a global
+    tournament selects the winners, and every shard removes the prefix it
+    lost.  Tie-break: (key, shard, slot) lexicographic; head slot order is
+    seq order (I4), so this matches the oracle's (key, shard, seq).
     """
-    S = state.num_shards
-    cand_k = state.keys[:, :m]  # (S, m)
-    cand_v = state.vals[:, :m]
+    state = ensure_head(state, m)
+    cand_k = state.head_keys[:, :m]  # (S, m)
+    cand_v = state.head_vals[:, :m]
 
     n = jnp.minimum(active, state.total_size).astype(jnp.int32)
     win_k, win_v = L.topk_of_merged(cand_k.ravel(), cand_v.ravel(), m)
@@ -102,11 +151,11 @@ def _tournament(
     take = L.count_winners_per_shard(cand_k, cutoff, n)
     take = jnp.where(n > 0, take, 0)
 
-    keys, vals, size = L.remove_prefix(state.keys, state.vals, state.size, take)
+    state = _pop_head_prefix(state, take)
     lane = jnp.arange(m, dtype=jnp.int32)
     out_k = jnp.where(lane < n, win_k, INF_KEY)
     out_v = jnp.where(lane < n, win_v, 0)
-    return DeleteResult(PQState(keys, vals, size), out_k, out_v, n)
+    return DeleteResult(state, out_k, out_v, n)
 
 
 def delete_strict_flat(
@@ -125,25 +174,26 @@ def delete_hier(
     semifinal never eliminates a global winner: a pod's top-m contains every
     candidate that can rank in the global top-m)."""
     del rng
+    state = ensure_head(state, m)
     S = state.num_shards
     assert S % npods == 0, f"shards {S} must split evenly over {npods} pods"
     # Phase 1 (intra-pod, fast ICI): per-pod top-m.   Phase 2 (pod axis only):
     # npods*m candidates.  The single-controller path computes the same values
     # the two-phase collective computes; dist.py issues the real collectives.
-    cand_k = state.keys[:, :m].reshape(npods, -1)
-    cand_v = state.vals[:, :m].reshape(npods, -1)
+    cand_k = state.head_keys[:, :m].reshape(npods, -1)
+    cand_v = state.head_vals[:, :m].reshape(npods, -1)
     pod_k, pod_v = jax.vmap(lambda k, v: L.topk_of_merged(k, v, m))(cand_k, cand_v)
     win_k, win_v = L.topk_of_merged(pod_k.ravel(), pod_v.ravel(), m)
 
     n = jnp.minimum(active, state.total_size).astype(jnp.int32)
     cutoff = win_k[jnp.maximum(n - 1, 0)]
-    take = L.count_winners_per_shard(state.keys[:, :m], cutoff, n)
+    take = L.count_winners_per_shard(state.head_keys[:, :m], cutoff, n)
     take = jnp.where(n > 0, take, 0)
-    keys, vals, size = L.remove_prefix(state.keys, state.vals, state.size, take)
+    state = _pop_head_prefix(state, take)
     lane = jnp.arange(m, dtype=jnp.int32)
     out_k = jnp.where(lane < n, win_k, INF_KEY)
     out_v = jnp.where(lane < n, win_v, 0)
-    return DeleteResult(PQState(keys, vals, size), out_k, out_v, n)
+    return DeleteResult(state, out_k, out_v, n)
 
 
 def delete_ffwd(
@@ -176,8 +226,14 @@ def _spray(
       tight when few deleters land on the shard.
     adaptive_window=False (fraser flavour): uniform window spray_bound/S —
       wider, cheaper to compute, slightly worse envelope constants.
+
+    All randomness, ranking, and compaction are bounded by the static spray
+    window W = min(m + pad, H): the uniform draw is (S, W), the double
+    argsort is over W columns, and `remove_at` compacts only the window —
+    nothing in this schedule scales with the capacity.
     """
-    S, C = state.keys.shape
+    state = ensure_head(state, m)
+    S, H = state.head_keys.shape
     k_shard, k_pos = jax.random.split(rng)
 
     lane = jnp.arange(m, dtype=jnp.int32)
@@ -186,30 +242,37 @@ def _spray(
     shard_choice = jnp.where(act, shard_choice, S)  # park inactive lanes
     m_s = jnp.zeros((S,), jnp.int32).at[shard_choice].add(1, mode="drop")
 
-    pad = (_ilog2(S) + 1) ** 2
+    pad = _head_pad(S)
+    W = min(m + pad, H)  # static bound on every per-shard window
     if adaptive_window:
         window = m_s + pad
     else:
         window = jnp.full((S,), -(-m // S) + pad, jnp.int32)
-    window = jnp.minimum(jnp.minimum(window, state.size), C)
+    window = jnp.minimum(jnp.minimum(window, state.head_size), W)
 
     # Distinct random positions inside each shard's window: rank the uniform
     # scores and keep the m_s smallest ranks that fall inside the window.
-    u = jax.random.uniform(k_pos, (S, C))
-    col = jnp.arange(C, dtype=jnp.int32)[None, :]
+    u = jax.random.uniform(k_pos, (S, W))
+    col = jnp.arange(W, dtype=jnp.int32)[None, :]
     score = jnp.where(col < window[:, None], u, 2.0)
     order = jnp.argsort(score, axis=1)
     rank = jnp.argsort(order, axis=1)
     takeable = jnp.minimum(m_s, window)
     remove_mask = rank < takeable[:, None]
 
-    removed_k = jnp.where(remove_mask, state.keys, INF_KEY)
-    removed_v = jnp.where(remove_mask, state.vals, 0)
+    removed_k = jnp.where(remove_mask, state.head_keys[:, :W], INF_KEY)
+    removed_v = jnp.where(remove_mask, state.head_vals[:, :W], 0)
     out_k, out_v = L.topk_of_merged(removed_k.ravel(), removed_v.ravel(), m)
 
-    keys, vals, size = L.remove_at(state.keys, state.vals, state.size, remove_mask)
+    hk, hv, hq, hsize = L.remove_at(
+        state.head_keys, state.head_vals, state.head_seq, state.head_size,
+        remove_mask,
+    )
+    state = dataclasses.replace(
+        state, head_keys=hk, head_vals=hv, head_seq=hq, head_size=hsize
+    )
     n = jnp.sum(takeable).astype(jnp.int32)
-    return DeleteResult(PQState(keys, vals, size), out_k, out_v, n)
+    return DeleteResult(state, out_k, out_v, n)
 
 
 def delete_spray_herlihy(
@@ -242,7 +305,8 @@ def delete_multiq(
     deterministically and within `multiq_bound(S, m)` global rank w.h.p. —
     the paper's missing mixed-contention mode."""
     del npods
-    S, C = state.keys.shape
+    state = ensure_head(state, m)
+    S = state.num_shards
     k_a, k_b = jax.random.split(rng)
 
     lane = jnp.arange(m, dtype=jnp.int32)
@@ -250,15 +314,17 @@ def delete_multiq(
     choice_a = jax.random.randint(k_a, (m,), 0, S)
     choice_b = jax.random.randint(k_b, (m,), 0, S)
     counts = L.twochoice_pick(state.shard_mins, choice_a, choice_b, act)
-    take = jnp.minimum(counts, state.size)
+    take = jnp.minimum(counts, state.head_size)
 
     # Pops are head prefixes: the (S, m) head window masked to `take` feeds
     # the commit-side tournament (fused mask+merge Pallas kernel on TPU).
-    out_k, out_v = L.multiq_select(state.keys[:, :m], state.vals[:, :m], take)
+    out_k, out_v = L.multiq_select(
+        state.head_keys[:, :m], state.head_vals[:, :m], take
+    )
 
-    keys, vals, size = L.remove_prefix(state.keys, state.vals, state.size, take)
+    state = _pop_head_prefix(state, take)
     n = jnp.sum(take).astype(jnp.int32)
-    return DeleteResult(PQState(keys, vals, size), out_k, out_v, n)
+    return DeleteResult(state, out_k, out_v, n)
 
 
 def delete_local(
@@ -267,6 +333,7 @@ def delete_local(
     """Ablation lower bound: split the batch evenly, pop per-shard prefixes,
     no ordering between shards at all."""
     del rng, npods
+    state = ensure_head(state, m)
     S = state.num_shards
     base, rem = divmod(m, S)
     quota = base + (jnp.arange(S, dtype=jnp.int32) < rem).astype(jnp.int32)
@@ -275,16 +342,17 @@ def delete_local(
     cum_from_tail = jnp.cumsum(quota[::-1])[::-1]
     shrink = jnp.clip(quota - (cum_from_tail - excess), 0, quota)
     quota = quota - shrink
-    take = jnp.minimum(quota, state.size)
+    take = jnp.minimum(quota, state.head_size)
 
-    taken_mask = jnp.arange(state.capacity)[None, :] < take[:, None]
-    removed_k = jnp.where(taken_mask, state.keys, INF_KEY)
-    removed_v = jnp.where(taken_mask, state.vals, 0)
+    W = min(m, state.head_width)  # per-shard take <= quota <= m
+    taken_mask = jnp.arange(W)[None, :] < take[:, None]
+    removed_k = jnp.where(taken_mask, state.head_keys[:, :W], INF_KEY)
+    removed_v = jnp.where(taken_mask, state.head_vals[:, :W], 0)
     out_k, out_v = L.topk_of_merged(removed_k.ravel(), removed_v.ravel(), m)
 
-    keys, vals, size = L.remove_prefix(state.keys, state.vals, state.size, take)
+    state = _pop_head_prefix(state, take)
     n = jnp.sum(take).astype(jnp.int32)
-    return DeleteResult(PQState(keys, vals, size), out_k, out_v, n)
+    return DeleteResult(state, out_k, out_v, n)
 
 
 SCHEDULE_FNS = {

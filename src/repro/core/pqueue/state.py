@@ -1,17 +1,59 @@
-"""Sharded bulk-synchronous priority-queue state.
+"""Sharded bulk-synchronous priority-queue state — tiered head/tail layout.
 
 The paper's concurrent priority queue holds (key, value) pairs accessed by p
-threads.  The TPU adaptation holds the pairs in S shards, each an
-ascending-sorted fixed-capacity buffer padded with the INF sentinel.  The
-shards are the unit of placement: mapped onto mesh devices (one or more rows
-per device) and NEVER migrated between algorithmic modes — this is what makes
-SmartPQ's mode switch a zero-copy predicate flip (paper §3, key idea 3).
+threads.  The TPU adaptation holds the pairs in S shards.  The paper's whole
+premise is that contention concentrates at the *head*: deleteMin only ever
+touches the highest-priority elements (PAPER §2).  The state layout mirrors
+that: each shard is split into
+
+  * a **hot head block** ``(S, H)`` — ascending-sorted, INF-padded, holding
+    the shard's smallest ``head_size`` elements.  Every deleteMin schedule
+    (candidate windows, spray windows, prefix pops) and every insert merge
+    operates on this tier only, so per-step cost scales with the batch /
+    head-window size, not with the capacity;
+  * a **cold tail arena** ``(S, T)`` with ``T = C - H`` — an *unsorted*
+    dense-prefix append region.  Inserts whose key lands beyond the head
+    boundary are appended here in O(batch); head-merge overflow (the largest
+    elements) spills here.  The tail is only ever scanned by the rare,
+    ``lax.cond``-guarded rebalance (refill on head underflow, drop-compaction
+    on capacity overflow).
+
+Head sizing rule: ``H`` must cover every schedule's per-step draw window —
+``H >= m + (ilog2(S)+1)**2`` (the spray window bound; exact and MULTIQ
+schedules need only ``H >= m``, see ``schedules.spray_bound`` /
+``schedules.multiq_bound``).  ``make_state`` clamps ``H`` to the capacity, so
+small-capacity queues degenerate to the classic single-tier sorted buffer.
+
+The shards remain the unit of placement: mapped onto mesh devices and NEVER
+migrated between algorithmic modes — this is what makes SmartPQ's mode
+switch a zero-copy predicate flip (paper §3, key idea 3).  ``shard_mins``
+(the MultiQueue min cache) is still column 0 of the head, maintained for
+free.
+
+Per-shard insertion sequence numbers (``head_seq`` / ``tail_seq`` /
+``next_seq``) record the stable linearization order.  The head keeps them
+implicitly ordered (stable merges + the strict boundary split guarantee
+equal-key head entries are in seq order, and every equal-key tail entry has
+a larger seq than any head entry), so the hot path never sorts by seq; the
+rare rebalance sorts the tail by ``(key, seq)``, which is exactly what makes
+the exact schedules bit-identical to the oracle's (key, shard, seq)
+linearization even when elements bounce head -> tail -> head.
 
 Invariants (property-tested in tests/test_pqueue_property.py):
-  I1  keys[s] is ascending for every shard s
-  I2  keys[s, size[s]:] == INF_KEY and keys[s, :size[s]] < INF_KEY
+  I1  head_keys[s] is ascending for every shard s
+  I2  head_keys[s, head_size[s]:] == INF_KEY and the valid prefix < INF_KEY
   I3  multiset of valid (key, value) pairs is conserved by every op batch
       (inserted - deleted, up to reported drops on capacity overflow)
+  I4  head/tail boundary: max(valid head keys) <= min(valid tail keys); for
+      equal keys the head holds the smaller sequence numbers
+  I5  staging accounting: tail valid entries are exactly the dense prefix
+      [0, tail_size), INF beyond; all seq numbers are unique and < next_seq
+
+Known bound: ``next_seq`` is a monotone per-shard int32 counter — after
+~2.1e9 cumulative inserts routed to ONE shard it would wrap negative and
+break the (key, seq) order (far beyond any current workload: ~500M serving
+steps at the benchmark shapes).  A seq renumbering pass in the rebalance is
+the designated fix if that horizon ever matters (see ROADMAP).
 """
 
 from __future__ import annotations
@@ -27,46 +69,99 @@ import jax.numpy as jnp
 # tail, indistinguishable from padding (by design).
 INF_KEY = jnp.iinfo(jnp.int32).max
 
+# Default hot-head width: covers every shipped schedule's per-step window
+# (delete batches up to m=192 with the spray pad at S<=64 shards).
+DEFAULT_HEAD_WIDTH = 256
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PQState:
-    """keys/vals: (S, C); size: (S,) count of valid entries per shard."""
+    """Tiered shard state.
 
-    keys: jnp.ndarray  # (S, C) int32, ascending, INF-padded
-    vals: jnp.ndarray  # (S, C) int32 payload (request-id / vertex-id / ...)
-    size: jnp.ndarray  # (S,)   int32
+    head_*: (S, H) sorted hot tier; tail_*: (S, T) unsorted cold arena;
+    head_size/tail_size: (S,) valid counts; next_seq: (S,) per-shard
+    insertion counter (the stable-linearization clock).
+    """
+
+    head_keys: jnp.ndarray  # (S, H) int32, ascending, INF-padded
+    head_vals: jnp.ndarray  # (S, H) int32 payload
+    head_seq: jnp.ndarray  # (S, H) int32 per-shard insertion seq
+    tail_keys: jnp.ndarray  # (S, T) int32, dense prefix, INF beyond
+    tail_vals: jnp.ndarray  # (S, T) int32
+    tail_seq: jnp.ndarray  # (S, T) int32
+    head_size: jnp.ndarray  # (S,) int32
+    tail_size: jnp.ndarray  # (S,) int32
+    next_seq: jnp.ndarray  # (S,) int32
 
     @property
     def num_shards(self) -> int:
-        return self.keys.shape[0]
+        return self.head_keys.shape[0]
+
+    @property
+    def head_width(self) -> int:
+        return self.head_keys.shape[1]
+
+    @property
+    def tail_width(self) -> int:
+        return self.tail_keys.shape[1]
 
     @property
     def capacity(self) -> int:
-        return self.keys.shape[1]
+        return self.head_width + self.tail_width
+
+    @property
+    def size(self) -> jnp.ndarray:
+        """(S,) valid entries per shard across both tiers."""
+        return self.head_size + self.tail_size
 
     @property
     def total_size(self) -> jnp.ndarray:
-        return jnp.sum(self.size)
+        return jnp.sum(self.head_size + self.tail_size)
+
+    @property
+    def keys(self) -> jnp.ndarray:
+        """(S, C) concatenated view (head then tail arena).  NOT globally
+        sorted per row when the tail is non-empty — use for multiset-style
+        reads (``state.keys[state.keys < INF_KEY]``), not for order."""
+        return jnp.concatenate([self.head_keys, self.tail_keys], axis=1)
+
+    @property
+    def vals(self) -> jnp.ndarray:
+        """(S, C) concatenated payload view matching ``keys``."""
+        return jnp.concatenate([self.head_vals, self.tail_vals], axis=1)
 
     @property
     def shard_mins(self) -> jnp.ndarray:
         """(S,) cached per-shard minimum — the MultiQueue min cache.
 
-        Because every shard buffer is kept ascending-sorted (I1) with INF
-        padding (I2), the cache is simply column 0: maintained for free by
-        every insert/delete, never stale, and INF exactly for empty shards.
-        This is what makes the two-choice MULTIQ schedule's probe step a
-        pair of O(1) reads instead of a scan."""
-        return self.keys[:, 0]
+        The head tier is kept ascending-sorted (I1) with INF padding (I2)
+        and always holds the shard's smallest elements (I4), so the cache is
+        simply head column 0: maintained for free by every insert/delete,
+        never stale, and INF exactly for empty shards.  This is what makes
+        the two-choice MULTIQ schedule's probe step a pair of O(1) reads
+        instead of a scan."""
+        return self.head_keys[:, 0]
 
 
-def make_state(num_shards: int, capacity: int) -> PQState:
-    """Empty queue: S shards of capacity C."""
-    keys = jnp.full((num_shards, capacity), INF_KEY, dtype=jnp.int32)
-    vals = jnp.zeros((num_shards, capacity), dtype=jnp.int32)
-    size = jnp.zeros((num_shards,), dtype=jnp.int32)
-    return PQState(keys=keys, vals=vals, size=size)
+def make_state(
+    num_shards: int, capacity: int, head_width: int | None = None
+) -> PQState:
+    """Empty queue: S shards of capacity C, head tier of min(H, C)."""
+    H = min(head_width if head_width is not None else DEFAULT_HEAD_WIDTH,
+            capacity)
+    T = capacity - H
+    return PQState(
+        head_keys=jnp.full((num_shards, H), INF_KEY, dtype=jnp.int32),
+        head_vals=jnp.zeros((num_shards, H), dtype=jnp.int32),
+        head_seq=jnp.zeros((num_shards, H), dtype=jnp.int32),
+        tail_keys=jnp.full((num_shards, T), INF_KEY, dtype=jnp.int32),
+        tail_vals=jnp.zeros((num_shards, T), dtype=jnp.int32),
+        tail_seq=jnp.zeros((num_shards, T), dtype=jnp.int32),
+        head_size=jnp.zeros((num_shards,), dtype=jnp.int32),
+        tail_size=jnp.zeros((num_shards,), dtype=jnp.int32),
+        next_seq=jnp.zeros((num_shards,), dtype=jnp.int32),
+    )
 
 
 def fill_state(
@@ -81,18 +176,53 @@ def fill_state(
 
 
 def check_invariants(state: PQState) -> Tuple[bool, str]:
-    """Host-side invariant checker (I1, I2). Returns (ok, message)."""
+    """Host-side invariant checker (I1, I2, I4, I5). Returns (ok, message)."""
     import numpy as np
 
-    keys = np.asarray(state.keys)
-    size = np.asarray(state.size)
-    for s in range(keys.shape[0]):
-        row = keys[s]
+    hk = np.asarray(state.head_keys)
+    hq = np.asarray(state.head_seq)
+    tk = np.asarray(state.tail_keys)
+    tq = np.asarray(state.tail_seq)
+    hsize = np.asarray(state.head_size)
+    tsize = np.asarray(state.tail_size)
+    nseq = np.asarray(state.next_seq)
+    S, H = hk.shape
+    T = tk.shape[1]
+    for s in range(S):
+        row, n = hk[s], int(hsize[s])
         if not np.all(row[:-1] <= row[1:]):
-            return False, f"shard {s}: keys not ascending"
-        n = int(size[s])
-        if n < keys.shape[1] and not np.all(row[n:] == INF_KEY):
-            return False, f"shard {s}: padding not INF beyond size={n}"
+            return False, f"shard {s}: head keys not ascending (I1)"
+        if n < H and not np.all(row[n:] == INF_KEY):
+            return False, f"shard {s}: head padding not INF beyond size={n} (I2)"
         if np.any(row[:n] == INF_KEY):
-            return False, f"shard {s}: INF sentinel inside valid prefix"
+            return False, f"shard {s}: INF sentinel inside head prefix (I2)"
+        tn = int(tsize[s])
+        tvalid = tk[s, :tn]
+        if np.any(tvalid == INF_KEY):
+            return False, f"shard {s}: INF inside tail prefix [0,{tn}) (I5)"
+        if tn < T and not np.all(tk[s, tn:] == INF_KEY):
+            return False, f"shard {s}: tail not INF beyond size={tn} (I5)"
+        if tn > 0 and n > 0:
+            hmax, tmin = int(row[n - 1]), int(tvalid.min())
+            if hmax > tmin:
+                return False, (
+                    f"shard {s}: head max {hmax} > tail min {tmin} (I4)"
+                )
+            # equal keys straddling the boundary: head seqs must be smaller
+            at_h = hq[s, :n][row[:n] == tmin]
+            at_t = tq[s, :tn][tvalid == tmin]
+            if at_h.size and at_t.size and at_h.max() > at_t.min():
+                return False, f"shard {s}: boundary-tie seq inversion (I4)"
+        # (an empty head over a non-empty tail is legal between steps — the
+        # next delete's cond-guarded refill restores the hot tier lazily)
+        # seq accounting: unique, < next_seq, and head equal-key runs ordered
+        seqs = np.concatenate([hq[s, :n], tq[s, :tn]])
+        if seqs.size and (seqs.max() >= int(nseq[s]) or
+                          np.unique(seqs).size != seqs.size):
+            return False, f"shard {s}: seq not unique/bounded (I5)"
+        for k in np.unique(row[:n][np.r_[False, row[1:n] == row[: n - 1]]]
+                           if n > 1 else []):
+            grp = hq[s, :n][row[:n] == k]
+            if np.any(np.diff(grp) < 0):
+                return False, f"shard {s}: head equal-key seq disorder (I4)"
     return True, "ok"

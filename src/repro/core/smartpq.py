@@ -41,6 +41,7 @@ caller-supplied active-client count, and derives Table-1 features on the fly.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -90,6 +91,9 @@ class SmartPQCarry(NamedTuple):
 class SmartPQConfig:
     num_shards: int = 64
     capacity: int = 4096
+    # hot head tier width (None -> state.DEFAULT_HEAD_WIDTH, clamped to
+    # capacity).  H-sizing rule: H >= batch + (ilog2(S)+1)^2 (see state.py).
+    head_width: int | None = None
     npods: int = 2
     decision_interval: int = 8  # steps between classifier calls
     # Schedule per mode id — index == classifier class == switch branch.
@@ -153,9 +157,21 @@ class SmartPQ:
             max_key=jnp.int32(0),
             transitions=jnp.int32(0),
         )
-        return SmartPQCarry(make_state(c.num_shards, c.capacity), stats)
+        return SmartPQCarry(
+            make_state(c.num_shards, c.capacity, head_width=c.head_width),
+            stats,
+        )
 
     # -- the adaptive step ----------------------------------------------------
+
+    @functools.cached_property
+    def jit_step(self):
+        """`step` jitted with the carry DONATED: XLA aliases every PQState /
+        stats buffer input->output (asserted via `utils.hlo.donation_aliases`
+        in tests), so a steady-state step moves the queue zero times.  The
+        caller must thread the returned carry and never reuse the argument
+        (its buffers are deleted) — exactly the scan/serving-loop pattern."""
+        return jax.jit(self.step, donate_argnums=(0,))
 
     def step(
         self,
@@ -243,13 +259,15 @@ class SmartPQ:
         predictor.  State layout is identical between them, so the host
         dispatcher can flip modes between calls with zero copies — the same
         no-synchronization-point property, for runtimes that want smaller
-        programs than the fused lax.switch one."""
+        programs than the fused lax.switch one.  The state argument is
+        donated (buffer-aliased in place); callers that need to keep a state
+        across a call must `jax.tree.map(jnp.copy, state)` first."""
         c = self.config
 
         def _mk(schedule: Schedule):
             fn = SCH.SCHEDULE_FNS[schedule]
 
-            @jax.jit
+            @functools.partial(jax.jit, donate_argnums=(0,))
             def mode_step(state: PQState, ops, keys, vals, rng):
                 B = ops.shape[0]
                 ins_mask = ops == OP_INSERT

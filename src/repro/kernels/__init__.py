@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the PQ hot spots.
 
-bitonic_topk  — the deleteMin tournament's candidate selection
-sorted_merge  — the insert path's run-into-buffer merge
+bitonic_topk   — the deleteMin tournament's candidate selection
+sorted_merge   — legacy capacity-wide run-into-buffer merge (keeps C smallest)
+windowed_merge — tiered insert's head-tier merge (full H+R window, no drop)
 
 Each kernel ships with a pure-jnp oracle in ref.py and a jit'd public
 wrapper in ops.py that dispatches kernel vs. reference (interpret=True on
@@ -10,4 +11,8 @@ kernels lower to reshapes + selects only — no gathers, no data-dependent
 control flow: MXU-free, VPU-saturating, VMEM-resident.
 """
 
-from repro.kernels.ops import topk_smallest, merge_sorted_runs  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    merge_sorted_runs,
+    topk_smallest,
+    windowed_merge,
+)

@@ -17,6 +17,7 @@ from repro.kernels import ref as R
 from repro.kernels.bitonic_topk import topk_smallest_pallas
 from repro.kernels.sorted_merge import merge_sorted_pallas
 from repro.kernels.twochoice import multiq_select_pallas, twochoice_pick_pallas
+from repro.kernels.windowed_merge import windowed_merge_pallas
 
 
 def _next_pow2(n: int) -> int:
@@ -106,6 +107,55 @@ def multiq_select_topm(
     out_v = jnp.where(out_k < INF_KEY, win_v.ravel()[safe_t], 0)
     out_k = jnp.where(out_k < INF_KEY, out_k, INF_KEY)
     return out_k, out_v
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def windowed_merge(
+    head_k: jnp.ndarray,  # (S, H) ascending INF-padded hot tier
+    head_v: jnp.ndarray,
+    head_q: jnp.ndarray,  # (S, H) per-shard insertion seqs
+    run_k: jnp.ndarray,  # (S, R) ascending INF-padded incoming run
+    run_v: jnp.ndarray,
+    run_q: jnp.ndarray,
+    use_kernel: bool = True,
+):
+    """Full (S, H+R) merge of head tier and incoming run, ascending —
+    nothing dropped (the caller splits the result into new head [:H] and
+    tail-bound spill [H:]).
+
+    Tag trick as in `topk_smallest`: the network merges (key, position-tag)
+    pairs (head tags 0..H-1, run tags H..H+R-1), payloads (val AND seq) are
+    gathered by tag afterwards — bit-identical to the positional-stable
+    rank merge in `local.merge_head_run`."""
+    S, H = head_k.shape
+    Rw = run_k.shape[1]
+    W = H + Rw
+    head_t = jnp.broadcast_to(jnp.arange(H, dtype=jnp.int32)[None, :], (S, H))
+    run_t = jnp.broadcast_to(
+        H + jnp.arange(Rw, dtype=jnp.int32)[None, :], (S, Rw)
+    )
+    if not use_kernel:
+        out_k, out_t = R.windowed_merge_ref(head_k, head_t, run_k, run_t)
+    else:
+        Wp = _next_pow2(W)
+        pad = Wp - W
+        rk = run_k
+        rt = H + jnp.arange(Rw + pad, dtype=jnp.int32)[None, :]
+        rt = jnp.broadcast_to(rt, (S, Rw + pad))
+        if pad:
+            rk = jnp.pad(rk, ((0, 0), (0, pad)), constant_values=INF_KEY)
+        out_k, out_t = windowed_merge_pallas(
+            head_k, head_t, rk, rt, interpret=not _on_tpu()
+        )
+        out_k, out_t = out_k[:, :W], out_t[:, :W]
+
+    src_v = jnp.concatenate([head_v, run_v], axis=1)
+    src_q = jnp.concatenate([head_q, run_q], axis=1)
+    idx = jnp.clip(out_t, 0, W - 1)
+    valid = out_k < INF_KEY
+    out_v = jnp.where(valid, jnp.take_along_axis(src_v, idx, axis=1), 0)
+    out_q = jnp.where(valid, jnp.take_along_axis(src_q, idx, axis=1), 0)
+    return out_k, out_v, out_q
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))

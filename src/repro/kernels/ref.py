@@ -63,3 +63,17 @@ def merge_sorted_runs_ref(buf_k, buf_v, run_k, run_v):
         jnp.take_along_axis(cat_k, order, axis=-1),
         jnp.take_along_axis(cat_v, order, axis=-1),
     )
+
+
+def windowed_merge_ref(head_k, head_t, run_k, run_t):
+    """(S, H) head + (S, R) run (both ascending, INF-padded) -> the FULL
+    (S, H+R) merged window, ascending (lexicographic on (key, tag) — tags
+    are positions, head before run, so this equals the positional-stable
+    rank merge)."""
+    cat_k = jnp.concatenate([head_k, run_k], axis=-1)
+    cat_t = jnp.concatenate([head_t, run_t], axis=-1)
+    order = _lex_order(cat_k, cat_t)
+    return (
+        jnp.take_along_axis(cat_k, order, axis=-1),
+        jnp.take_along_axis(cat_t, order, axis=-1),
+    )

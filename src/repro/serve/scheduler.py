@@ -77,7 +77,7 @@ class SmartPQScheduler:
             initial_mode=MODE_AWARE,
         ))
         self.carry = self.pq.init()
-        self._step_fn = jax.jit(self.pq.step)
+        self._step_fn = self.pq.jit_step  # donated carry: zero-copy steps
         self._requests: Dict[int, Request] = {}
         self._rng = jax.random.key(seed)
         self._step = 0

@@ -260,6 +260,35 @@ def flops_and_bytes(cost: dict) -> Tuple[float, float]:
     return flops, nbytes
 
 
+_ALIAS_BLOCK_RE = re.compile(r"input_output_alias=\{(.*?)\}\s*,\s*\w+=",
+                             re.DOTALL)
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}:\s*\(\s*(\d+)\s*,\s*\{([\d,\s]*)\}\s*,\s*([\w-]+)\s*\)"
+)
+
+
+def donation_aliases(compiled):
+    """Parse the compiled module's ``input_output_alias`` table (the record
+    XLA emits when buffer donation succeeded).
+
+    Returns a list of (output_index, param_number, param_index, kind)
+    tuples — empty when nothing is aliased, i.e. when every donated input
+    would still be copied.  This is the no-copy assertion the tiered PQ's
+    donated step paths are pinned with (donated carries must alias through,
+    otherwise each step pays a full O(S*C) state copy)."""
+    text = compiled.as_text()
+    m = _ALIAS_BLOCK_RE.search(text)
+    if not m:
+        return []
+    return [
+        (tuple(int(x) for x in out.split(",") if x.strip()),
+         int(param),
+         tuple(int(x) for x in pidx.split(",") if x.strip()),
+         kind)
+        for out, param, pidx, kind in _ALIAS_ENTRY_RE.findall(m.group(1))
+    ]
+
+
 def xla_cost_analysis(compiled) -> dict:
     """Version-stable `compiled.cost_analysis()`: older jax returns a list of
     per-module dicts (one entry per partition), newer returns the dict

@@ -15,7 +15,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.pqueue import dist as D
 from repro.core.pqueue import ops as O
 from repro.core.pqueue.schedules import Schedule
-from repro.core.pqueue.state import INF_KEY, PQState, make_state
+from repro.core.pqueue.state import INF_KEY, make_state
 from repro.distributed.mesh import make_mesh
 from repro.distributed.shardmap import shard_map
 from repro.core.nuddle import (
@@ -37,24 +37,22 @@ st, _ = O.insert(st, keys, vals)
 
 
 def make_dist_step(fn):
+    # the tiered PQState pytree shards along the leading (shard) axis of
+    # every leaf, so a single spec prefix covers the whole dataclass
     @partial(
         shard_map,
         mesh=mesh,
-        in_specs=(P(("pod", "shard")),) * 5,
-        out_specs=(
-            P(("pod", "shard")), P(("pod", "shard")), P(("pod", "shard")),
-            P(None), P(None), P(),
-        ),
+        in_specs=(P(("pod", "shard")), P(("pod", "shard")), P(("pod", "shard"))),
+        out_specs=(P(("pod", "shard")), P(None), P(None), P()),
         check_vma=False,
     )
-    def dist_step(keys, vals, size, new_k, new_v):
-        state = PQState(keys, vals, size)
+    def dist_step(state, new_k, new_v):
         mask = new_k[0] < INF_KEY
         state, dropped, rejected = D.insert_dist(
             state, new_k[0], new_v[0], mask, cfg, capacity_factor=8.0
         )
         st2, wk, wv, n = fn(state, 8, jnp.int32(5), jax.random.key(0), cfg)
-        return st2.keys, st2.vals, st2.size, wk, wv, n
+        return st2, wk, wv, n
 
     return dist_step
 
@@ -68,25 +66,26 @@ for name, fn in [
     ("hier", D.delete_hier_dist),
     ("ffwd", D.delete_ffwd_dist),
 ]:
-    out = make_dist_step(fn)(st.keys, st.vals, st.size, ins_k, ins_v)
+    out = make_dist_step(fn)(st, ins_k, ins_v)
     results[name] = jax.tree.map(np.asarray, out)
 
 for a in ("hier", "ffwd"):
-    for i in range(6):
-        np.testing.assert_array_equal(results["flat"][i], results[a][i])
+    for x, y in zip(jax.tree.leaves(results["flat"]), jax.tree.leaves(results[a])):
+        np.testing.assert_array_equal(x, y)
 print("DIST flat == hier == ffwd OK")
 
 st_sc, _ = O.insert(st, ins_k.reshape(-1), ins_v.reshape(-1))
 res_sc = O.delete_min(st_sc, 8, schedule=Schedule.STRICT_FLAT, active=5)
-np.testing.assert_array_equal(np.asarray(res_sc.keys), results["flat"][3])
-rem_dist = np.sort(results["flat"][0][results["flat"][0] < INF_KEY])
+np.testing.assert_array_equal(np.asarray(res_sc.keys), results["flat"][1])
+flat_keys = np.asarray(results["flat"][0].keys)
+rem_dist = np.sort(flat_keys[flat_keys < INF_KEY])
 rem_sc = np.sort(np.asarray(res_sc.state.keys[res_sc.state.keys < INF_KEY]))
 np.testing.assert_array_equal(rem_dist, rem_sc)
 print("DIST == single-controller OK")
 
 # spray dist: no collectives in the HLO
 lowered = jax.jit(make_dist_step(D.delete_spray_dist)).lower(
-    st.keys, st.vals, st.size, ins_k, ins_v
+    st, ins_k, ins_v
 )
 hlo = lowered.compile().as_text()
 import re

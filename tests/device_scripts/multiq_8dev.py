@@ -16,7 +16,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.pqueue import dist as D
 from repro.core.pqueue import ops as O
-from repro.core.pqueue.state import INF_KEY, PQState, make_state
+from repro.core.pqueue.state import INF_KEY, make_state
 from repro.distributed.mesh import make_mesh
 from repro.distributed.shardmap import shard_map
 
@@ -37,23 +37,23 @@ initial = np.sort(np.asarray(st.keys[st.keys < INF_KEY]).ravel())
 @partial(
     shard_map,
     mesh=mesh,
-    in_specs=(P(("pod", "shard")),) * 3,
+    # the tiered PQState pytree shards along the leading axis of every leaf
+    in_specs=(P(("pod", "shard")),),
     out_specs=(
         P(("pod", "shard")), P(("pod", "shard")), P(("pod", "shard")),
-        P(("pod", "shard")), P(("pod", "shard")),
     ),
     check_vma=False,
 )
-def multiq_step(keys, vals, size):
-    state = PQState(keys, vals, size)
+def multiq_step(state):
     dev = jax.lax.axis_index(("pod", "shard"))
     k = jax.random.fold_in(jax.random.key(7), dev)
     st2, wk, wv, n = D.delete_multiq_dist(state, M_LOC, jnp.int32(M_LOC), k, cfg)
-    return st2.keys, st2.vals, st2.size, wk[None, :], n[None, ...]
+    return st2, wk[None, :], n[None, ...]
 
 
-out = multiq_step(st.keys, st.vals, st.size)
-new_keys, _, new_size, ret_k, ret_n = jax.tree.map(np.asarray, out)
+out = multiq_step(st)
+st2_np, ret_k, ret_n = jax.tree.map(np.asarray, out)
+new_keys = np.asarray(st2_np.keys)
 
 # 1. conservation: remaining + returned == initial multiset, globally
 returned = ret_k[ret_k < INF_KEY]
@@ -75,7 +75,7 @@ for d in range(n_dev):
 print("MULTIQ-8DEV two-choice window OK")
 
 # 3. the MULTIQ delete path lowers with no cross-device collectives
-lowered = jax.jit(multiq_step).lower(st.keys, st.vals, st.size)
+lowered = jax.jit(multiq_step).lower(st)
 hlo = lowered.compile().as_text()
 colls = [
     l for l in hlo.splitlines()

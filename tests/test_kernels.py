@@ -82,3 +82,57 @@ def test_merge_against_local_semantics():
     )
     mk, _ = merge_sorted_runs(jk(buf_k), jk(buf_v), jk(run_k), jk(np.zeros_like(run_k)))
     np.testing.assert_array_equal(np.asarray(nk), np.asarray(mk))
+
+
+@pytest.mark.parametrize(
+    "S,H,R", [(4, 64, 16), (8, 128, 128), (2, 256, 7), (1, 64, 1),
+              (6, 100, 60), (3, 8, 8)]
+)
+def test_windowed_merge_exact(S, H, R):
+    """The windowed-merge kernel (full H+R window, nothing dropped) must be
+    bit-identical to BOTH the lexicographic reference and the
+    positional-stable rank merge in local.merge_head_run."""
+    from repro.core.pqueue.local import merge_head_run
+    from repro.kernels.ops import windowed_merge
+
+    head_k = np.full((S, H), INF_KEY, np.int32)
+    head_v = np.zeros((S, H), np.int32)
+    head_q = np.zeros((S, H), np.int32)
+    run_k = np.full((S, R), INF_KEY, np.int32)
+    run_v = np.zeros((S, R), np.int32)
+    run_q = np.zeros((S, R), np.int32)
+    for s in range(S):
+        n = RNG.integers(0, H + 1)
+        head_k[s, :n] = np.sort(RNG.integers(0, 60, n)).astype(np.int32)  # ties
+        head_v[s, :n] = RNG.integers(0, 1 << 20, n)
+        head_q[s, :n] = np.arange(n)
+        n = RNG.integers(0, R + 1)
+        run_k[s, :n] = np.sort(RNG.integers(0, 60, n)).astype(np.int32)
+        run_v[s, :n] = RNG.integers(0, 1 << 20, n)
+        run_q[s, :n] = 1000 + np.arange(n)
+    args = tuple(jnp.asarray(a)
+                 for a in (head_k, head_v, head_q, run_k, run_v, run_q))
+    ker = windowed_merge(*args, use_kernel=True)
+    ref = windowed_merge(*args, use_kernel=False)
+    jnp_path = merge_head_run(*args, use_kernel=False)
+    for a, b, c in zip(ker, ref, jnp_path):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_tiered_insert_kernel_path_matches(monkeypatch):
+    """A full tiered insert through the Pallas windowed-merge == jnp path."""
+    import repro.core.pqueue.local as L
+    from repro.core.pqueue import ops as O
+    from repro.core.pqueue.state import make_state
+
+    rng = np.random.default_rng(5)
+    keys = jnp.asarray(rng.integers(0, 300, 96), jnp.int32)
+    vals = jnp.asarray(rng.integers(0, 99, 96), jnp.int32)
+    st_ref, _ = O.insert(make_state(4, 64, head_width=16), keys, vals)
+    monkeypatch.setattr(L, "_USE_KERNELS_ENV", True)
+    st_ker, _ = O.insert(make_state(4, 64, head_width=16), keys, vals)
+    for a, b in zip(
+        __import__("jax").tree.leaves(st_ref), __import__("jax").tree.leaves(st_ker)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -224,6 +224,152 @@ def test_delete_all_returns_sorted(n, seed):
     assert int(stq.total_size) == 0
 
 
+# -- tiered head/tail layout: I4 (boundary) + I5 (staging accounting) --------
+#
+# H < C below forces real head/tail traffic: boundary splits, spills,
+# cond-guarded refills — the paths the default-H tests (H == C, tail width 0)
+# never exercise.
+
+H_TIER, C_TIER = 8, 64
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _tier_step(schedule):
+    """Jitted fixed-shape op-batch step — keeps the example sweep on the
+    compiled path (one compile per schedule)."""
+
+    @jax.jit
+    def step(state, ops, keys, vals, rng):
+        return O.apply_op_batch(
+            state, ops, keys, vals, schedule=schedule, rng=rng, npods=2
+        )
+
+    return step
+
+
+_tier_insert = jax.jit(O.insert)
+
+
+@functools.lru_cache(maxsize=None)
+def _tier_delete(schedule):
+    @jax.jit
+    def d(state, rng):
+        return O.delete_min(state, B, schedule=schedule, active=B, rng=rng)
+
+    return d
+
+
+@settings(max_examples=12, deadline=None)
+@given(batches=st.lists(op_batch, min_size=2, max_size=6), seed=st.integers(0, 2**20))
+def test_tiered_exact_bitmatches_oracle(batches, seed):
+    """With the tail arena active (H=8 < C=64), STRICT_FLAT still linearizes
+    like the oracle ELEMENT FOR ELEMENT — keys and vals — across insert
+    splits, spills, and refills (the I4 seq-ordering guarantee)."""
+    stq, ref = make_state(S, C_TIER, head_width=H_TIER), RefPQ(S, C_TIER)
+    rng = np.random.default_rng(seed)
+    for batch in batches:
+        ops = np.array([o for o, _ in batch] + [0] * (B - len(batch)), np.int32)
+        keys = np.array([k for _, k in batch] + [INF_KEY] * (B - len(batch)), np.int32)
+        vals = rng.integers(0, 100, B).astype(np.int32)
+        r = _tier_step(Schedule.STRICT_FLAT)(
+            stq, jnp.asarray(ops), jnp.asarray(keys), jnp.asarray(vals),
+            jax.random.key(seed),
+        )
+        stq = r.state
+        ref.insert_batch(keys, vals, mask=(ops == 0) & (keys < INF_KEY))
+        rk, rv = ref.delete_min_exact(int(((ops == 1)).sum()))
+        n = int(r.n_deleted)
+        np.testing.assert_array_equal(np.asarray(r.deleted_keys)[:n], rk)
+        np.testing.assert_array_equal(np.asarray(r.deleted_vals)[:n], rv)
+        ok, msg = check_invariants(stq)
+        assert ok, msg
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(stq.keys[stq.keys < INF_KEY]).ravel()),
+        ref.key_multiset(),
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    batches=st.lists(op_batch, min_size=2, max_size=5),
+    seed=st.integers(0, 2**20),
+)
+def test_tier_invariants_all_schedules(batches, seed):
+    """I4/I5 hold after every op batch of every SmartPQ mode when the tail
+    arena is active, and each run conserves its element multiset (I3)."""
+    for schedule in (Schedule.SPRAY_HERLIHY, Schedule.MULTIQ, Schedule.HIER,
+                     Schedule.LOCAL):
+        stq = make_state(S, C_TIER, head_width=H_TIER)
+        inserted, deleted = [], []
+        for step, batch in enumerate(batches):
+            ops = np.array([o for o, _ in batch] + [1] * (B - len(batch)), np.int32)
+            keys = np.array(
+                [k for _, k in batch] + [INF_KEY] * (B - len(batch)), np.int32
+            )
+            r = _tier_step(schedule)(
+                stq, jnp.asarray(ops), jnp.asarray(keys),
+                jnp.asarray(keys % 97), jax.random.key(seed + step),
+            )
+            stq = r.state
+            inserted.extend(keys[(ops == 0) & (keys < INF_KEY)].tolist())
+            deleted.extend(
+                np.asarray(r.deleted_keys)[: int(r.n_deleted)].tolist()
+            )
+            ok, msg = check_invariants(stq)
+            assert ok, f"{schedule.name}: {msg}"
+        remaining = np.asarray(stq.keys[stq.keys < INF_KEY]).ravel().tolist()
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(deleted + remaining)),
+            np.sort(np.asarray(inserted)),
+            err_msg=f"{schedule.name}: element loss or duplication",
+        )
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(30, 120), seed=st.integers(0, 2**20))
+def test_tiered_drain_returns_sorted(n, seed):
+    """Draining a tiered queue (repeated refills) yields the global sort."""
+    rng = np.random.default_rng(seed)
+    arr = rng.integers(0, 500, n).astype(np.int32)
+    stq = make_state(S, C_TIER, head_width=H_TIER)
+    for i in range(0, n, B):
+        chunk = arr[i : i + B]
+        kb = np.concatenate([chunk, np.full(B - len(chunk), INF_KEY, np.int32)])
+        stq, _ = _tier_insert(stq, jnp.asarray(kb), jnp.asarray(kb))
+    out = []
+    for _ in range(-(-n // B)):
+        res = _tier_delete(Schedule.STRICT_FLAT)(stq, jax.random.key(0))
+        stq = res.state
+        out.extend(np.asarray(res.keys)[: int(res.n_out)].tolist())
+        ok, msg = check_invariants(stq)
+        assert ok, msg
+    np.testing.assert_array_equal(np.asarray(out), np.sort(arr))
+    assert int(stq.total_size) == 0
+
+
+def test_tiered_capacity_overflow_drops_largest():
+    """The cond-guarded overflow branch keeps the C smallest of the union
+    and reports the rest — same accounting as the classic merge."""
+    stq = make_state(2, 8, head_width=4)  # C=8 per shard, tail arena of 4
+    keys = jnp.arange(64, dtype=jnp.int32)
+    stq, dropped = O.insert(stq, keys, jnp.zeros(64, jnp.int32))
+    assert int(stq.total_size) == 16
+    assert int(jnp.sum(dropped)) == 64 - 16
+    ok, msg = check_invariants(stq)
+    assert ok, msg
+    # the survivors are the 8 smallest routed to each shard
+    kept = np.sort(np.asarray(stq.keys[stq.keys < INF_KEY]).ravel())
+    from repro.utils.hashing import shard_of_key
+
+    dest = np.asarray(shard_of_key(keys, 2))
+    want = np.sort(np.concatenate(
+        [np.sort(np.arange(64)[dest == s])[:8] for s in range(2)]
+    ))
+    np.testing.assert_array_equal(kept, want)
+
+
 def test_spray_bound_monotone():
     for m in (1, 8, 64):
         prev = 0

@@ -62,8 +62,12 @@ def test_zero_copy_transition():
     ops = jnp.full((32,), OP_DELETE_MIN, jnp.int32)
     keys = jnp.full((32,), INF_KEY, jnp.int32)
     vals = jnp.zeros((32,), jnp.int32)
-    r_obl = mode_steps[MODE_OBLIVIOUS](carry.state, ops, keys, vals, key)
-    r_aw = mode_steps[MODE_AWARE](carry.state, ops, keys, vals, key)
+    # mode steps DONATE their state argument — keep copies to run both modes
+    # from the same starting state
+    st_obl = jax.tree.map(jnp.copy, carry.state)
+    st_aw = jax.tree.map(jnp.copy, carry.state)
+    r_obl = mode_steps[MODE_OBLIVIOUS](st_obl, ops, keys, vals, key)
+    r_aw = mode_steps[MODE_AWARE](st_aw, ops, keys, vals, key)
     # identical state layout, identical multiset semantics
     assert jax.tree.structure(r_obl.state) == jax.tree.structure(r_aw.state)
     for a, b in zip(jax.tree.leaves(r_obl.state), jax.tree.leaves(r_aw.state)):
@@ -93,14 +97,19 @@ def test_aware_mode_exact_oblivious_relaxed():
     mode_steps = pq.make_mode_steps()
     ops = jnp.full((16,), OP_DELETE_MIN, jnp.int32)
     keys = jnp.full((16,), INF_KEY, jnp.int32)
-    r_aw = mode_steps[MODE_AWARE](carry.state, ops, keys, jnp.zeros(16, jnp.int32), key)
+    # mode steps donate their state argument — copy per call
+    r_aw = mode_steps[MODE_AWARE](
+        jax.tree.map(jnp.copy, carry.state), ops, keys,
+        jnp.zeros(16, jnp.int32), key,
+    )
     exact_k, _ = ref.delete_min_exact(16)
     np.testing.assert_array_equal(np.asarray(r_aw.keys)[: int(r_aw.n_out)], exact_k)
 
     ref2 = RefPQ(CFG.num_shards, CFG.capacity)
     ref2._items = list(ref._items)  # post-delete state? use fresh oracle
     r_ob = mode_steps[MODE_OBLIVIOUS](
-        carry.state, ops, keys, jnp.zeros(16, jnp.int32), key
+        jax.tree.map(jnp.copy, carry.state), ops, keys,
+        jnp.zeros(16, jnp.int32), key,
     )
     got = np.asarray(r_ob.keys)[: int(r_ob.n_out)]
     # envelope vs the PRE-delete oracle

@@ -1,0 +1,152 @@
+"""Tiered-layout performance contracts.
+
+Three machine-checked claims of the head/tail PQState restructure:
+
+  1. hot-path cost is proportional to the batch, NOT the capacity — the
+     compiled steady-state step (rebalance conds on their fall-through
+     branch) must grow sublinearly when C quadruples at fixed batch;
+  2. the donated step paths really are zero-copy — XLA's
+     input_output_alias table must alias the carry through, and the donated
+     buffers must actually be consumed;
+  3. the benchmark runner's --smoke lane emits the machine-readable
+     BENCH_pq.json trajectory file with a stable schema.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.pqueue import ops as O
+from repro.core.pqueue.schedules import Schedule
+from repro.core.pqueue.state import make_state
+from repro.utils.hlo import donation_aliases, xla_cost_analysis
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# 1. capacity-sublinear hot path (xla_cost_analysis regression)
+# ---------------------------------------------------------------------------
+
+
+def _hot_path_cost(schedule, capacity, S=16, B=64):
+    """FLOPs / bytes of the compiled steady-state step: the rebalance
+    lax.conds are forced onto their identity/no-overflow branch, which is
+    exactly the program the queue runs between (rare, amortized)
+    rebalances."""
+    st = make_state(S, capacity)
+
+    @jax.jit
+    def step(state, ops, keys, vals, k):
+        return O.apply_op_batch(
+            state, ops, keys, vals, schedule=schedule, rng=k, npods=2
+        )
+
+    args = (st, jnp.zeros(B, jnp.int32), jnp.zeros(B, jnp.int32),
+            jnp.zeros(B, jnp.int32), jax.random.key(0))
+    compiled = step.lower(*args).compile()
+    cost = xla_cost_analysis(compiled)
+    return float(cost.get("flops", 0.0)), float(cost.get("bytes accessed", 0.0))
+
+
+@pytest.mark.parametrize("schedule", list(Schedule), ids=lambda s: s.name)
+def test_step_cost_capacity_sublinear(schedule, monkeypatch):
+    """C: 4096 -> 16384 (4x) at fixed batch must grow hot-path FLOPs ~not at
+    all (every compute op is head/batch-windowed) and bytes sublinearly
+    (the only O(C) terms left are the state pass-through and the tail
+    append scatter)."""
+    monkeypatch.setattr(
+        jax.lax, "cond", lambda pred, true_fn, false_fn, *ops_: false_fn(*ops_)
+    )
+    f1, b1 = _hot_path_cost(schedule, 4096)
+    f2, b2 = _hot_path_cost(schedule, 16384)
+    assert f2 <= f1 * 1.2, (
+        f"{schedule.name}: hot-path FLOPs scale with capacity "
+        f"({f1:.0f} -> {f2:.0f})"
+    )
+    assert b2 <= b1 * 3.3, (
+        f"{schedule.name}: hot-path bytes near-linear in capacity "
+        f"({b1:.0f} -> {b2:.0f}, ratio {b2 / max(b1, 1):.2f} vs linear 4.0)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# 2. donation: the step paths alias the carry (no state copy)
+# ---------------------------------------------------------------------------
+
+
+def _smartpq():
+    from repro.core.smartpq import SmartPQ, SmartPQConfig
+
+    return SmartPQ(SmartPQConfig(num_shards=8, capacity=512, npods=2,
+                                 decision_interval=4))
+
+
+def test_jit_step_donates_carry_no_copy():
+    pq = _smartpq()
+    carry = pq.init()
+    B = 16
+    ops = jnp.zeros((B,), jnp.int32)
+    keys = jnp.arange(B, dtype=jnp.int32)
+    vals = jnp.ones((B,), jnp.int32)
+    args = (carry, ops, keys, vals, jax.random.key(0), jnp.int32(8))
+
+    compiled = pq.jit_step.lower(*args).compile()
+    aliases = donation_aliases(compiled)
+    n_state_leaves = len(jax.tree.leaves(carry.state))
+    assert len(aliases) >= n_state_leaves, (
+        f"expected every PQState buffer aliased input->output, got "
+        f"{len(aliases)} aliases: {aliases}"
+    )
+
+    out_carry, _ = pq.jit_step(*args)
+    # the donated buffers were really consumed (no hidden copy kept them)
+    assert carry.state.head_keys.is_deleted()
+    assert carry.state.tail_keys.is_deleted()
+    assert not out_carry.state.head_keys.is_deleted()
+
+
+def test_mode_steps_donate_state():
+    pq = _smartpq()
+    mode_steps = pq.make_mode_steps()
+    st = pq.init().state
+    B = 16
+    keys = jnp.asarray(np.arange(B), jnp.int32)
+    st, _ = O.insert(st, keys, keys)
+    res = mode_steps[0](st, jnp.ones((B,), jnp.int32), keys, keys,
+                        jax.random.key(1))
+    assert st.head_keys.is_deleted(), "mode step must donate its state"
+    assert not res.state.head_keys.is_deleted()
+
+
+# ---------------------------------------------------------------------------
+# 3. BENCH_pq.json smoke lane
+# ---------------------------------------------------------------------------
+
+
+def test_bench_smoke_writes_json(tmp_path):
+    out = tmp_path / "BENCH_pq.json"
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
+         "--json", str(out)],
+        cwd=ROOT, capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    data = json.loads(out.read_text())
+    assert data["schema"] == 1
+    recs = data["records"]
+    assert {r["schedule"] for r in recs} >= {
+        "STRICT_FLAT", "SPRAY_HERLIHY", "MULTIQ"
+    }
+    for r in recs:  # stable before/after-diffable schema
+        for key in ("suite", "name", "us_per_call", "derived", "schedule",
+                    "us_per_step", "capacity", "num_clients", "num_shards",
+                    "size", "insert_frac"):
+            assert key in r, (key, r)
+        assert r["us_per_step"] > 0
