@@ -18,6 +18,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.classifier.features import NUM_MODES
 from repro.core.pqueue import ops as O
 from repro.core.pqueue.schedules import Schedule
 from repro.core.pqueue.state import INF_KEY, make_state
@@ -135,6 +136,68 @@ def step_latency_us(
         jax.block_until_ready(jax.tree.leaves(r.state))
         times.append((time.perf_counter() - t0) * 1e6)
         st = r.state
+    return float(np.median(times))
+
+
+def window_latency_us(
+    workload: PQWorkload,
+    K: int = 64,
+    iters: int = 8,
+    schedule: Optional[Schedule] = None,
+    eliminate: bool = True,
+) -> float:
+    """Median microseconds per fused `run_window(K)` call — ONE device
+    dispatch for K * num_clients operations (donated carry).  Divide by
+    K * num_clients for the per-operation latency BENCH_pq.json's
+    fig9_window suite tracks.
+
+    schedule=None runs the adaptive engine; a Schedule pins every mode to
+    that schedule (the window engine with the switch predicate constant),
+    which is what makes the numbers comparable to `step_latency_us`'s fixed
+    cast.  The carry is rebuilt (outside the timer) every iteration so each
+    window sees the same initialized queue."""
+    cfg = SmartPQConfig(
+        num_shards=workload.num_shards, capacity=workload.capacity,
+        npods=workload.npods, decision_interval=2,
+        mode_schedules=(
+            (schedule,) * NUM_MODES if schedule is not None
+            else SmartPQConfig().mode_schedules
+        ),
+        eliminate=eliminate,
+    )
+    pq = SmartPQ(cfg)
+    rng = np.random.default_rng(workload.seed + 1)
+    key = jax.random.key(workload.seed)
+    B = workload.num_clients
+
+    def make_window():
+        ops = np.empty((K, B), np.int32)
+        keys = np.empty((K, B), np.int32)
+        for t in range(K):
+            o, k, _ = workload.op_batch(rng)
+            ops[t], keys[t] = np.asarray(o), np.asarray(k)
+        return (jnp.asarray(ops), jnp.asarray(keys),
+                jnp.zeros((K, B), jnp.int32))
+
+    def fresh_carry():
+        return pq.init()._replace(state=workload.init_state())
+
+    fn = pq.jit_run_window
+    key, sub = jax.random.split(key)
+    ops, keys, vals = make_window()
+    out = fn(fresh_carry(), ops, keys, vals, jax.random.split(sub, K), B)
+    jax.block_until_ready(jax.tree.leaves(out[0].state))  # compile+warm
+    times = []
+    for _ in range(iters):
+        carry = fresh_carry()
+        ops, keys, vals = make_window()
+        key, sub = jax.random.split(key)
+        subs = jax.random.split(sub, K)
+        jax.block_until_ready(jax.tree.leaves(carry.state))
+        t0 = time.perf_counter()
+        carry, _ = fn(carry, ops, keys, vals, subs, B)
+        jax.block_until_ready(jax.tree.leaves(carry.state))
+        times.append((time.perf_counter() - t0) * 1e6)
     return float(np.median(times))
 
 

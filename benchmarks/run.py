@@ -20,8 +20,8 @@ def main() -> None:
                     help="reduced sweep sizes (CI mode)")
     ap.add_argument(
         "--only", default=None,
-        help="comma list of: fig1,fig7,fig9,fig9_latency,fig10,fig12,"
-             "classifier,roofline,kernels,rank_error,smoke",
+        help="comma list of: fig1,fig7,fig9,fig9_latency,fig9_window,fig10,"
+             "fig12,classifier,roofline,kernels,rank_error,smoke",
     )
     ap.add_argument(
         "--schedule", default="all",
@@ -37,7 +37,31 @@ def main() -> None:
         help="run only the seconds-scale smoke suite (fast tier-1 lane); "
              "implies --json BENCH_pq.json unless --json is given",
     )
+    ap.add_argument(
+        "--check", action="store_true",
+        help="compare fresh medians against the committed BENCH_pq.json "
+             "(matched by record name) and exit non-zero on regression",
+    )
+    ap.add_argument(
+        "--check-ratio", type=float, default=2.0, metavar="R",
+        help="fail --check when fresh/committed exceeds R (default 2.0)",
+    )
+    ap.add_argument(
+        "--csv", default=None, metavar="PATH",
+        help="also write the CSV rows to PATH (the EXPERIMENTS.md trend "
+             "tracking input, e.g. --schedule multiq --only rank_error)",
+    )
     args, _ = ap.parse_known_args()
+
+    committed = None
+    if args.check:  # load BEFORE any --json write can overwrite the baseline
+        baseline_path = Path(__file__).resolve().parents[1] / "BENCH_pq.json"
+        if not baseline_path.exists():
+            raise SystemExit(f"--check: no committed baseline at {baseline_path}")
+        committed = {
+            r["name"]: r
+            for r in json.loads(baseline_path.read_text())["records"]
+        }
 
     from benchmarks import (
         classifier_eval,
@@ -51,6 +75,7 @@ def main() -> None:
         multiq_rank_error,
         roofline,
         smoke,
+        window_amortization,
     )
 
     suites = {
@@ -58,6 +83,7 @@ def main() -> None:
         "fig7": fig7_sweeps.run,
         "fig9": fig9_grid.run,
         "fig9_latency": fig9_grid.run_latency,
+        "fig9_window": window_amortization.run,
         "fig10": fig10_dynamic.run,
         "fig12": fig12_cpu_adaptive.run,
         "classifier": classifier_eval.run,
@@ -80,6 +106,13 @@ def main() -> None:
     for name in selected:
         suites[name](quick=args.quick)
 
+    if args.csv:
+        Path(args.csv).write_text(
+            "\n".join(["name,us_per_call,derived"] + common.CSV_ROWS) + "\n"
+        )
+        print(f"# wrote {len(common.CSV_ROWS)} CSV rows to {args.csv}",
+              file=sys.stderr)
+
     if args.json:
         import jax
 
@@ -93,6 +126,34 @@ def main() -> None:
         Path(args.json).write_text(json.dumps(payload, indent=1) + "\n")
         print(f"# wrote {len(common.BENCH_RECORDS)} records to {args.json}",
               file=sys.stderr)
+
+    if args.check:
+        compared, regressions = 0, []
+        for rec in common.BENCH_RECORDS:
+            base = committed.get(rec["name"])
+            if base is None or base.get("us_per_call", 0) <= 0:
+                continue
+            compared += 1
+            ratio = rec["us_per_call"] / base["us_per_call"]
+            marker = " REGRESSION" if ratio > args.check_ratio else ""
+            print(f"# check {rec['name']}: {base['us_per_call']:.1f} -> "
+                  f"{rec['us_per_call']:.1f} us ({ratio:.2f}x){marker}",
+                  file=sys.stderr)
+            if ratio > args.check_ratio:
+                regressions.append((rec["name"], ratio))
+        if compared == 0:
+            raise SystemExit(
+                "--check: no fresh record matches the committed baseline "
+                "(run a suite whose records are committed, e.g. --smoke)"
+            )
+        if regressions:
+            raise SystemExit(
+                f"--check: {len(regressions)} record(s) regressed beyond "
+                f"{args.check_ratio}x: "
+                + ", ".join(f"{n} ({r:.2f}x)" for n, r in regressions)
+            )
+        print(f"# check ok: {compared} record(s) within "
+              f"{args.check_ratio}x of committed medians", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,66 @@
+"""fig9_window: dispatch amortization of the fused-window engine.
+
+PR 2 made compiled per-step FLOPs capacity-independent, which left the fig9
+ins0 medians dominated by per-step dispatch + host sync (4.6–6.4 ms/step at
+B=64 — 72–100 us per OPERATION).  `SmartPQ.run_window` rolls K steps into
+one donated `lax.scan`, so this suite's headline metric is per-operation
+latency: one fused window of K steps, wall-clock / (K * B).
+
+Cast mirrors the fig9/latency acceptance slice (same workload coordinates:
+ins0, size 4096, C=1<<14) so BENCH_pq.json diffs read straight across:
+per schedule, `us_per_op` for the fused window vs the sequential per-step
+path, plus the adaptive engine itself.  Acceptance: fused K=64 per-op
+latency >= 5x below the sequential per-step medians.
+"""
+
+from benchmarks.common import (
+    PQWorkload,
+    emit,
+    step_latency_us,
+    window_latency_us,
+    workload_fields,
+)
+from repro.core.pqueue.schedules import Schedule
+
+CAST = [
+    ("lotan_shavit", Schedule.STRICT_FLAT),
+    ("alistarh_herlihy", Schedule.SPRAY_HERLIHY),
+    ("multiqueue", Schedule.MULTIQ),
+    ("nuddle", Schedule.HIER),
+    ("smartpq", None),  # the adaptive engine, switch predicate live
+]
+
+
+def run(quick: bool = False):
+    w = PQWorkload(
+        num_clients=64, size=4096, key_range=8192, insert_frac=0.0,
+        num_shards=16, npods=2, capacity=1 << 14,
+    )
+    K = 16 if quick else 64
+    iters = 4 if quick else 8
+    for name, sched in CAST:
+        us_win = window_latency_us(w, K=K, iters=iters, schedule=sched)
+        us_op = us_win / (K * w.num_clients)
+        seq_us_step = (
+            step_latency_us(w, sched, iters=4 if quick else 8)
+            if sched is not None else float("nan")
+        )
+        seq_us_op = seq_us_step / w.num_clients
+        derived = (
+            f"us_per_op={us_op:.2f};us_per_window={us_win:.0f}"
+            + (
+                f";seq_us_per_op={seq_us_op:.2f}"
+                f";amortization={seq_us_op / us_op:.1f}x"
+                if sched is not None else ""
+            )
+        )
+        emit(
+            f"fig9_window/size_4096/ins0/K{K}/{name}",
+            us_op,
+            derived,
+            schedule=sched.name if sched is not None else "SMARTPQ",
+            us_per_op=round(us_op, 3),
+            us_per_window=round(us_win, 1),
+            window=K,
+            **workload_fields(w),
+        )

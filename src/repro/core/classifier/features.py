@@ -14,6 +14,7 @@ on-device tree robust to the int32/float32 boundary.
 
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 FEATURE_NAMES = ("num_clients", "size", "key_range", "insert_frac")
@@ -52,3 +53,27 @@ def featurize(
         axis=-1,
     )
     return f.astype(np.float32)
+
+
+def featurize_jnp(
+    num_clients: jnp.ndarray,
+    size: jnp.ndarray,
+    key_range: jnp.ndarray,
+    insert_frac: jnp.ndarray,
+) -> jnp.ndarray:
+    """jnp mirror of `featurize` (same normalization) — the device-side
+    feature path SmartPQ's in-graph decision (and the fused window engine's
+    scan body) evaluates every step, replacing the paper's host round-trip.
+    Scalar inputs -> (4,) float32."""
+
+    def lg2(x):
+        return jnp.log2(jnp.maximum(x.astype(jnp.float32), 1.0))
+
+    return jnp.stack(
+        [
+            lg2(jnp.asarray(num_clients)),
+            lg2(jnp.asarray(size)),
+            lg2(jnp.asarray(key_range)),
+            jnp.asarray(insert_frac).astype(jnp.float32),
+        ]
+    )

@@ -52,7 +52,13 @@ def pack_tree(tree: DecisionTree) -> PackedTree:
 
 def tree_predict(packed: PackedTree, features: jnp.ndarray) -> jnp.ndarray:
     """features: (F,) float32 -> () int32 class.  Fixed `depth` iterations of
-    gather-compare-select; leaves self-loop so early arrival is harmless."""
+    gather-compare-select; leaves self-loop so early arrival is harmless.
+
+    This is the whole device-side inference path: SmartPQ evaluates it
+    inside the jitted step — and, fused-window form, inside every iteration
+    of the `run_window` lax.scan — so mode decisions happen mid-window
+    without leaving the device (`predict_mode_host` survives only as an
+    offline/debug entry point)."""
     node = jnp.int32(0)
     for _ in range(packed.depth):
         f = packed.feature[node]
@@ -62,3 +68,12 @@ def tree_predict(packed: PackedTree, features: jnp.ndarray) -> jnp.ndarray:
         nxt = jnp.where(go_left, packed.left[node], packed.right[node])
         node = jnp.where(f >= 0, nxt, node)
     return packed.label[node]
+
+
+def tree_predict_batch(packed: PackedTree, features: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized inference: (N, F) float32 -> (N,) int32 classes.  Used by
+    offline evaluation sweeps and window-level decision traces; the in-step
+    path stays scalar (one decision per step)."""
+    import jax
+
+    return jax.vmap(lambda f: tree_predict(packed, f))(features)

@@ -107,6 +107,32 @@ def delegate_dist(
     return ops.commit(local_state, verdict, ctx), verdict
 
 
+def delegate_window(
+    ops: DelegableOps,
+    local_states: Any,  # pytree with leading shard axis S
+    m: int,
+    npods: int,
+    ctxs: Any = None,  # pytree with leading round axis K (or None + length)
+    length: int | None = None,
+):
+    """K delegation rounds fused into one `lax.scan` — the window analogue
+    of the paper's serve_requests() loop, where a server thread serves a
+    whole BATCH of client requests per wakeup instead of one.
+
+    Each scan iteration runs the full two-phase hierarchical reduction
+    (`delegate_single_controller`), so a K-round window costs one device
+    dispatch instead of K.  Returns (final_states, stacked verdicts) —
+    bit-identical to K sequential delegate calls (tested)."""
+
+    def body(states, ctx):
+        new_states, verdict = delegate_single_controller(
+            ops, states, m, npods, ctx
+        )
+        return new_states, verdict
+
+    return jax.lax.scan(body, local_states, ctxs, length=length)
+
+
 # ---------------------------------------------------------------------------
 # Genericity demo #1: the PQ tournament as a DelegableOps plugin.
 # ---------------------------------------------------------------------------

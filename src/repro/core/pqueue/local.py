@@ -24,6 +24,17 @@ import jax.numpy as jnp
 from repro.core.pqueue.state import INF_KEY, PQState
 
 _INT32_MIN = jnp.iinfo(jnp.int32).min
+_INT32_MAX = jnp.iinfo(jnp.int32).max
+
+# Static width of the tail's unsorted append bucket.  When a shard's bucket
+# would outgrow it, the cond-guarded compaction sorts the BUCKET only
+# (O(U log U), U static) and rank-merges it into the leading sorted run
+# (O(T)) — replacing the old full O(T log T) tail sort on every refill.
+TAIL_BUCKET_WIDTH = 256
+
+# Renumber horizon: force a rebalance (which renumbers seqs positionally)
+# well before a shard's monotone next_seq could wrap int32.
+SEQ_RENUMBER_THRESHOLD = _INT32_MAX - (1 << 24)
 
 # Kernel dispatch: the Pallas kernels run on TPU; the jnp paths are the
 # oracle (and the CPU default — interpret-mode kernels are Python-slow).
@@ -78,27 +89,39 @@ def merge_head_run(
 
     S, H = head_k.shape
     R = run_k.shape[1]
-    # searchsorted per row: rank of each head key among the run ('left':
-    # count strictly less) and of each run key among the head ('right':
-    # count <=, the stable head-before-run tie-break).  The resulting
-    # positions are a permutation of [0, H+R) — no drop guard needed.
+    # Gather formulation (XLA:CPU scatter is a serialized per-index loop —
+    # the old position-scatter was the single hottest op of the step; wide
+    # variadic sorts degrade superlinearly, so a concat-and-stable-sort is
+    # no better).  Each head element's output position is its own index
+    # plus its rank among the run ('left': count strictly less — the stable
+    # head-before-run tie break); pos_head is strictly increasing, so for
+    # every output slot p a searchsorted finds whether p is a head slot
+    # (and which), else p is the (p - #head-before)th run element.  Pure
+    # searchsorted + gather + where; bit-identical to the scatter form (the
+    # positions are the same permutation of [0, H+R)).
     rank_head = jax.vmap(
         lambda inc, k: jnp.searchsorted(inc, k, side="left")
     )(run_k, head_k).astype(jnp.int32)
-    rank_run = jax.vmap(
-        lambda k, inc: jnp.searchsorted(k, inc, side="right")
-    )(head_k, run_k).astype(jnp.int32)
-    pos_head = jnp.arange(H, dtype=jnp.int32)[None, :] + rank_head
-    pos_run = jnp.arange(R, dtype=jnp.int32)[None, :] + rank_run
+    pos_head = jnp.arange(H, dtype=jnp.int32)[None, :] + rank_head  # (S, H)
 
-    row = jnp.arange(S, dtype=jnp.int32)[:, None]
-    out_k = jnp.full((S, H + R), INF_KEY, dtype=head_k.dtype)
-    out_v = jnp.zeros((S, H + R), dtype=head_v.dtype)
-    out_q = jnp.zeros((S, H + R), dtype=head_q.dtype)
-    out_k = out_k.at[row, pos_head].set(head_k).at[row, pos_run].set(run_k)
-    out_v = out_v.at[row, pos_head].set(head_v).at[row, pos_run].set(run_v)
-    out_q = out_q.at[row, pos_head].set(head_q).at[row, pos_run].set(run_q)
-    return out_k, out_v, out_q
+    p = jnp.broadcast_to(
+        jnp.arange(H + R, dtype=jnp.int32)[None, :], (S, H + R)
+    )
+    ia = jax.vmap(
+        lambda ph, q: jnp.searchsorted(ph, q, side="left")
+    )(pos_head, p).astype(jnp.int32)
+    ia_c = jnp.minimum(ia, H - 1)
+    from_head = (ia < H) & (jnp.take_along_axis(pos_head, ia_c, axis=1) == p)
+    ib = jnp.clip(p - ia, 0, R - 1)
+
+    def pick(head_x, run_x):
+        return jnp.where(
+            from_head,
+            jnp.take_along_axis(head_x, ia_c, axis=1),
+            jnp.take_along_axis(run_x, ib, axis=1),
+        )
+
+    return pick(head_k, run_k), pick(head_v, run_v), pick(head_q, run_q)
 
 
 # ---------------------------------------------------------------------------
@@ -138,11 +161,13 @@ def remove_at(
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Remove arbitrary positions inside the static spray window W (spray
     pops random slots in the top region; columns beyond W are untouched by
-    construction).  Compaction trick, windowed: removed window slots become
-    INF, a stable argsort of ONLY the (S, W) window restores its order, and
-    a single (S, H) gather splices the untouched suffix back after the
-    surviving window entries — O(W log W + H) per row instead of the old
-    O(C log C) full-row sort."""
+    construction).  Scatter- and sort-free compaction: survivor p's source
+    slot is the first window index whose inclusive keep-count reaches p+1 —
+    a row-wise searchsorted over the cumulative keep mask, followed by
+    take_along gathers (XLA:CPU runs sorts with payload operands orders of
+    magnitude slower than this).  The untouched suffix then splices back
+    behind the survivors with affine shifted gathers — O(W log W + H) per
+    row."""
     S, H = keys.shape
     W = remove_mask.shape[1]
     assert W <= H, (W, H)
@@ -150,14 +175,22 @@ def remove_at(
     hit = remove_mask & (win_k != INF_KEY)
     n_removed = jnp.sum(hit, axis=1).astype(jnp.int32)
 
-    masked_k = jnp.where(remove_mask, INF_KEY, win_k)
-    order = jnp.argsort(masked_k, axis=1, stable=True)  # (S, W)
-    win_sorted_k = jnp.take_along_axis(masked_k, order, axis=1)
-    win_sorted_v = jnp.take_along_axis(
-        jnp.where(remove_mask, 0, vals[:, :W]), order, axis=1
+    keep_rank = jnp.cumsum(~remove_mask, axis=1).astype(jnp.int32)  # (S, W)
+    q = jnp.broadcast_to(jnp.arange(1, W + 1, dtype=jnp.int32)[None, :],
+                         (S, W))
+    src = jax.vmap(
+        lambda kr, qq: jnp.searchsorted(kr, qq, side="left")
+    )(keep_rank, q).astype(jnp.int32)
+    src_ok = src < W
+    src = jnp.minimum(src, W - 1)
+    win_sorted_k = jnp.where(
+        src_ok, jnp.take_along_axis(win_k, src, axis=1), INF_KEY
     )
-    win_sorted_q = jnp.take_along_axis(
-        jnp.where(remove_mask, 0, seq[:, :W]), order, axis=1
+    win_sorted_v = jnp.where(
+        src_ok, jnp.take_along_axis(vals[:, :W], src, axis=1), 0
+    )
+    win_sorted_q = jnp.where(
+        src_ok, jnp.take_along_axis(seq[:, :W], src, axis=1), 0
     )
     pad = H - W
     if pad:
@@ -187,6 +220,162 @@ def remove_at(
 
 
 # ---------------------------------------------------------------------------
+# bucketed tail arena: sorted run + append bucket, merge-on-rebalance
+# ---------------------------------------------------------------------------
+
+
+def _renumber_seqs(
+    head_seq: jnp.ndarray,  # (S, H)
+    tail_seq: jnp.ndarray,  # (S, T)
+    head_size: jnp.ndarray,  # (S,)
+    tail_size: jnp.ndarray,  # (S,)
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Positional seq renumbering — the int32-wrap fix (ROADMAP item).
+
+    Precondition: slot order == linearization order in BOTH tiers (head
+    sorted with equal-key runs in seq order; tail fully (key, seq)-lex
+    sorted) — exactly the state every rebalance sort produces.  Then
+    ``head slot i -> seq i`` and ``tail slot j -> seq head_size + j``
+    preserves every relative (key, seq) comparison while resetting
+    ``next_seq`` to the shard population.  Side effect the bucket merge
+    relies on: the sorted run's seq column becomes globally ascending."""
+    S, H = head_seq.shape
+    T = tail_seq.shape[1]
+    col_h = jnp.arange(H, dtype=jnp.int32)[None, :]
+    new_hq = jnp.where(col_h < head_size[:, None], col_h, 0)
+    if T:
+        col_t = jnp.arange(T, dtype=jnp.int32)[None, :]
+        new_tq = jnp.where(
+            col_t < tail_size[:, None], head_size[:, None] + col_t, 0
+        )
+    else:
+        new_tq = tail_seq
+    return new_hq, new_tq, (head_size + tail_size).astype(jnp.int32)
+
+
+def _tail_window(state: PQState):
+    """Masked (key, val, seq) views of the tail's sliding window: stale
+    out-of-window slots read (INF, 0, 0).  The validity predicate is owned
+    by `PQState._tail_window_mask` (shared with the keys/vals views and the
+    invariant checker)."""
+    win = state._tail_window_mask()
+    return (
+        jnp.where(win, state.tail_keys, INF_KEY),
+        jnp.where(win, state.tail_vals, 0),
+        jnp.where(win, state.tail_seq, 0),
+    )
+
+
+def _full_sort_tail(state: PQState) -> PQState:
+    """Fallback compaction: (key, seq)-lex sort of the tail window, then
+    renumber; the window re-anchors at 0.  O(T log T) — taken only when the
+    append bucket exceeded its static width (batches wider than
+    TAIL_BUCKET_WIDTH)."""
+    wk, wv, wq = _tail_window(state)
+    order = _key_seq_order(wk, wq)
+    tk = jnp.take_along_axis(wk, order, axis=1)
+    tv = jnp.take_along_axis(wv, order, axis=1)
+    tq = jnp.take_along_axis(wq, order, axis=1)
+    hq, tq, nseq = _renumber_seqs(
+        state.head_seq, tq, state.head_size, state.tail_size
+    )
+    return dataclasses.replace(
+        state, tail_keys=tk, tail_vals=tv, tail_seq=tq, head_seq=hq,
+        tail_start=jnp.zeros_like(state.tail_start),
+        tail_sorted=state.tail_size, next_seq=nseq,
+    )
+
+
+def _bucket_merge_tail(state: PQState) -> PQState:
+    """Sort the append bucket and rank-merge it into the sorted run.
+
+    Cost per shard row: O(U log U) for the bucket sort (U = static
+    TAIL_BUCKET_WIDTH) + O(T + U log T) for the merge — the O(T) tail
+    rebalance the ROADMAP asked for.  The lexicographic (key, seq) merge
+    needs no packed 64-bit keys: the run's seq column is globally ascending
+    (renumbering invariant), so the count of run elements lex-below a bucket
+    element is ``clip(ss(run.seq, b.seq), ss(run.key, b.key, L),
+    ss(run.key, b.key, R))`` — three searchsorteds."""
+    S, T = state.tail_keys.shape
+    U = min(T, TAIL_BUCKET_WIDTH)
+    a_len = state.tail_sorted  # (S,) sorted-run lengths
+    b_len = state.tail_size - a_len  # (S,) bucket lengths, <= U (guarded)
+    t0 = state.tail_start
+    col_t = jnp.arange(T, dtype=jnp.int32)[None, :]
+    col_u = jnp.arange(U, dtype=jnp.int32)[None, :]
+    row = jnp.arange(S, dtype=jnp.int32)[:, None]
+
+    # -- extract + lex-sort the bucket (window offset t0 + a_len) ------------
+    gidx = jnp.clip(t0[:, None] + a_len[:, None] + col_u, 0, T - 1)
+    b_valid = col_u < b_len[:, None]
+    bk = jnp.where(b_valid, jnp.take_along_axis(state.tail_keys, gidx, axis=1),
+                   INF_KEY)
+    bv = jnp.where(b_valid, jnp.take_along_axis(state.tail_vals, gidx, axis=1),
+                   0)
+    bq = jnp.where(b_valid, jnp.take_along_axis(state.tail_seq, gidx, axis=1),
+                   _INT32_MAX)
+    order = _key_seq_order(bk, bq)
+    bk = jnp.take_along_axis(bk, order, axis=1)
+    bv = jnp.take_along_axis(bv, order, axis=1)
+    bq = jnp.take_along_axis(bq, order, axis=1)
+
+    # -- 0-aligned view of the sorted run (gather from the window) -----------
+    a_idx = jnp.clip(t0[:, None] + col_t, 0, T - 1)
+    a_valid = col_t < a_len[:, None]
+    ak = jnp.where(
+        a_valid, jnp.take_along_axis(state.tail_keys, a_idx, axis=1), INF_KEY
+    )
+    av = jnp.where(
+        a_valid, jnp.take_along_axis(state.tail_vals, a_idx, axis=1), 0
+    )
+    aq = jnp.where(
+        a_valid, jnp.take_along_axis(state.tail_seq, a_idx, axis=1),
+        _INT32_MAX,
+    )  # ascending overall
+
+    # -- lexicographic ranks of bucket elements in the run -------------------
+    lo = jax.vmap(lambda a, b: jnp.searchsorted(a, b, side="left"))(ak, bk)
+    hi = jax.vmap(lambda a, b: jnp.searchsorted(a, b, side="right"))(ak, bk)
+    sq = jax.vmap(lambda a, b: jnp.searchsorted(a, b, side="left"))(aq, bq)
+    pos_b = jnp.clip(sq, lo, hi).astype(jnp.int32) + col_u  # (S, U)
+
+    # -- scatter bucket, fill run into the complement slots ------------------
+    occ = jnp.zeros((S, T), jnp.int32).at[row, pos_b].set(1, mode="drop")
+    sk = jnp.full((S, T), INF_KEY, jnp.int32).at[row, pos_b].set(bk, mode="drop")
+    sv = jnp.zeros((S, T), jnp.int32).at[row, pos_b].set(bv, mode="drop")
+    sq_out = jnp.zeros((S, T), jnp.int32).at[row, pos_b].set(bq, mode="drop")
+    run_idx = jnp.clip(col_t - jnp.cumsum(occ, axis=1), 0, T - 1)
+    is_b = occ == 1
+    mk = jnp.where(is_b, sk, jnp.take_along_axis(ak, run_idx, axis=1))
+    mv = jnp.where(is_b, sv, jnp.take_along_axis(av, run_idx, axis=1))
+    mq = jnp.where(is_b, sq_out, jnp.take_along_axis(aq, run_idx, axis=1))
+
+    out_valid = col_t < state.tail_size[:, None]
+    mk = jnp.where(out_valid, mk, INF_KEY)
+    mv = jnp.where(out_valid, mv, 0)
+    mq = jnp.where(out_valid, mq, 0)
+    hq, mq, nseq = _renumber_seqs(
+        state.head_seq, mq, state.head_size, state.tail_size
+    )
+    return dataclasses.replace(
+        state, tail_keys=mk, tail_vals=mv, tail_seq=mq, head_seq=hq,
+        tail_start=jnp.zeros_like(state.tail_start),
+        tail_sorted=state.tail_size, next_seq=nseq,
+    )
+
+
+def compact_tail(state: PQState) -> PQState:
+    """Make the tail fully sorted (tail_sorted == tail_size) and renumber
+    seqs.  Bucket path when every shard's bucket fits the static window,
+    full-sort fallback otherwise.  Callers cond-guard the invocation."""
+    if state.tail_width == 0:
+        return state
+    U = min(state.tail_width, TAIL_BUCKET_WIDTH)
+    fits = jnp.all(state.tail_size - state.tail_sorted <= U)
+    return jax.lax.cond(fits, _bucket_merge_tail, _full_sort_tail, state)
+
+
+# ---------------------------------------------------------------------------
 # tiered insert + rebalance (the only O(capacity) paths, cond-guarded)
 # ---------------------------------------------------------------------------
 
@@ -202,20 +391,23 @@ def tiered_insert(
     Rank-split each run against the shard's head boundary key: head-bound
     keys (strictly below the boundary) merge into the (S, H) hot tier via
     the windowed merge; merge overflow (the largest elements) and tail-bound
-    keys append to the tail arena in O(batch).  Only when a shard's arena
-    cannot hold the append does the cond-guarded overflow branch run a full
-    (key, seq) sort that keeps the C smallest of the union and reports the
-    rest in `dropped` — the same semantics the old full-width merge had on
-    every step, now paid only at capacity.
+    keys append to the tail's unsorted bucket in O(batch).  Two cond-guarded
+    rebalances cover the rare paths: (a) when a shard's append bucket would
+    outgrow its static width — or next_seq nears the int32 wrap — the tail
+    is compacted (bucket sort + O(T) rank merge, seqs renumbered); (b) only
+    when a shard's arena cannot hold the append does the overflow branch run
+    a full (key, seq) sort that keeps the C smallest of the union and
+    reports the rest in `dropped` — the same semantics the old full-width
+    merge had on every step, now paid only at capacity.
     """
     S, H = state.head_keys.shape
     T = state.tail_width
     R = rk.shape[1]
     col = jnp.arange(R, dtype=jnp.int32)[None, :]
     valid = col < counts[:, None]
-    rq = jnp.where(valid, state.next_seq[:, None] + col, 0)
 
     if T == 0:
+        rq = jnp.where(valid, state.next_seq[:, None] + col, 0)
         # Single-tier degenerate case (capacity <= head width): plain
         # windowed merge, overflow (necessarily the largest) is dropped.
         mk, mv, mq = merge_head_run(
@@ -229,6 +421,20 @@ def tiered_insert(
             next_seq=state.next_seq + counts,
         )
         return new_state, dropped
+
+    # -- cond-guarded bucket compaction (before seq assignment so the run's
+    # fresh seqs come from the renumbered counter).  Fires when the append
+    # bucket would outgrow its static width, when the sliding window would
+    # creep off the arena end, or when next_seq nears the int32 wrap.
+    U = min(T, TAIL_BUCKET_WIDTH)
+    bucket_after = state.tail_size - state.tail_sorted + counts
+    need_compact = (
+        jnp.any(bucket_after > U)
+        | jnp.any(state.tail_start + state.tail_size + counts > T)
+        | jnp.any(state.next_seq + counts > SEQ_RENUMBER_THRESHOLD)
+    )
+    state = jax.lax.cond(need_compact, compact_tail, lambda s: s, state)
+    rq = jnp.where(valid, state.next_seq[:, None] + col, 0)
 
     # -- strict boundary split ------------------------------------------------
     row = jnp.arange(S, dtype=jnp.int32)[:, None]
@@ -273,38 +479,70 @@ def tiered_insert(
 
     def no_overflow(op):
         tk, tv, tq, tsize = op
-        pos1 = jnp.where(tb_sel, tsize[:, None] + col, T + R)
-        pos2 = jnp.where(
-            col < n_spill[:, None], tsize[:, None] + n_tail_inc[:, None] + col,
-            T + R,
-        )
-        tk = tk.at[row, pos1].set(trun_k, mode="drop")
-        tk = tk.at[row, pos2].set(sp_k, mode="drop")
-        tv = tv.at[row, pos1].set(trun_v, mode="drop")
-        tv = tv.at[row, pos2].set(sp_v, mode="drop")
-        tq = tq.at[row, pos1].set(trun_q, mode="drop")
-        tq = tq.at[row, pos2].set(sp_q, mode="drop")
+        # Gather append (scatter-free — see merge_head_run): the combined
+        # append run is trun ++ spill (width 2R); tail slot t takes
+        # arun[t - tail_size] when it lands in the append window, else
+        # keeps its value.
+        col2 = jnp.arange(2 * R, dtype=jnp.int32)[None, :]
+        in_trun = col2 < n_tail_inc[:, None]
+        idx_tr = jnp.clip(col2, 0, R - 1)
+        idx_sp = jnp.clip(col2 - n_tail_inc[:, None], 0, R - 1)
+
+        def arun(trun_x, sp_x):
+            return jnp.where(
+                in_trun,
+                jnp.take_along_axis(trun_x, idx_tr, axis=1),
+                jnp.take_along_axis(sp_x, idx_sp, axis=1),
+            )
+
+        colT = jnp.arange(T, dtype=jnp.int32)[None, :]
+        rel = colT - (state.tail_start + tsize)[:, None]  # window-end slot
+        in_app = (rel >= 0) & (rel < n_append[:, None])
+        rel_c = jnp.clip(rel, 0, 2 * R - 1)
+
+        def splice(tail_x, trun_x, sp_x):
+            return jnp.where(
+                in_app,
+                jnp.take_along_axis(arun(trun_x, sp_x), rel_c, axis=1),
+                tail_x,
+            )
+
         return (
-            nh_k, nh_v, nh_q, tk, tv, tq,
+            nh_k, nh_v, nh_q,
+            splice(tk, trun_k, sp_k),
+            splice(tv, trun_v, sp_v),
+            splice(tq, trun_q, sp_q),
             new_hsize, (tsize + n_append).astype(jnp.int32),
+            state.tail_start,
+            state.tail_sorted,  # appends only grow the unsorted bucket
+            state.next_seq + counts,
             jnp.zeros((S,), jnp.int32),
         )
 
     def overflow(op):
         tk, tv, tq, tsize = op
-        cat_k = jnp.concatenate([nh_k, tk, trun_k, sp_k], axis=1)
-        cat_v = jnp.concatenate([nh_v, tv, trun_v, sp_v], axis=1)
-        cat_q = jnp.concatenate([nh_q, tq, trun_q, sp_q], axis=1)
+        wk, wv, wq = _tail_window(state)  # stale slots masked out
+        cat_k = jnp.concatenate([nh_k, wk, trun_k, sp_k], axis=1)
+        cat_v = jnp.concatenate([nh_v, wv, trun_v, sp_v], axis=1)
+        cat_q = jnp.concatenate([nh_q, wq, trun_q, sp_q], axis=1)
         order = _key_seq_order(cat_k, cat_q)
         sk = jnp.take_along_axis(cat_k, order, axis=1)[:, : H + T]
         sv = jnp.take_along_axis(cat_v, order, axis=1)[:, : H + T]
         sq = jnp.take_along_axis(cat_q, order, axis=1)[:, : H + T]
         dropped = jnp.maximum(valid_total - (H + T), 0).astype(jnp.int32)
+        hsize_new = jnp.minimum(valid_total, H).astype(jnp.int32)
+        tsize_new = jnp.clip(valid_total - H, 0, T).astype(jnp.int32)
+        # The sort put both tiers in linearization order — renumber.
+        hq_new, tq_new, nseq_new = _renumber_seqs(
+            sq[:, :H], sq[:, H:], hsize_new, tsize_new
+        )
         return (
-            sk[:, :H], sv[:, :H], sq[:, :H],
-            sk[:, H:], sv[:, H:], sq[:, H:],
-            jnp.minimum(valid_total, H).astype(jnp.int32),
-            jnp.clip(valid_total - H, 0, T).astype(jnp.int32),
+            sk[:, :H], sv[:, :H], hq_new,
+            sk[:, H:], sv[:, H:], tq_new,
+            hsize_new, tsize_new,
+            jnp.zeros((S,), jnp.int32),  # window re-anchored at 0
+            tsize_new,  # fully sorted tail
+            nseq_new,
             dropped,
         )
 
@@ -314,58 +552,104 @@ def tiered_insert(
         no_overflow,
         (state.tail_keys, state.tail_vals, state.tail_seq, state.tail_size),
     )
-    hk, hv, hq, tk, tv, tq, hsize, tsize, dropped = out
+    hk, hv, hq, tk, tv, tq, hsize, tsize, tstart, tsorted, nseq, dropped = out
     new_state = dataclasses.replace(
         state,
         head_keys=hk, head_vals=hv, head_seq=hq,
         tail_keys=tk, tail_vals=tv, tail_seq=tq,
         head_size=hsize, tail_size=tsize,
-        next_seq=state.next_seq + counts,
+        tail_start=tstart, tail_sorted=tsorted, next_seq=nseq,
     )
     return new_state, dropped
 
 
-def refill_head(state: PQState) -> PQState:
-    """Restore the hot tier: pull the tail's (key, seq)-smallest elements
-    into the head until it is full (or the tail is drained).  O(T log T) —
-    called only from the cond-guarded `ensure_head` when a shard's head
-    underflows below its per-step draw bound, so the cost amortizes over the
-    many O(H) steps in between."""
+def _consume_run(state: PQState) -> PQState:
+    """Pull the sorted run's front into the head and advance the window
+    origin — the tail arrays are READ but never rewritten.  Precondition:
+    the append bucket is empty (compact_tail ran if needed).
+
+    No merge network is needed: the boundary invariant I4 guarantees every
+    tail key >= the head's max (boundary ties carry LARGER seqs in the
+    tail), so the consumed run CONCATENATES after the head prefix — head
+    slot p takes run element p - head_size, an affine per-row gather."""
     S, H = state.head_keys.shape
     T = state.tail_width
-    if T == 0:
-        return state
-    order = _key_seq_order(state.tail_keys, state.tail_seq)
-    st_k = jnp.take_along_axis(state.tail_keys, order, axis=1)
-    st_v = jnp.take_along_axis(state.tail_vals, order, axis=1)
-    st_q = jnp.take_along_axis(state.tail_seq, order, axis=1)
-
     take = jnp.minimum(H - state.head_size, state.tail_size).astype(jnp.int32)
-    Wr = min(H, T)
-    col = jnp.arange(Wr, dtype=jnp.int32)[None, :]
-    sel = col < take[:, None]
-    run_k = jnp.where(sel, st_k[:, :Wr], INF_KEY)
-    run_v = jnp.where(sel, st_v[:, :Wr], 0)
-    run_q = jnp.where(sel, st_q[:, :Wr], 0)
 
-    mk, mv, mq = merge_head_run(
-        state.head_keys, state.head_vals, state.head_seq, run_k, run_v, run_q
-    )  # head_size + take <= H, so the spill region is empty by construction
+    col = jnp.arange(H, dtype=jnp.int32)[None, :]
+    rel = col - state.head_size[:, None]
+    use_run = (rel >= 0) & (rel < take[:, None])
+    ridx = jnp.clip(state.tail_start[:, None] + rel, 0, T - 1)
 
-    colT = jnp.arange(T, dtype=jnp.int32)[None, :]
-    idx = colT + take[:, None]
-    in_range = idx < T
-    idx = jnp.minimum(idx, T - 1)
-    nt_k = jnp.where(in_range, jnp.take_along_axis(st_k, idx, axis=1), INF_KEY)
-    nt_v = jnp.where(in_range, jnp.take_along_axis(st_v, idx, axis=1), 0)
-    nt_q = jnp.where(in_range, jnp.take_along_axis(st_q, idx, axis=1), 0)
+    def splice(head_x, tail_x):
+        return jnp.where(
+            use_run, jnp.take_along_axis(tail_x, ridx, axis=1), head_x
+        )
 
     return dataclasses.replace(
         state,
-        head_keys=mk[:, :H], head_vals=mv[:, :H], head_seq=mq[:, :H],
-        tail_keys=nt_k, tail_vals=nt_v, tail_seq=nt_q,
+        head_keys=splice(state.head_keys, state.tail_keys),
+        head_vals=splice(state.head_vals, state.tail_vals),
+        head_seq=splice(state.head_seq, state.tail_seq),
         head_size=(state.head_size + take).astype(jnp.int32),
         tail_size=(state.tail_size - take).astype(jnp.int32),
+        tail_start=(state.tail_start + take).astype(jnp.int32),
+        tail_sorted=(state.tail_size - take).astype(jnp.int32),
+    )
+
+
+def refill_head(state: PQState) -> PQState:
+    """Restore the hot tier: pull the tail's (key, seq)-smallest elements
+    into the head until it is full (or the tail is drained).
+
+    With the sliding-window tail this CONSUMES the sorted run in place: the
+    smallest elements are the run's front (gathered into the head merge),
+    and the window origin just advances — the tail arrays are never
+    rewritten.  Cost: O(H) for the merge + O(U log U + T) bucket compaction
+    only when appends happened since the last rebalance.  `ensure_head`
+    inlines this as two separately-guarded conds (see `refill_head_guarded`)
+    so the common consume path's cond returns only head-sized buffers."""
+    if state.tail_width == 0:
+        return state
+    state = jax.lax.cond(
+        jnp.any(state.tail_size > state.tail_sorted),
+        compact_tail, lambda s: s, state,
+    )  # tail window now fully (key, seq)-lex sorted
+    return _consume_run(state)
+
+
+def refill_head_guarded(state: PQState, pred: jnp.ndarray) -> PQState:
+    """`refill_head` under a predicate, structured so the common firing
+    never copies the cold tail: (a) a full-state compact cond that only
+    fires when appends left a bucket since the last rebalance; (b) a
+    consume cond whose branches RETURN only the head tier + window scalars
+    — the (S, T) tail arrays enter as read-only captures, so XLA's
+    conditional materializes head-sized results instead of a capacity-sized
+    state copy.  This is what keeps the fused window's steady drain cheap."""
+    if state.tail_width == 0:
+        return state
+    state = jax.lax.cond(
+        pred & jnp.any(state.tail_size > state.tail_sorted),
+        compact_tail, lambda s: s, state,
+    )
+
+    def do(op):
+        del op
+        st = _consume_run(state)
+        return (st.head_keys, st.head_vals, st.head_seq, st.head_size,
+                st.tail_size, st.tail_start, st.tail_sorted)
+
+    def skip(op):
+        return op
+
+    hk, hv, hq, hs, tsize, tstart, tsorted = jax.lax.cond(
+        pred, do, skip,
+        (state.head_keys, state.head_vals, state.head_seq, state.head_size,
+         state.tail_size, state.tail_start, state.tail_sorted),
+    )
+    return dataclasses.replace(
+        state, head_keys=hk, head_vals=hv, head_seq=hq, head_size=hs,
+        tail_size=tsize, tail_start=tstart, tail_sorted=tsorted,
     )
 
 
@@ -414,6 +698,37 @@ def merge_sorted(
     new_size = jnp.minimum(size + inc_count, C).astype(jnp.int32)
     dropped = jnp.maximum(size + inc_count - C, 0).astype(jnp.int32)
     return out_keys, out_vals, new_size, dropped
+
+
+# ---------------------------------------------------------------------------
+# elimination pre-pass primitive
+# ---------------------------------------------------------------------------
+
+
+def sort_op_log(
+    masked_keys: jnp.ndarray,  # (B,) or (K, B) insert keys, INF for non-inserts
+    use_kernel: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable ascending sort of each row of an operation log, returning
+    (sorted_keys, sorted_lane_tags).  State-independent, so a K-step fused
+    window sorts its whole (K, B) log in ONE call in front of the scan.
+    Kernel path: the bitonic elimination-match network
+    (`kernels.elim_match`); jnp path: stable argsort.  Bit-identical (the
+    network compares (key, lane-tag) lexicographically)."""
+    if use_kernel is None:
+        use_kernel = _kernels_enabled()
+    single = masked_keys.ndim == 1
+    rows = masked_keys[None, :] if single else masked_keys
+    K, B = rows.shape
+    if use_kernel:
+        from repro.kernels.ops import elim_sort
+
+        tags = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None, :], (K, B))
+        sk, st = elim_sort(rows, tags)
+    else:
+        st = jnp.argsort(rows, axis=1, stable=True).astype(jnp.int32)
+        sk = jnp.take_along_axis(rows, st, axis=1)
+    return (sk[0], st[0]) if single else (sk, st)
 
 
 # ---------------------------------------------------------------------------

@@ -4,6 +4,20 @@ Op batches are the bulk-synchronous translation of "p threads each issue one
 operation": a step applies a vector of B ops.  The linearization applied is
 inserts-before-deletes within a batch (any linearization of concurrent ops is
 admissible for a concurrent PQ; this one is fixed and matched by the oracle).
+
+Elimination/combining (Calciu et al.'s adaptive PQ, bulk-synchronous form):
+a batch's inserts whose keys beat the current queue minimum are matched
+against the SAME batch's deleteMins and served directly — the pairs never
+touch `PQState`.  Under the inserts-before-deletes linearization this is
+EXACT, not relaxed: an insert strictly below min(queue) is, post-insert,
+among the n_del globally smallest whenever it is among the n_del smallest of
+the batch's below-cutoff inserts, so the eliminated prefix (sorted by
+(key, batch position) — the same tie order the oracle's routed-run seqs
+realize) is exactly the prefix of the linearized delete result, and the
+surviving inserts keep their relative seq order.  Exact schedules therefore
+stay bit-identical to the oracle with elimination on (tested); relaxed
+schedules only tighten their envelope (eliminated pairs have global rank
+below every queue element).
 """
 
 from __future__ import annotations
@@ -13,6 +27,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.pqueue import local as L
 from repro.core.pqueue import schedules as SCH
 from repro.core.pqueue.local import tiered_insert, topk_of_merged
 from repro.core.pqueue.partition import route_capped, route_dense
@@ -21,6 +36,8 @@ from repro.core.pqueue.state import INF_KEY, PQState
 
 OP_INSERT = 0
 OP_DELETE_MIN = 1
+
+_INT32_MIN = jnp.iinfo(jnp.int32).min
 
 
 def insert(
@@ -36,19 +53,96 @@ def insert(
     overflow); otherwise MoE-style capped routing (rejected ops reported in
     dropped accounting is the caller's to retry — used by the serving
     scheduler's admission path).
+
+    The whole route+merge+append pipeline is `lax.cond`-guarded on the batch
+    carrying ANY live insert: a delete-only step (the fig9 ins0 regime, and
+    every post-elimination batch whose inserts were all matched) passes the
+    state through untouched instead of merging an empty run.
     """
     if mask is None:
         mask = keys < INF_KEY
     else:
         mask = mask & (keys < INF_KEY)  # INF is the reserved sentinel
     S = state.num_shards
-    if capacity_factor is None:
-        rk, rv, counts = route_dense(keys, vals, mask, S)
-    else:
-        rk, rv, counts, _rejected = route_capped(
-            keys, vals, mask, S, capacity_factor
-        )
-    return tiered_insert(state, rk, rv, counts)
+
+    def do_insert(st):
+        if capacity_factor is None:
+            rk, rv, counts = route_dense(keys, vals, mask, S)
+        else:
+            rk, rv, counts, _rejected = route_capped(
+                keys, vals, mask, S, capacity_factor
+            )
+        return tiered_insert(st, rk, rv, counts)
+
+    def skip(st):
+        return st, jnp.zeros((S,), jnp.int32)
+
+    return jax.lax.cond(jnp.any(mask), do_insert, skip, state)
+
+
+# ---------------------------------------------------------------------------
+# elimination/combining pre-pass
+# ---------------------------------------------------------------------------
+
+
+def elim_cutoff(state: PQState) -> jnp.ndarray:
+    """The elimination threshold: the current global queue minimum, read
+    from the head min cache in O(S).  When any shard's head has drained over
+    a non-empty tail the cache may be stale, so elimination is disabled for
+    the step (cutoff INT32_MIN eliminates nothing — `key < cutoff` is the
+    strict test).  An empty queue yields INF: every insert beats it, which
+    is exactly right (deletes would return the batch's own minima)."""
+    stale = jnp.any((state.head_size == 0) & (state.tail_size > 0))
+    return jnp.where(stale, jnp.int32(_INT32_MIN), jnp.min(state.shard_mins))
+
+
+def elim_split(
+    state: PQState,
+    sorted_keys: jnp.ndarray,  # (B,) insert log sorted ascending, INF-masked
+    sorted_tags: jnp.ndarray,  # (B,) originating lane of each sorted entry
+    vals: jnp.ndarray,  # (B,) lane payloads
+    b_del: jnp.ndarray,  # () deleteMins in the batch
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Match the sorted insert log against the batch's deleteMins.
+
+    Returns (elim_keys (B,) ascending INF-padded, elim_vals, n_elim,
+    keep_mask (B,) by lane).  The eliminated set is the n_elim = min(#below
+    cutoff, b_del) smallest below-cutoff inserts in (key, batch-position)
+    order — the exact prefix of the linearized delete result (module
+    docstring)."""
+    B = sorted_keys.shape[0]
+    cutoff = elim_cutoff(state)
+    n_below = jnp.searchsorted(sorted_keys, cutoff, side="left").astype(
+        jnp.int32
+    )
+    n_elim = jnp.minimum(n_below, b_del).astype(jnp.int32)
+    lane = jnp.arange(B, dtype=jnp.int32)
+    elim_k = jnp.where(lane < n_elim, sorted_keys, INF_KEY)
+    elim_v = jnp.where(
+        lane < n_elim, vals[jnp.clip(sorted_tags, 0, B - 1)], 0
+    )
+    # A lane is eliminated iff its sorted position ranks inside the prefix.
+    rank = jnp.zeros((B,), jnp.int32).at[sorted_tags].set(lane)
+    keep = rank >= n_elim
+    return elim_k, elim_v, n_elim, keep
+
+
+def merge_eliminated(
+    elim_k: jnp.ndarray,  # (B,) ascending, INF-padded
+    elim_v: jnp.ndarray,
+    n_elim: jnp.ndarray,  # ()
+    res: DeleteResult,
+) -> DeleteResult:
+    """Prepend the eliminated pairs to a schedule's delete result.  Every
+    eliminated key is strictly below the cutoff <= every key the schedule
+    could return, so the merge is a concatenation-with-shift — the combined
+    output stays ascending with the oracle's tie order."""
+    B = res.keys.shape[0]
+    lane = jnp.arange(B, dtype=jnp.int32)
+    idx = jnp.clip(lane - n_elim, 0, B - 1)
+    out_k = jnp.where(lane < n_elim, elim_k, res.keys[idx])
+    out_v = jnp.where(lane < n_elim, elim_v, res.vals[idx])
+    return DeleteResult(res.state, out_k, out_v, res.n_out + n_elim)
 
 
 def delete_min(
@@ -99,13 +193,30 @@ def apply_op_batch(
     schedule: Schedule | int = Schedule.STRICT_FLAT,
     rng: jax.Array | None = None,
     npods: int = 1,
+    eliminate: bool = False,
 ) -> OpBatchResult:
     """One bulk step of mixed operations — the unit the paper's
-    serve_requests() loop processes per client group (Fig. 6 lines 86-97)."""
+    serve_requests() loop processes per client group (Fig. 6 lines 86-97).
+
+    eliminate=True runs the elimination/combining pre-pass first: matched
+    insert/deleteMin pairs are served without touching the queue (module
+    docstring); exact schedules remain bit-identical to the oracle."""
     B = ops.shape[0]
     ins_mask = ops == OP_INSERT
     n_del = jnp.sum(ops == OP_DELETE_MIN).astype(jnp.int32)
 
-    state, dropped = insert(state, keys, vals, mask=ins_mask)
-    res = delete_min(state, B, schedule=schedule, active=n_del, rng=rng, npods=npods)
+    if eliminate:
+        sk, st = L.sort_op_log(jnp.where(ins_mask, keys, INF_KEY))
+        elim_k, elim_v, n_elim, keep = elim_split(state, sk, st, vals, n_del)
+        state, dropped = insert(state, keys, vals, mask=ins_mask & keep)
+        res = delete_min(
+            state, B, schedule=schedule, active=n_del - n_elim, rng=rng,
+            npods=npods,
+        )
+        res = merge_eliminated(elim_k, elim_v, n_elim, res)
+    else:
+        state, dropped = insert(state, keys, vals, mask=ins_mask)
+        res = delete_min(
+            state, B, schedule=schedule, active=n_del, rng=rng, npods=npods
+        )
     return OpBatchResult(res.state, res.keys, res.vals, res.n_out, dropped)

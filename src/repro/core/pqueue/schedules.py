@@ -54,6 +54,31 @@ class DeleteResult(NamedTuple):
     n_out: jnp.ndarray  # () actual number returned
 
 
+class HotTier(NamedTuple):
+    """The head-tier slice every schedule's post-`ensure_head` core reads
+    and writes: (S, H) sorted arrays + per-shard sizes.  This is what
+    SmartPQ's `lax.switch` threads through its branches — a few hundred KB
+    instead of the full state, so branch result copies cost nothing (the
+    cold tail never crosses the switch boundary)."""
+
+    keys: jnp.ndarray  # (S, H)
+    vals: jnp.ndarray  # (S, H)
+    seq: jnp.ndarray  # (S, H)
+    size: jnp.ndarray  # (S,)
+
+
+def hot_tier(state: PQState) -> HotTier:
+    return HotTier(state.head_keys, state.head_vals, state.head_seq,
+                   state.head_size)
+
+
+def attach_hot(state: PQState, hot: HotTier) -> PQState:
+    return dataclasses.replace(
+        state, head_keys=hot.keys, head_vals=hot.vals, head_seq=hot.seq,
+        head_size=hot.size,
+    )
+
+
 def _ilog2(n: int) -> int:
     return max(int(n - 1).bit_length(), 1)
 
@@ -95,9 +120,11 @@ def ensure_head(state: PQState, m: int) -> PQState:
     """Restore the hot-tier precondition before a delete batch of bound m:
     every shard's head must hold its smallest min(H, shard size) elements
     and be at least `m + pad` deep (the widest per-step draw window) unless
-    the shard is smaller than that.  The refill is `lax.cond`-guarded: in
-    steady state the predicate is false and the step does no O(capacity)
-    work at all."""
+    the shard is smaller than that.  The refill is `lax.cond`-guarded — and
+    split so its common firing (consume the sorted run's front) returns
+    only head-sized buffers (`local.refill_head_guarded`): neither the
+    steady state NOR the refill itself does O(capacity) work unless appends
+    actually left an unsorted bucket behind."""
     H = state.head_width
     if m > H:
         raise ValueError(
@@ -110,28 +137,25 @@ def ensure_head(state: PQState, m: int) -> PQState:
         return state
     need = min(H, m + _head_pad(state.num_shards))
     pred = jnp.any((state.head_size < need) & (state.tail_size > 0))
-    return jax.lax.cond(pred, L.refill_head, lambda s: s, state)
+    return L.refill_head_guarded(state, pred)
 
 
-def _pop_head_prefix(state: PQState, take: jnp.ndarray) -> PQState:
+def _pop_hot_prefix(hot: HotTier, take: jnp.ndarray) -> HotTier:
     """Remove per-shard head prefixes (the only way any schedule removes)."""
-    hk, hv, hq, hsize = L.remove_prefix(
-        state.head_keys, state.head_vals, state.head_seq, state.head_size,
-        take,
-    )
-    return dataclasses.replace(
-        state, head_keys=hk, head_vals=hv, head_seq=hq, head_size=hsize
-    )
+    return HotTier(*L.remove_prefix(hot.keys, hot.vals, hot.seq, hot.size,
+                                    take))
 
 
-# ---------------------------------------------------------------------------
-# Exact schedules (STRICT_FLAT / HIER / FFWD share the tournament semantics).
-# ---------------------------------------------------------------------------
+# Every schedule below is split into a `hot_*` core — the post-`ensure_head`
+# computation, reading/writing ONLY the HotTier (plus the scalar total) — and
+# a full-state `delete_*` wrapper.  SmartPQ's lax.switch dispatches over the
+# hot cores directly (ensure_head hoisted out), so the cold tail never
+# crosses the switch boundary; `ops.delete_min` uses the wrappers.
 
 
-def _tournament(
-    state: PQState, m: int, active: jnp.ndarray
-) -> DeleteResult:
+def _hot_tournament(
+    hot: HotTier, total: jnp.ndarray, m: int, active: jnp.ndarray
+):
     """Exact top-`active` removal (active <= m static bound).
 
     Each shard nominates its m smallest (a prefix of the sorted head, which
@@ -140,84 +164,65 @@ def _tournament(
     lost.  Tie-break: (key, shard, slot) lexicographic; head slot order is
     seq order (I4), so this matches the oracle's (key, shard, seq).
     """
-    state = ensure_head(state, m)
-    cand_k = state.head_keys[:, :m]  # (S, m)
-    cand_v = state.head_vals[:, :m]
+    cand_k = hot.keys[:, :m]  # (S, m)
+    cand_v = hot.vals[:, :m]
 
-    n = jnp.minimum(active, state.total_size).astype(jnp.int32)
+    n = jnp.minimum(active, total).astype(jnp.int32)
     win_k, win_v = L.topk_of_merged(cand_k.ravel(), cand_v.ravel(), m)
 
     cutoff = win_k[jnp.maximum(n - 1, 0)]
     take = L.count_winners_per_shard(cand_k, cutoff, n)
     take = jnp.where(n > 0, take, 0)
 
-    state = _pop_head_prefix(state, take)
+    hot = _pop_hot_prefix(hot, take)
     lane = jnp.arange(m, dtype=jnp.int32)
     out_k = jnp.where(lane < n, win_k, INF_KEY)
     out_v = jnp.where(lane < n, win_v, 0)
-    return DeleteResult(state, out_k, out_v, n)
+    return hot, out_k, out_v, n
 
 
-def delete_strict_flat(
-    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
-) -> DeleteResult:
+def hot_strict_flat(hot, total, m, active, rng, npods=1):
     """lotan_shavit: one flat global tournament (all S*m candidates meet)."""
     del rng, npods
-    return _tournament(state, m, active)
+    return _hot_tournament(hot, total, m, active)
 
 
-def delete_hier(
-    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
-) -> DeleteResult:
+def hot_hier(hot, total, m, active, rng, npods=1):
     """Nuddle: two-phase tournament — pod-local semifinal, then only pod
     winners cross the slow tier.  Semantically identical to STRICT_FLAT (the
     semifinal never eliminates a global winner: a pod's top-m contains every
     candidate that can rank in the global top-m)."""
     del rng
-    state = ensure_head(state, m)
-    S = state.num_shards
+    S = hot.keys.shape[0]
     assert S % npods == 0, f"shards {S} must split evenly over {npods} pods"
     # Phase 1 (intra-pod, fast ICI): per-pod top-m.   Phase 2 (pod axis only):
     # npods*m candidates.  The single-controller path computes the same values
     # the two-phase collective computes; dist.py issues the real collectives.
-    cand_k = state.head_keys[:, :m].reshape(npods, -1)
-    cand_v = state.head_vals[:, :m].reshape(npods, -1)
+    cand_k = hot.keys[:, :m].reshape(npods, -1)
+    cand_v = hot.vals[:, :m].reshape(npods, -1)
     pod_k, pod_v = jax.vmap(lambda k, v: L.topk_of_merged(k, v, m))(cand_k, cand_v)
     win_k, win_v = L.topk_of_merged(pod_k.ravel(), pod_v.ravel(), m)
 
-    n = jnp.minimum(active, state.total_size).astype(jnp.int32)
+    n = jnp.minimum(active, total).astype(jnp.int32)
     cutoff = win_k[jnp.maximum(n - 1, 0)]
-    take = L.count_winners_per_shard(state.head_keys[:, :m], cutoff, n)
+    take = L.count_winners_per_shard(hot.keys[:, :m], cutoff, n)
     take = jnp.where(n > 0, take, 0)
-    state = _pop_head_prefix(state, take)
+    hot = _pop_hot_prefix(hot, take)
     lane = jnp.arange(m, dtype=jnp.int32)
     out_k = jnp.where(lane < n, win_k, INF_KEY)
     out_v = jnp.where(lane < n, win_v, 0)
-    return DeleteResult(state, out_k, out_v, n)
+    return hot, out_k, out_v, n
 
 
-def delete_ffwd(
-    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
-) -> DeleteResult:
+def hot_ffwd(hot, total, m, active, rng, npods=1):
     """ffwd: every shard's candidates funnel to the single server (shard 0),
     which runs the whole tournament alone.  Single-controller semantics equal
     STRICT_FLAT; dist.py realizes the log-depth tree funnel + broadcast."""
     del rng, npods
-    return _tournament(state, m, active)
+    return _hot_tournament(hot, total, m, active)
 
 
-# ---------------------------------------------------------------------------
-# Relaxed schedules (SprayList analogues) — collective-free.
-# ---------------------------------------------------------------------------
-
-
-def _spray(
-    state: PQState,
-    m: int,
-    active: jnp.ndarray,
-    rng: jax.Array,
-    adaptive_window: bool,
-) -> DeleteResult:
+def _hot_spray(hot, m, active, rng, adaptive_window: bool):
     """Each of the `active` deleters lands on a uniform random shard; each
     shard pops its deleters' picks from a bounded window at the head of its
     sorted buffer.  No cross-shard coordination of any kind.
@@ -232,8 +237,7 @@ def _spray(
     argsort is over W columns, and `remove_at` compacts only the window —
     nothing in this schedule scales with the capacity.
     """
-    state = ensure_head(state, m)
-    S, H = state.head_keys.shape
+    S, H = hot.keys.shape
     k_shard, k_pos = jax.random.split(rng)
 
     lane = jnp.arange(m, dtype=jnp.int32)
@@ -248,50 +252,49 @@ def _spray(
         window = m_s + pad
     else:
         window = jnp.full((S,), -(-m // S) + pad, jnp.int32)
-    window = jnp.minimum(jnp.minimum(window, state.head_size), W)
+    window = jnp.minimum(jnp.minimum(window, hot.size), W)
 
-    # Distinct random positions inside each shard's window: rank the uniform
-    # scores and keep the m_s smallest ranks that fall inside the window.
-    u = jax.random.uniform(k_pos, (S, W))
+    # Distinct random positions inside each shard's window: draw UNIQUE
+    # integer scores (random high bits, slot index low bits — collision
+    # free by construction) and remove the slots scoring at or below the
+    # takeable-th smallest.  One single-operand row sort; XLA:CPU executes
+    # multi-operand sorts (argsort ranking included) orders of magnitude
+    # slower, which made the old double-argsort the spray hot spot.
     col = jnp.arange(W, dtype=jnp.int32)[None, :]
-    score = jnp.where(col < window[:, None], u, 2.0)
-    order = jnp.argsort(score, axis=1)
-    rank = jnp.argsort(order, axis=1)
+    hi = jax.random.randint(k_pos, (S, W), 0, (1 << 31) // (W + 1) - 1,
+                            dtype=jnp.int32)
+    u = hi * (W + 1) + col  # unique within a row
+    score = jnp.where(col < window[:, None], u, jnp.iinfo(jnp.int32).max)
+    sorted_score = jnp.sort(score, axis=1)
     takeable = jnp.minimum(m_s, window)
-    remove_mask = rank < takeable[:, None]
+    kth = jnp.take_along_axis(
+        sorted_score, jnp.clip(takeable - 1, 0, W - 1)[:, None], axis=1
+    )
+    remove_mask = (
+        (score <= kth) & (takeable > 0)[:, None] & (col < window[:, None])
+    )
 
-    removed_k = jnp.where(remove_mask, state.head_keys[:, :W], INF_KEY)
-    removed_v = jnp.where(remove_mask, state.head_vals[:, :W], 0)
+    removed_k = jnp.where(remove_mask, hot.keys[:, :W], INF_KEY)
+    removed_v = jnp.where(remove_mask, hot.vals[:, :W], 0)
     out_k, out_v = L.topk_of_merged(removed_k.ravel(), removed_v.ravel(), m)
 
-    hk, hv, hq, hsize = L.remove_at(
-        state.head_keys, state.head_vals, state.head_seq, state.head_size,
-        remove_mask,
-    )
-    state = dataclasses.replace(
-        state, head_keys=hk, head_vals=hv, head_seq=hq, head_size=hsize
-    )
+    hot = HotTier(*L.remove_at(hot.keys, hot.vals, hot.seq, hot.size,
+                               remove_mask))
     n = jnp.sum(takeable).astype(jnp.int32)
-    return DeleteResult(state, out_k, out_v, n)
+    return hot, out_k, out_v, n
 
 
-def delete_spray_herlihy(
-    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
-) -> DeleteResult:
-    del npods
-    return _spray(state, m, active, rng, adaptive_window=True)
+def hot_spray_herlihy(hot, total, m, active, rng, npods=1):
+    del total, npods
+    return _hot_spray(hot, m, active, rng, adaptive_window=True)
 
 
-def delete_spray_fraser(
-    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
-) -> DeleteResult:
-    del npods
-    return _spray(state, m, active, rng, adaptive_window=False)
+def hot_spray_fraser(hot, total, m, active, rng, npods=1):
+    del total, npods
+    return _hot_spray(hot, m, active, rng, adaptive_window=False)
 
 
-def delete_multiq(
-    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
-) -> DeleteResult:
+def hot_multiq(hot, total, m, active, rng, npods=1):
     """Relaxed MultiQueue (Williams & Sanders): the S shards are the c*S
     sharded sub-queues; each of the `active` deleters samples TWO of them
     uniformly, reads their cached minima (`state.shard_mins` — column 0 of
@@ -304,37 +307,31 @@ def delete_multiq(
     but the two-choice probe keeps every pop within shard-rank < m
     deterministically and within `multiq_bound(S, m)` global rank w.h.p. —
     the paper's missing mixed-contention mode."""
-    del npods
-    state = ensure_head(state, m)
-    S = state.num_shards
+    del total, npods
+    S = hot.keys.shape[0]
     k_a, k_b = jax.random.split(rng)
 
     lane = jnp.arange(m, dtype=jnp.int32)
     act = lane < jnp.minimum(active, m)
     choice_a = jax.random.randint(k_a, (m,), 0, S)
     choice_b = jax.random.randint(k_b, (m,), 0, S)
-    counts = L.twochoice_pick(state.shard_mins, choice_a, choice_b, act)
-    take = jnp.minimum(counts, state.head_size)
+    counts = L.twochoice_pick(hot.keys[:, 0], choice_a, choice_b, act)
+    take = jnp.minimum(counts, hot.size)
 
     # Pops are head prefixes: the (S, m) head window masked to `take` feeds
     # the commit-side tournament (fused mask+merge Pallas kernel on TPU).
-    out_k, out_v = L.multiq_select(
-        state.head_keys[:, :m], state.head_vals[:, :m], take
-    )
+    out_k, out_v = L.multiq_select(hot.keys[:, :m], hot.vals[:, :m], take)
 
-    state = _pop_head_prefix(state, take)
+    hot = _pop_hot_prefix(hot, take)
     n = jnp.sum(take).astype(jnp.int32)
-    return DeleteResult(state, out_k, out_v, n)
+    return hot, out_k, out_v, n
 
 
-def delete_local(
-    state: PQState, m: int, active: jnp.ndarray, rng: jax.Array, npods: int = 1
-) -> DeleteResult:
+def hot_local(hot, total, m, active, rng, npods=1):
     """Ablation lower bound: split the batch evenly, pop per-shard prefixes,
     no ordering between shards at all."""
-    del rng, npods
-    state = ensure_head(state, m)
-    S = state.num_shards
+    del total, rng, npods
+    S, H = hot.keys.shape
     base, rem = divmod(m, S)
     quota = base + (jnp.arange(S, dtype=jnp.int32) < rem).astype(jnp.int32)
     # Respect the dynamic active count: shrink quotas from the tail.
@@ -342,18 +339,50 @@ def delete_local(
     cum_from_tail = jnp.cumsum(quota[::-1])[::-1]
     shrink = jnp.clip(quota - (cum_from_tail - excess), 0, quota)
     quota = quota - shrink
-    take = jnp.minimum(quota, state.head_size)
+    take = jnp.minimum(quota, hot.size)
 
-    W = min(m, state.head_width)  # per-shard take <= quota <= m
+    W = min(m, H)  # per-shard take <= quota <= m
     taken_mask = jnp.arange(W)[None, :] < take[:, None]
-    removed_k = jnp.where(taken_mask, state.head_keys[:, :W], INF_KEY)
-    removed_v = jnp.where(taken_mask, state.head_vals[:, :W], 0)
+    removed_k = jnp.where(taken_mask, hot.keys[:, :W], INF_KEY)
+    removed_v = jnp.where(taken_mask, hot.vals[:, :W], 0)
     out_k, out_v = L.topk_of_merged(removed_k.ravel(), removed_v.ravel(), m)
 
-    state = _pop_head_prefix(state, take)
+    hot = _pop_hot_prefix(hot, take)
     n = jnp.sum(take).astype(jnp.int32)
-    return DeleteResult(state, out_k, out_v, n)
+    return hot, out_k, out_v, n
 
+
+HOT_SCHEDULE_FNS = {
+    Schedule.STRICT_FLAT: hot_strict_flat,
+    Schedule.SPRAY_HERLIHY: hot_spray_herlihy,
+    Schedule.HIER: hot_hier,
+    Schedule.FFWD: hot_ffwd,
+    Schedule.LOCAL: hot_local,
+    Schedule.SPRAY_FRASER: hot_spray_fraser,
+    Schedule.MULTIQ: hot_multiq,
+}
+
+
+def _wrap(hot_fn):
+    def delete_fn(state: PQState, m: int, active: jnp.ndarray,
+                  rng: jax.Array, npods: int = 1) -> DeleteResult:
+        state = ensure_head(state, m)
+        hot, out_k, out_v, n = hot_fn(
+            hot_tier(state), state.total_size, m, active, rng, npods
+        )
+        return DeleteResult(attach_hot(state, hot), out_k, out_v, n)
+
+    delete_fn.__doc__ = hot_fn.__doc__
+    return delete_fn
+
+
+delete_strict_flat = _wrap(hot_strict_flat)
+delete_spray_herlihy = _wrap(hot_spray_herlihy)
+delete_hier = _wrap(hot_hier)
+delete_ffwd = _wrap(hot_ffwd)
+delete_local = _wrap(hot_local)
+delete_spray_fraser = _wrap(hot_spray_fraser)
+delete_multiq = _wrap(hot_multiq)
 
 SCHEDULE_FNS = {
     Schedule.STRICT_FLAT: delete_strict_flat,

@@ -11,12 +11,22 @@ that: each shard is split into
     (candidate windows, spray windows, prefix pops) and every insert merge
     operates on this tier only, so per-step cost scales with the batch /
     head-window size, not with the capacity;
-  * a **cold tail arena** ``(S, T)`` with ``T = C - H`` — an *unsorted*
-    dense-prefix append region.  Inserts whose key lands beyond the head
-    boundary are appended here in O(batch); head-merge overflow (the largest
-    elements) spills here.  The tail is only ever scanned by the rare,
-    ``lax.cond``-guarded rebalance (refill on head underflow, drop-compaction
-    on capacity overflow).
+  * a **cold tail arena** ``(S, T)`` with ``T = C - H`` — a *bucketed sliding
+    window*: the shard's tail elements live at ``[tail_start, tail_start +
+    tail_size)`` as a leading ``(key, seq)``-sorted run of ``tail_sorted``
+    entries followed by an unsorted append bucket.  Inserts whose key lands
+    beyond the head boundary are appended at the window end in O(batch);
+    head-merge overflow (the largest elements) spills there too.  The head
+    refill CONSUMES the sorted run from the front by advancing
+    ``tail_start`` — O(1), no tail traffic (slots left behind are stale and
+    simply ignored; the ``keys``/``vals`` views and the invariant checker
+    mask them).  The tail arrays themselves are only rewritten by the rare,
+    ``lax.cond``-guarded rebalances: when the bucket would outgrow its
+    static width — or the window would slide off the arena end — the bucket
+    alone is sorted (O(U log U)) and rank-merged into the run (O(T)),
+    re-anchoring the window at 0.  A full O(T log T) tail sort survives only
+    as the fallback for over-wide buckets and the capacity-overflow
+    drop-compaction.
 
 Head sizing rule: ``H`` must cover every schedule's per-step draw window —
 ``H >= m + (ilog2(S)+1)**2`` (the spray window bound; exact and MULTIQ
@@ -35,9 +45,21 @@ Per-shard insertion sequence numbers (``head_seq`` / ``tail_seq`` /
 implicitly ordered (stable merges + the strict boundary split guarantee
 equal-key head entries are in seq order, and every equal-key tail entry has
 a larger seq than any head entry), so the hot path never sorts by seq; the
-rare rebalance sorts the tail by ``(key, seq)``, which is exactly what makes
-the exact schedules bit-identical to the oracle's (key, shard, seq)
-linearization even when elements bounce head -> tail -> head.
+rare rebalance sorts only the tail's append bucket by ``(key, seq)`` and
+merges it into the sorted run, which is exactly what makes the exact
+schedules bit-identical to the oracle's (key, shard, seq) linearization
+even when elements bounce head -> tail -> head.
+
+Every rebalance that produces a fully sorted tail also RENUMBERS the
+shard's seqs positionally (head slot i -> i, tail slot j -> head_size + j;
+``next_seq = head_size + tail_size``).  Renumbering preserves the relative
+(key, seq) order — the only thing the linearization reads — while (a)
+bounding ``next_seq`` far below the int32 wrap horizon (a near-wrap guard
+in ``tiered_insert`` forces a rebalance before ~2.1e9 cumulative inserts to
+one shard could overflow the counter) and (b) keeping the sorted run's seq
+column globally ascending, which is what lets the bucket merge compare
+(key, seq) pairs with three plain ``searchsorted`` calls instead of a
+packed-int64 sort (x64 is disabled here).
 
 Invariants (property-tested in tests/test_pqueue_property.py):
   I1  head_keys[s] is ascending for every shard s
@@ -46,14 +68,13 @@ Invariants (property-tested in tests/test_pqueue_property.py):
       (inserted - deleted, up to reported drops on capacity overflow)
   I4  head/tail boundary: max(valid head keys) <= min(valid tail keys); for
       equal keys the head holds the smaller sequence numbers
-  I5  staging accounting: tail valid entries are exactly the dense prefix
-      [0, tail_size), INF beyond; all seq numbers are unique and < next_seq
-
-Known bound: ``next_seq`` is a monotone per-shard int32 counter — after
-~2.1e9 cumulative inserts routed to ONE shard it would wrap negative and
-break the (key, seq) order (far beyond any current workload: ~500M serving
-steps at the benchmark shapes).  A seq renumbering pass in the rebalance is
-the designated fix if that horizon ever matters (see ROADMAP).
+  I5  staging accounting: tail valid entries are exactly the window
+      [tail_start, tail_start + tail_size) (slots outside the window are
+      stale and masked by every reader); all seq numbers are unique and
+      < next_seq
+  I6  bucketed tail: the window's leading tail_sorted entries are
+      (key, seq)-lex sorted with the seq column ascending, and
+      tail_sorted <= tail_size
 """
 
 from __future__ import annotations
@@ -87,11 +108,13 @@ class PQState:
     head_keys: jnp.ndarray  # (S, H) int32, ascending, INF-padded
     head_vals: jnp.ndarray  # (S, H) int32 payload
     head_seq: jnp.ndarray  # (S, H) int32 per-shard insertion seq
-    tail_keys: jnp.ndarray  # (S, T) int32, dense prefix, INF beyond
+    tail_keys: jnp.ndarray  # (S, T) int32, valid in the sliding window only
     tail_vals: jnp.ndarray  # (S, T) int32
     tail_seq: jnp.ndarray  # (S, T) int32
     head_size: jnp.ndarray  # (S,) int32
     tail_size: jnp.ndarray  # (S,) int32
+    tail_start: jnp.ndarray  # (S,) int32 window origin in the arena
+    tail_sorted: jnp.ndarray  # (S,) int32 length of the window's sorted run
     next_seq: jnp.ndarray  # (S,) int32
 
     @property
@@ -119,17 +142,32 @@ class PQState:
     def total_size(self) -> jnp.ndarray:
         return jnp.sum(self.head_size + self.tail_size)
 
+    def _tail_window_mask(self) -> jnp.ndarray:
+        """(S, T) bool — True inside the valid sliding window."""
+        col = jnp.arange(self.tail_width, dtype=jnp.int32)[None, :]
+        return (col >= self.tail_start[:, None]) & (
+            col < (self.tail_start + self.tail_size)[:, None]
+        )
+
     @property
     def keys(self) -> jnp.ndarray:
-        """(S, C) concatenated view (head then tail arena).  NOT globally
-        sorted per row when the tail is non-empty — use for multiset-style
-        reads (``state.keys[state.keys < INF_KEY]``), not for order."""
-        return jnp.concatenate([self.head_keys, self.tail_keys], axis=1)
+        """(S, C) concatenated view (head, then the tail window; stale
+        out-of-window slots read INF).  NOT globally sorted per row when the
+        tail is non-empty — use for multiset-style reads
+        (``state.keys[state.keys < INF_KEY]``), not for order."""
+        if self.tail_width == 0:
+            return self.head_keys
+        tail_view = jnp.where(self._tail_window_mask(), self.tail_keys,
+                              INF_KEY)
+        return jnp.concatenate([self.head_keys, tail_view], axis=1)
 
     @property
     def vals(self) -> jnp.ndarray:
         """(S, C) concatenated payload view matching ``keys``."""
-        return jnp.concatenate([self.head_vals, self.tail_vals], axis=1)
+        if self.tail_width == 0:
+            return self.head_vals
+        tail_view = jnp.where(self._tail_window_mask(), self.tail_vals, 0)
+        return jnp.concatenate([self.head_vals, tail_view], axis=1)
 
     @property
     def shard_mins(self) -> jnp.ndarray:
@@ -160,6 +198,8 @@ def make_state(
         tail_seq=jnp.zeros((num_shards, T), dtype=jnp.int32),
         head_size=jnp.zeros((num_shards,), dtype=jnp.int32),
         tail_size=jnp.zeros((num_shards,), dtype=jnp.int32),
+        tail_start=jnp.zeros((num_shards,), dtype=jnp.int32),
+        tail_sorted=jnp.zeros((num_shards,), dtype=jnp.int32),
         next_seq=jnp.zeros((num_shards,), dtype=jnp.int32),
     )
 
@@ -176,7 +216,8 @@ def fill_state(
 
 
 def check_invariants(state: PQState) -> Tuple[bool, str]:
-    """Host-side invariant checker (I1, I2, I4, I5). Returns (ok, message)."""
+    """Host-side invariant checker (I1, I2, I4, I5, I6).
+    Returns (ok, message)."""
     import numpy as np
 
     hk = np.asarray(state.head_keys)
@@ -185,6 +226,8 @@ def check_invariants(state: PQState) -> Tuple[bool, str]:
     tq = np.asarray(state.tail_seq)
     hsize = np.asarray(state.head_size)
     tsize = np.asarray(state.tail_size)
+    tstart = np.asarray(state.tail_start)
+    tsorted = np.asarray(state.tail_sorted)
     nseq = np.asarray(state.next_seq)
     S, H = hk.shape
     T = tk.shape[1]
@@ -197,11 +240,16 @@ def check_invariants(state: PQState) -> Tuple[bool, str]:
         if np.any(row[:n] == INF_KEY):
             return False, f"shard {s}: INF sentinel inside head prefix (I2)"
         tn = int(tsize[s])
-        tvalid = tk[s, :tn]
+        t0 = int(tstart[s])
+        if t0 < 0 or t0 + tn > T:
+            return False, (
+                f"shard {s}: tail window [{t0},{t0 + tn}) outside arena "
+                f"[0,{T}) (I5)"
+            )
+        tvalid = tk[s, t0 : t0 + tn]
+        tqwin = tq[s, t0 : t0 + tn]
         if np.any(tvalid == INF_KEY):
-            return False, f"shard {s}: INF inside tail prefix [0,{tn}) (I5)"
-        if tn < T and not np.all(tk[s, tn:] == INF_KEY):
-            return False, f"shard {s}: tail not INF beyond size={tn} (I5)"
+            return False, f"shard {s}: INF inside tail window (I5)"
         if tn > 0 and n > 0:
             hmax, tmin = int(row[n - 1]), int(tvalid.min())
             if hmax > tmin:
@@ -210,13 +258,25 @@ def check_invariants(state: PQState) -> Tuple[bool, str]:
                 )
             # equal keys straddling the boundary: head seqs must be smaller
             at_h = hq[s, :n][row[:n] == tmin]
-            at_t = tq[s, :tn][tvalid == tmin]
+            at_t = tqwin[tvalid == tmin]
             if at_h.size and at_t.size and at_h.max() > at_t.min():
                 return False, f"shard {s}: boundary-tie seq inversion (I4)"
         # (an empty head over a non-empty tail is legal between steps — the
         # next delete's cond-guarded refill restores the hot tier lazily)
+        # bucketed tail: the window's leading run is (key, seq)-lex sorted
+        # with the seq column globally ascending (I6)
+        srt = int(tsorted[s])
+        if srt < 0 or srt > tn:
+            return False, f"shard {s}: tail_sorted {srt} outside [0,{tn}] (I6)"
+        if srt > 1:
+            rk_ = tvalid[:srt].astype(np.int64)
+            rq_ = tqwin[:srt].astype(np.int64)
+            if np.any(np.diff(rk_) < 0):
+                return False, f"shard {s}: tail sorted run keys descend (I6)"
+            if np.any(np.diff(rq_) < 0):
+                return False, f"shard {s}: tail sorted run seqs descend (I6)"
         # seq accounting: unique, < next_seq, and head equal-key runs ordered
-        seqs = np.concatenate([hq[s, :n], tq[s, :tn]])
+        seqs = np.concatenate([hq[s, :n], tqwin])
         if seqs.size and (seqs.max() >= int(nseq[s]) or
                           np.unique(seqs).size != seqs.size):
             return False, f"shard {s}: seq not unique/bounded (I5)"

@@ -36,6 +36,18 @@ three-step recipe, no decision-plumbing changes:
 Workload statistics (paper §5's future-work sketch — implemented here): the
 step tracks completed insert/delete counts, min/max requested key, and the
 caller-supplied active-client count, and derives Table-1 features on the fly.
+
+Fused-window execution (`run_window` / `jit_run_window`): K steps roll into
+ONE donated `lax.scan` whose body contains the full adaptive loop — jnp
+featurization, on-device tree inference, the N-mode `lax.switch`, and the
+schedule — so mode transitions happen mid-window without leaving the device
+and per-operation cost amortizes K steps of dispatch into one.  In front of
+the scan, the elimination/combining pre-pass sorts the whole (K, B)
+operation log in one vectorized call (the sort is state-independent; only
+the cutoff compare stays in the body), and matched insert/deleteMin pairs
+are served without ever touching PQState.  The window trace is bit-identical
+to K sequential `jit_step` calls (same code path, same rngs — tested), and
+exact schedules remain bit-identical to the oracle linearization.
 """
 
 from __future__ import annotations
@@ -56,9 +68,12 @@ from repro.core.classifier.features import (
     CLASS_OBLIVIOUS,
     NUM_CLASSES,
     NUM_MODES,
+    featurize_jnp,
 )
 from repro.core.classifier.inference import PackedTree, pack_tree, tree_predict
 from repro.core.classifier.tree import DecisionTree, train_tree
+from repro.core.pqueue import local as L
+from repro.core.pqueue import ops as O
 from repro.core.pqueue import schedules as SCH
 from repro.core.pqueue.ops import OP_DELETE_MIN, OP_INSERT, insert
 from repro.core.pqueue.schedules import DeleteResult, Schedule
@@ -80,11 +95,22 @@ class SmartPQStats(NamedTuple):
     min_key: jnp.ndarray  # () int32 smallest key requested so far
     max_key: jnp.ndarray  # () int32 largest
     transitions: jnp.ndarray  # () int32 — mode flips (overhead accounting)
+    eliminated: jnp.ndarray  # () int32 — pairs served by the pre-pass
 
 
 class SmartPQCarry(NamedTuple):
     state: PQState
     stats: SmartPQStats
+
+
+class WindowResult(NamedTuple):
+    """Per-step delete outputs of a fused K-step window (state lives in the
+    returned carry)."""
+
+    keys: jnp.ndarray  # (K, B) ascending per step, INF-padded
+    vals: jnp.ndarray  # (K, B)
+    n_out: jnp.ndarray  # (K,)
+    mode: jnp.ndarray  # (K,) mode AFTER each step (the on-device trace)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +129,11 @@ class SmartPQConfig:
         Schedule.HIER,  # MODE_AWARE
     )
     initial_mode: int = MODE_OBLIVIOUS  # paper Fig. 8 line 106: default 1
+    # Elimination/combining pre-pass (Calciu et al.): serve matched
+    # insert/deleteMin pairs of a batch without touching PQState.  Exact for
+    # exact schedules (ops.py docstring), envelope-tightening for relaxed
+    # ones.  Off -> the plain insert-then-schedule step, bit for bit.
+    eliminate: bool = True
 
     def __post_init__(self):
         assert len(self.mode_schedules) == NUM_MODES, (
@@ -112,25 +143,12 @@ class SmartPQConfig:
         )
 
 
-def _featurize_jnp(
-    num_clients: jnp.ndarray,
-    size: jnp.ndarray,
-    key_range: jnp.ndarray,
-    insert_frac: jnp.ndarray,
-) -> jnp.ndarray:
-    """jnp mirror of features.featurize (same normalization)."""
-    def lg2(x):
-        return jnp.log2(jnp.maximum(x.astype(jnp.float32), 1.0))
-
-    return jnp.stack(
-        [lg2(num_clients), lg2(size), lg2(key_range), insert_frac.astype(jnp.float32)]
-    )
-
-
 class SmartPQ:
     """Adaptive PQ facade.  Construct once (trains or accepts a tree), then
-    drive `.step` (jittable, donatable) or `.step_host` (pre-compiled per-mode
-    dispatch — for runtimes that prefer not to carry both branches)."""
+    drive `.step` (jittable, donatable), `.run_window` (K steps fused into
+    one donated lax.scan — the dispatch-amortized serving path), or
+    `make_mode_steps` (pre-compiled per-mode dispatch — for runtimes that
+    prefer not to carry all branches)."""
 
     def __init__(
         self,
@@ -156,6 +174,7 @@ class SmartPQ:
             min_key=jnp.int32(INF_KEY),
             max_key=jnp.int32(0),
             transitions=jnp.int32(0),
+            eliminated=jnp.int32(0),
         )
         return SmartPQCarry(
             make_state(c.num_shards, c.capacity, head_width=c.head_width),
@@ -181,9 +200,14 @@ class SmartPQ:
         vals: jnp.ndarray,  # (B,)
         rng: jax.Array,
         num_clients: jnp.ndarray | int | None = None,
+        presorted: Tuple[jnp.ndarray, jnp.ndarray] | None = None,
     ) -> Tuple[SmartPQCarry, DeleteResult]:
-        """One bulk step: update stats -> (maybe) re-decide mode -> apply the
-        batch under the selected mode.  Pure function; jit/scan friendly."""
+        """One bulk step: update stats -> (maybe) re-decide mode -> eliminate
+        matched pairs -> apply the rest under the selected mode.  Pure
+        function; jit/scan friendly.  `presorted` is the (sorted_keys,
+        sorted_tags) insert log from `run_window`'s vectorized pre-pass —
+        it is bit-identical to the in-step sort, just hoisted out of the
+        scan."""
         c = self.config
         state, stats = carry
         B = ops.shape[0]
@@ -208,7 +232,7 @@ class SmartPQ:
         key_range = jnp.where(
             min_key <= max_key, jnp.maximum(max_key - min_key, 1), 1
         )
-        feats = _featurize_jnp(
+        feats = featurize_jnp(
             num_clients,
             state.total_size,
             key_range,
@@ -223,23 +247,47 @@ class SmartPQ:
         n_insert = jnp.where(do_decide, 0, n_insert)
         n_delete = jnp.where(do_decide, 0, n_delete)
 
+        # -- elimination/combining pre-pass ----------------------------------
+        if c.eliminate:
+            if presorted is None:
+                presorted = L.sort_op_log(jnp.where(ins_mask, keys, INF_KEY))
+            sk, stg = presorted
+            elim_k, elim_v, n_elim, keep_lane = O.elim_split(
+                state, sk, stg, vals, b_del
+            )
+            ins_mask = ins_mask & keep_lane
+            active = b_del - n_elim
+        else:
+            n_elim = jnp.int32(0)
+            active = b_del
+
         # -- apply batch under the selected mode ------------------------------
+        # ensure_head is mode-independent (same bound m=B for every branch),
+        # so it hoists OUT of the switch; the branches then read/write only
+        # the HotTier — the cold tail never crosses the switch boundary, so
+        # the conditional's operand/result copies are head-sized, not
+        # capacity-sized (the big CPU win of the fused window).
         state, dropped = insert(state, keys, vals, mask=ins_mask)
+        state = SCH.ensure_head(state, B)
+        total = state.total_size
 
         def run(schedule: Schedule):
-            fn = SCH.SCHEDULE_FNS[schedule]
+            fn = SCH.HOT_SCHEDULE_FNS[schedule]
 
             def branch(operand):
-                st, rng_ = operand
-                return fn(st, B, b_del, rng_, c.npods)
+                hot_in, rng_ = operand
+                return fn(hot_in, total, B, active, rng_, c.npods)
 
             return branch
 
-        res: DeleteResult = jax.lax.switch(
+        hot, out_k, out_v, n_out = jax.lax.switch(
             new_mode,
             [run(s) for s in c.mode_schedules],
-            (state, rng),
+            (SCH.hot_tier(state), rng),
         )
+        res = DeleteResult(SCH.attach_hot(state, hot), out_k, out_v, n_out)
+        if c.eliminate:
+            res = O.merge_eliminated(elim_k, elim_v, n_elim, res)
 
         new_stats = SmartPQStats(
             step=stats.step + 1,
@@ -249,8 +297,60 @@ class SmartPQ:
             min_key=min_key,
             max_key=max_key,
             transitions=transitions,
+            eliminated=stats.eliminated + n_elim,
         )
         return SmartPQCarry(res.state, new_stats), res
+
+    # -- the fused-window engine ----------------------------------------------
+
+    @functools.cached_property
+    def jit_run_window(self):
+        """`run_window` jitted with the carry DONATED — the scan threads the
+        PQState buffers in place, so a K-step window moves the queue zero
+        times (asserted via `utils.hlo.donation_aliases` in tests).  Same
+        threading contract as `jit_step`."""
+        return jax.jit(self.run_window, donate_argnums=(0,))
+
+    def run_window(
+        self,
+        carry: SmartPQCarry,
+        ops: jnp.ndarray,  # (K, B)
+        keys: jnp.ndarray,  # (K, B)
+        vals: jnp.ndarray,  # (K, B)
+        rngs: jax.Array,  # (K,) key array, one per step
+        num_clients: jnp.ndarray | int | None = None,  # scalar or (K,)
+    ) -> Tuple[SmartPQCarry, WindowResult]:
+        """K adaptive steps fused into one `lax.scan` — ONE device dispatch
+        for K * B operations.  The body is exactly `step` (decisions, mode
+        switch, elimination), so the trace is bit-identical to K sequential
+        `jit_step` calls with the same rngs; only the elimination pre-pass's
+        operation-log sort is hoisted in front of the scan, where it
+        vectorizes over the whole (K, B) window (Pallas match kernel on
+        TPU)."""
+        c = self.config
+        K, B = ops.shape
+        if num_clients is None:
+            num_clients = c.num_shards
+        nc = jnp.broadcast_to(
+            jnp.asarray(num_clients, jnp.int32), (K,)
+        )
+
+        if c.eliminate:
+            ins = ops == OP_INSERT
+            sk, stg = L.sort_op_log(jnp.where(ins, keys, INF_KEY))
+        else:  # placeholder lanes keep the scan xs structure static
+            sk = jnp.zeros((K, B), jnp.int32)
+            stg = jnp.zeros((K, B), jnp.int32)
+
+        def body(cr, x):
+            o, k, v, r, d, sk_t, stg_t = x
+            cr2, res = self.step(cr, o, k, v, r, d, presorted=(sk_t, stg_t))
+            return cr2, (res.keys, res.vals, res.n_out, cr2.stats.mode)
+
+        carry, (dk, dv, dn, dm) = jax.lax.scan(
+            body, carry, (ops, keys, vals, rngs, nc, sk, stg)
+        )
+        return carry, WindowResult(dk, dv, dn, dm)
 
     # -- host-dispatch variant -------------------------------------------------
 
@@ -272,8 +372,21 @@ class SmartPQ:
                 B = ops.shape[0]
                 ins_mask = ops == OP_INSERT
                 b_del = jnp.sum(ops == OP_DELETE_MIN).astype(jnp.int32)
+                active = b_del
+                if c.eliminate:
+                    sk, stg = L.sort_op_log(
+                        jnp.where(ins_mask, keys, INF_KEY)
+                    )
+                    elim_k, elim_v, n_elim, keep_lane = O.elim_split(
+                        state, sk, stg, vals, b_del
+                    )
+                    ins_mask = ins_mask & keep_lane
+                    active = b_del - n_elim
                 st, _ = insert(state, keys, vals, mask=ins_mask)
-                return fn(st, B, b_del, rng, c.npods)
+                res = fn(st, B, active, rng, c.npods)
+                if c.eliminate:
+                    res = O.merge_eliminated(elim_k, elim_v, n_elim, res)
+                return res
 
             return mode_step
 
@@ -282,6 +395,9 @@ class SmartPQ:
     def predict_mode_host(
         self, num_clients: int, size: int, key_range: int, insert_frac: float
     ) -> int:
+        """Offline/debug inference only — the hot path never round-trips to
+        the host: `step` (and the `run_window` scan body) evaluates the same
+        packed tree on-device via `classifier.inference.tree_predict`."""
         from repro.core.classifier.features import featurize
 
         return int(self.tree.predict(featurize(num_clients, size, key_range, insert_frac))[0])

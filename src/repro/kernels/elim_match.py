@@ -1,0 +1,66 @@
+"""Elimination-match Pallas kernel — the fused-window pre-pass hot spot.
+
+The elimination/combining pre-pass (Calciu et al.'s adaptive PQ technique,
+bulk-synchronous form) matches a step's pending inserts against its
+deleteMins: once the insert log is sorted ascending, the matched set is just
+the prefix below the queue-min cutoff, so the whole match reduces to ONE
+row-wise sort of the (masked) insert keys with their lane tags.
+
+This kernel is that sort: a full bitonic sort of (key, tag) rows, reusing
+the direction-free merge network of `bitonic_topk` (every compare-exchange
+ascending, second run data-flipped — see that module's header for why Mosaic
+wants it this way).  Comparison is lexicographic on (key, tag) with unique
+lane tags, which makes the network bit-identical to a stable argsort — the
+property the exact schedules need so the eliminated prefix matches the
+oracle's (key, batch-position) linearization.
+
+The window engine sorts the whole (K, B) operation log of a K-step window in
+one call (rows = steps) in front of the `lax.scan`; the sort is
+state-independent, so only the cheap cutoff compare stays inside the scan
+body.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitonic_topk import bitonic_sort
+
+
+def _elim_sort_kernel(keys_ref, tags_ref, out_k_ref, out_t_ref):
+    """Row-block kernel: full ascending sort of (rows, N) (key, tag) pairs."""
+    out_k, out_t = bitonic_sort(keys_ref[...], tags_ref[...])
+    out_k_ref[...] = out_k
+    out_t_ref[...] = out_t
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
+def elim_sort_pallas(
+    keys: jnp.ndarray,  # (R, N) int32, N power of two
+    tags: jnp.ndarray,  # (R, N) int32 unique lane tags
+    rows_per_block: int = 8,
+    interpret: bool = True,
+):
+    """pallas_call wrapper.  N must be a power of two (ops.py pads with
+    (INF, INT32_MAX) sentinels); R % rows_per_block handled by the caller."""
+    R, N = keys.shape
+    assert N & (N - 1) == 0, f"elim sort needs power-of-two width, got {N}"
+    assert R % rows_per_block == 0, (R, rows_per_block)
+    grid = (R // rows_per_block,)
+
+    spec = pl.BlockSpec((rows_per_block, N), lambda i: (i, 0))
+    return pl.pallas_call(
+        _elim_sort_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, N), keys.dtype),
+            jax.ShapeDtypeStruct((R, N), tags.dtype),
+        ],
+        interpret=interpret,
+    )(keys, tags)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core.pqueue.state import INF_KEY
 from repro.kernels import ref as R
 from repro.kernels.bitonic_topk import topk_smallest_pallas
+from repro.kernels.elim_match import elim_sort_pallas
 from repro.kernels.sorted_merge import merge_sorted_pallas
 from repro.kernels.twochoice import multiq_select_pallas, twochoice_pick_pallas
 from repro.kernels.windowed_merge import windowed_merge_pallas
@@ -57,6 +58,37 @@ def topk_smallest(
         interpret=not _on_tpu(),
     )
     return out_k[:, :k], out_v[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def elim_sort(
+    keys: jnp.ndarray,  # (R, B) int32 masked insert keys (INF for non-inserts)
+    tags: jnp.ndarray,  # (R, B) int32 unique lane tags
+    use_kernel: bool = True,
+):
+    """Row-wise full ascending sort of (key, tag) pairs — the elimination
+    match pre-pass.  Pads B up to a power of two with (INF, INT32_MAX)
+    sentinels (real INF-keyed lanes carry tags < B, so they sort before the
+    pads and survive the slice-back)."""
+    if not use_kernel:
+        return R.elim_sort_ref(keys, tags)
+
+    Rr, B = keys.shape
+    Bp = _next_pow2(B)
+    if Bp != B:
+        keys = jnp.pad(keys, ((0, 0), (0, Bp - B)), constant_values=INF_KEY)
+        tags = jnp.pad(
+            tags, ((0, 0), (0, Bp - B)),
+            constant_values=jnp.iinfo(jnp.int32).max,
+        )
+    rows_per_block = 8
+    while Rr % rows_per_block:
+        rows_per_block //= 2
+    out_k, out_t = elim_sort_pallas(
+        keys, tags, rows_per_block=max(rows_per_block, 1),
+        interpret=not _on_tpu(),
+    )
+    return out_k[:, :B], out_t[:, :B]
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))

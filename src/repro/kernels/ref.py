@@ -15,6 +15,17 @@ def _lex_order(keys: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
     return jnp.lexsort((vals, keys), axis=-1)
 
 
+def elim_sort_ref(keys: jnp.ndarray, tags: jnp.ndarray):
+    """(R, N) -> full row-wise ascending sort of (key, tag) pairs.  Tags are
+    unique lane positions, so the lexicographic order equals a stable sort
+    by key — the elimination pre-pass contract."""
+    order = _lex_order(keys, tags)
+    return (
+        jnp.take_along_axis(keys, order, axis=-1),
+        jnp.take_along_axis(tags, order, axis=-1),
+    )
+
+
 def topk_smallest_ref(keys: jnp.ndarray, vals: jnp.ndarray, k: int):
     """(R, N) -> k lexicographically-smallest (key, val) per row, ascending."""
     order = _lex_order(keys, vals)[..., :k]

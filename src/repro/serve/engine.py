@@ -37,6 +37,12 @@ class EngineConfig:
     max_seq: int = 512
     eos_token: int = 2
     kv_chunk: int = 2048
+    # Scheduler dispatch granularity: >1 batches K ticks into ONE fused
+    # SmartPQ.run_window device call (scheduler.tick_window) instead of K
+    # per-step dispatches.  Dispatch decisions for the window are made with
+    # the slot budget visible at the window start; over-admissions park in
+    # the engine's admit backlog and fill slots as they free.
+    sched_window: int = 1
 
 
 class ServeEngine:
@@ -57,6 +63,7 @@ class ServeEngine:
         self.active: List[Optional[Request]] = [None] * B
         self.remaining = np.zeros(B, np.int64)
         self.outputs: Dict[int, List[int]] = {}
+        self._backlog: List[Request] = []  # dispatched, awaiting a free slot
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._step = 0
 
@@ -66,7 +73,9 @@ class ServeEngine:
         return [i for i, r in enumerate(self.active) if r is None]
 
     def _admit(self, reqs: List[Request]):
+        reqs = self._backlog + list(reqs)
         slots = self._free_slots()
+        self._backlog = reqs[len(slots):]
         for slot, req in zip(slots, reqs):
             # Prompt "prefill" for the example engine: teacher-forced decode
             # of the prompt tokens (prompt = synthetic [uid-derived] tokens).
@@ -78,10 +87,14 @@ class ServeEngine:
 
     # -- stepping ---------------------------------------------------------------
 
-    def step(self, arrivals: List[Request]) -> List[int]:
-        """One engine tick.  Returns uids completed this step."""
-        n_free = len(self._free_slots())
-        dispatched = self.scheduler.tick(arrivals, n_dispatch=n_free)
+    def step(self, arrivals: List[Request],
+             dispatched: Optional[List[Request]] = None) -> List[int]:
+        """One engine tick.  Returns uids completed this step.  `dispatched`
+        is pre-computed when the run loop batches scheduling through
+        `tick_window`; otherwise the scheduler steps inline."""
+        if dispatched is None:
+            n_free = len(self._free_slots())
+            dispatched = self.scheduler.tick(arrivals, n_dispatch=n_free)
         self._admit(dispatched)
 
         logits, self.caches = self._decode(
@@ -108,17 +121,41 @@ class ServeEngine:
         return done
 
     def run(self, workload: List[List[Request]], max_steps: int = 10_000):
-        """Drive until the workload drains.  Returns summary stats."""
+        """Drive until the workload drains.  Returns summary stats.
+
+        With `sched_window > 1` the scheduler runs one fused device call per
+        K engine ticks: the window's dispatch budget is the free-slot count
+        at its start (ticks past the first carry budget 0 — completions that
+        free slots mid-window are absorbed by the admit backlog and the next
+        window's budget)."""
         t0 = time.time()
         completed = 0
         step = 0
+        K = max(1, self.ecfg.sched_window)
         while step < max_steps:
-            arrivals = workload[step] if step < len(workload) else []
-            completed += len(self.step(arrivals))
-            step += 1
+            if K > 1:
+                arr = [
+                    workload[step + i] if step + i < len(workload) else []
+                    for i in range(K)
+                ]
+                budget = len(self._free_slots())
+                ticks = [(arr[0], budget)] + [(a, 0) for a in arr[1:]]
+                for d in self.scheduler.tick_window(ticks):
+                    if step >= max_steps:
+                        # already popped from the device queue — park for
+                        # admission on a later run() instead of losing them
+                        self._backlog.extend(d)
+                        continue
+                    completed += len(self.step([], dispatched=d))
+                    step += 1
+            else:
+                arrivals = workload[step] if step < len(workload) else []
+                completed += len(self.step(arrivals))
+                step += 1
             if (
                 step >= len(workload)
                 and self.scheduler.pending == 0
+                and not self._backlog
                 and all(r is None for r in self.active)
             ):
                 break

@@ -14,6 +14,15 @@ bursty arrival phases run the queue in NUMA-oblivious (spray) mode; drain
 phases flip it to the NUMA-aware (hierarchical delegation) mode.  The queue
 state itself is device-resident; the scheduler host loop only moves compact
 request descriptors — the ffwd cache-line analogue.
+
+Two dispatch granularities:
+  tick()        one step, one device call — the interactive path.
+  tick_window() K ticks fused into ONE device call via SmartPQ.run_window —
+                mode decisions (and the elimination pre-pass that serves
+                same-window insert/deleteMin matches without touching the
+                queue) happen on-device mid-window, so per-request scheduler
+                overhead amortizes K-fold.  The per-tick dispatch lists come
+                back identical to K sequential tick() calls.
 """
 
 from __future__ import annotations
@@ -87,9 +96,8 @@ class SmartPQScheduler:
         for r in reqs:
             self._requests[r.uid] = r
 
-    def tick(self, arrivals: List[Request], n_dispatch: int) -> List[Request]:
-        """One scheduler step: enqueue arrivals, dequeue up to n_dispatch."""
-        self.submit(arrivals)
+    def _pack_tick(self, arrivals: List[Request], n_dispatch: int):
+        """Build one tick's (ops, keys, vals) lane vectors + arrival count."""
         B = self.batch
         ops = np.full(B, OP_DELETE_MIN, np.int32)
         keys = np.full(B, INF_KEY, np.int32)
@@ -99,14 +107,26 @@ class SmartPQScheduler:
             ops[i] = OP_INSERT
             keys[i] = r.priority_key(self._step)
             vals[i] = r.uid
-        # remaining lanes request deletions (bounded by n_dispatch)
+        # remaining lanes request deletions (bounded by n_dispatch); lanes
+        # beyond the budget become no-op inserts (INF key, masked invalid)
         n_del = min(n_dispatch, B - na)
-        for i in range(na + n_del, B):
-            ops[i] = OP_DELETE_MIN  # masked out via active count
-        self._rng, sub = jax.random.split(self._rng)
-        # active deletions bounded by n_del: build op vector accordingly
         ops[na + n_del:] = OP_INSERT
-        keys[na + n_del:] = INF_KEY  # no-op inserts (masked invalid)
+        keys[na + n_del:] = INF_KEY
+        return ops, keys, vals, na
+
+    def _collect(self, out_keys: np.ndarray, out_vals: np.ndarray,
+                 n_out: int) -> List[Request]:
+        return [
+            self._requests[int(v)]
+            for k, v in zip(out_keys[:n_out], out_vals[:n_out])
+            if k < INF_KEY and int(v) in self._requests
+        ]
+
+    def tick(self, arrivals: List[Request], n_dispatch: int) -> List[Request]:
+        """One scheduler step: enqueue arrivals, dequeue up to n_dispatch."""
+        self.submit(arrivals)
+        ops, keys, vals, na = self._pack_tick(arrivals, n_dispatch)
+        self._rng, sub = jax.random.split(self._rng)
 
         self.carry, res = self._step_fn(
             self.carry,
@@ -117,17 +137,64 @@ class SmartPQScheduler:
             512,
         )
         self._step += 1
-        out_vals = np.asarray(res.vals)[: int(res.n_out)]
-        out_keys = np.asarray(res.keys)[: int(res.n_out)]
-        dispatched = [
-            self._requests[int(v)]
-            for k, v in zip(out_keys, out_vals)
-            if k < INF_KEY and int(v) in self._requests
-        ]
+        dispatched = self._collect(
+            np.asarray(res.keys), np.asarray(res.vals), int(res.n_out)
+        )
         self.stats.inserted += na
         self.stats.dispatched += len(dispatched)
         self.stats.mode_trace.append(int(self.carry.stats.mode))
         return dispatched
+
+    def tick_window(
+        self, ticks: List[Tuple[List[Request], int]]
+    ) -> List[List[Request]]:
+        """K scheduler ticks in ONE device call (SmartPQ.run_window).
+
+        `ticks` is a list of (arrivals, n_dispatch) pairs.  Returns the
+        per-tick dispatch lists — identical to calling tick() K times (the
+        fused scan is bit-identical to the sequential step loop), at one
+        K-th of the dispatch overhead.  Requests that arrive and win a
+        dispatch slot within the same window ride the on-device elimination
+        pre-pass and never touch the queue state."""
+        K = len(ticks)
+        if K == 0:
+            return []
+        packed = []
+        subs = []
+        for arrivals, n_dispatch in ticks:
+            self.submit(arrivals)
+            packed.append(self._pack_tick(arrivals, n_dispatch))
+            self._step += 1  # priority keys age per tick, as in tick()
+            # split exactly as K sequential tick() calls would — the rng
+            # stream (and self._rng afterwards) must match bit for bit,
+            # otherwise spray/multiq modes diverge from the per-step path
+            self._rng, sub = jax.random.split(self._rng)
+            subs.append(sub)
+        ops = np.stack([p[0] for p in packed])
+        keys = np.stack([p[1] for p in packed])
+        vals = np.stack([p[2] for p in packed])
+        subs = jnp.stack(subs)
+
+        self.carry, wres = self.pq.jit_run_window(
+            self.carry,
+            jnp.asarray(ops),
+            jnp.asarray(keys),
+            jnp.asarray(vals),
+            subs,
+            512,
+        )
+        out_k = np.asarray(wres.keys)
+        out_v = np.asarray(wres.vals)
+        n_out = np.asarray(wres.n_out)
+        modes = np.asarray(wres.mode)
+        dispatched_per_tick = []
+        for t in range(K):
+            d = self._collect(out_k[t], out_v[t], int(n_out[t]))
+            dispatched_per_tick.append(d)
+            self.stats.inserted += packed[t][3]
+            self.stats.dispatched += len(d)
+            self.stats.mode_trace.append(int(modes[t]))
+        return dispatched_per_tick
 
     @property
     def pending(self) -> int:

@@ -1,0 +1,324 @@
+"""Fused-window engine contracts (run_window + elimination pre-pass).
+
+Machine-checked claims:
+  1. `run_window(K)` is BIT-IDENTICAL to K sequential `jit_step` calls for
+     EVERY schedule (the scan body is the step; the pre-pass sort is the
+     same sort, hoisted) — per-step delete outputs AND the final carry.
+  2. The scan carry is donated: XLA aliases every PQState buffer through
+     the window call (no per-window state copy).
+  3. The elimination pre-pass is EXACT: with elimination on, exact
+     schedules still linearize like the numpy oracle element for element,
+     and matched pairs demonstrably never touch the queue.
+  4. Relaxed schedules conserve the element multiset with elimination on.
+  5. Rebalance seq renumbering: a near-int32-wrap state is renumbered by
+     the next rebalance and keeps linearizing exactly (ROADMAP wrap item).
+  6. The bucketed tail compaction (both the bucket-merge path and the
+     over-wide-bucket full-sort fallback) preserves oracle linearization
+     under forced-small bucket widths.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core.pqueue.local as L
+from repro.core.pqueue import ops as O
+from repro.core.pqueue.ref import RefPQ
+from repro.core.pqueue.schedules import Schedule
+from repro.core.pqueue.state import INF_KEY, check_invariants, make_state
+from repro.core.smartpq import NUM_MODES, SmartPQ, SmartPQConfig
+from repro.utils.hlo import donation_aliases
+
+S, C, B, K = 8, 512, 32, 5
+
+_TREE = None
+
+
+def _pq(schedule=None, eliminate=True):
+    """SmartPQ with a shared (trained-once) tree; schedule pins all modes."""
+    global _TREE
+    cfg = SmartPQConfig(
+        num_shards=S, capacity=C, npods=2, decision_interval=2,
+        mode_schedules=(
+            (schedule,) * NUM_MODES if schedule is not None
+            else SmartPQConfig().mode_schedules
+        ),
+        eliminate=eliminate,
+    )
+    pq = SmartPQ(cfg, tree=_TREE)
+    _TREE = pq.tree
+    return pq
+
+
+def _window(seed, key_range=4096, ins_frac=0.5):
+    rng = np.random.default_rng(seed)
+    ops = jnp.asarray((rng.random((K, B)) > ins_frac).astype(np.int32))
+    keys = jnp.asarray(rng.integers(0, key_range, (K, B)).astype(np.int32))
+    vals = jnp.asarray(rng.integers(0, 99, (K, B)).astype(np.int32))
+    rngs = jax.random.split(jax.random.key(seed), K)
+    return ops, keys, vals, rngs
+
+
+# ---------------------------------------------------------------------------
+# 1. bit-identity to the sequential step loop, every schedule
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("schedule", list(Schedule), ids=lambda s: s.name)
+def test_run_window_bitmatches_sequential_steps(schedule):
+    pq = _pq(schedule)
+    ops, keys, vals, rngs = _window(seed=int(schedule) + 1)
+
+    step = jax.jit(pq.step)
+    carry = pq.init()
+    seq = []
+    for t in range(K):
+        carry, res = step(carry, ops[t], keys[t], vals[t], rngs[t], 64)
+        seq.append((np.asarray(res.keys), np.asarray(res.vals),
+                    int(res.n_out), int(carry.stats.mode)))
+
+    carry_w, wres = pq.jit_run_window(pq.init(), ops, keys, vals, rngs, 64)
+    for t in range(K):
+        np.testing.assert_array_equal(np.asarray(wres.keys)[t], seq[t][0])
+        np.testing.assert_array_equal(np.asarray(wres.vals)[t], seq[t][1])
+        assert int(wres.n_out[t]) == seq[t][2]
+        assert int(wres.mode[t]) == seq[t][3]
+    for a, b in zip(jax.tree.leaves(carry), jax.tree.leaves(carry_w)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_run_window_adaptive_bitmatches_sequential():
+    """Same bit-identity with the real 3-mode switch live (decisions taken
+    mid-window, on-device)."""
+    pq = _pq(schedule=None)
+    ops, keys, vals, rngs = _window(seed=77, ins_frac=0.3)
+    step = jax.jit(pq.step)
+    carry = pq.init()
+    seq = []
+    for t in range(K):
+        carry, res = step(carry, ops[t], keys[t], vals[t], rngs[t], 512)
+        seq.append((np.asarray(res.keys), np.asarray(res.vals)))
+    carry_w, wres = pq.jit_run_window(pq.init(), ops, keys, vals, rngs, 512)
+    for t in range(K):
+        np.testing.assert_array_equal(np.asarray(wres.keys)[t], seq[t][0])
+        np.testing.assert_array_equal(np.asarray(wres.vals)[t], seq[t][1])
+    for a, b in zip(jax.tree.leaves(carry), jax.tree.leaves(carry_w)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# 2. the scan carry is donated (no state copy per window)
+# ---------------------------------------------------------------------------
+
+
+def test_run_window_donates_carry_no_copy():
+    pq = _pq(schedule=None)
+    carry = pq.init()
+    ops, keys, vals, rngs = _window(seed=3)
+    args = (carry, ops, keys, vals, rngs, jnp.int32(64))
+
+    compiled = pq.jit_run_window.lower(*args).compile()
+    aliases = donation_aliases(compiled)
+    n_state_leaves = len(jax.tree.leaves(carry.state))
+    assert len(aliases) >= n_state_leaves, (
+        f"expected every PQState buffer aliased through the window scan, "
+        f"got {len(aliases)} aliases: {aliases}"
+    )
+
+    out_carry, _ = pq.jit_run_window(*args)
+    assert carry.state.head_keys.is_deleted()
+    assert carry.state.tail_keys.is_deleted()
+    assert not out_carry.state.head_keys.is_deleted()
+
+
+# ---------------------------------------------------------------------------
+# 3. elimination is exact (and really bypasses the queue)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "schedule", [Schedule.STRICT_FLAT, Schedule.HIER, Schedule.FFWD],
+    ids=lambda s: s.name,
+)
+def test_elimination_exact_vs_oracle(schedule):
+    """apply_op_batch(eliminate=True) linearizes like the oracle element for
+    element — keys AND vals — under mixed batches with heavy ties and keys
+    below the queue minimum (the matched regime)."""
+    rng = np.random.default_rng(int(schedule))
+    st, ref = make_state(4, 64, head_width=16), RefPQ(4, 64)
+    for step in range(12):
+        ops = rng.integers(0, 2, 16).astype(np.int32)
+        keys = rng.integers(0, 50, 16).astype(np.int32)
+        vals = rng.integers(0, 99, 16).astype(np.int32)
+        r = O.apply_op_batch(
+            st, jnp.asarray(ops), jnp.asarray(keys), jnp.asarray(vals),
+            schedule=schedule, npods=2, eliminate=True,
+        )
+        st = r.state
+        ref.insert_batch(keys, vals, mask=ops == O.OP_INSERT)
+        rk, rv = ref.delete_min_exact(int((ops == O.OP_DELETE_MIN).sum()))
+        n = int(r.n_deleted)
+        assert n == len(rk)
+        np.testing.assert_array_equal(np.asarray(r.deleted_keys)[:n], rk)
+        np.testing.assert_array_equal(np.asarray(r.deleted_vals)[:n], rv)
+        ok, msg = check_invariants(st)
+        assert ok, msg
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(st.keys[st.keys < INF_KEY]).ravel()),
+        ref.key_multiset(),
+    )
+
+
+def test_elimination_bypasses_queue_state():
+    """A batch whose inserts all beat the queue minimum and are all matched
+    by deletes leaves the queue state untouched (next_seq included) and
+    returns exactly the batch's own minima."""
+    st = make_state(4, 64, head_width=16)
+    st, _ = O.insert(st, jnp.asarray([100, 200, 300, 400], jnp.int32),
+                     jnp.zeros(4, jnp.int32))
+    ops = jnp.asarray([0, 0, 1, 1], jnp.int32)  # 2 inserts, 2 deletes
+    keys = jnp.asarray([7, 5, INF_KEY, INF_KEY], jnp.int32)
+    vals = jnp.asarray([70, 50, 0, 0], jnp.int32)
+    r = O.apply_op_batch(st, ops, keys, vals,
+                         schedule=Schedule.STRICT_FLAT, eliminate=True)
+    np.testing.assert_array_equal(np.asarray(r.deleted_keys)[:2], [5, 7])
+    np.testing.assert_array_equal(np.asarray(r.deleted_vals)[:2], [50, 70])
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(r.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_smartpq_counts_eliminated_pairs():
+    pq = _pq(schedule=Schedule.STRICT_FLAT)
+    carry = pq.init()
+    step = jax.jit(pq.step)
+    rng = np.random.default_rng(5)
+    key = jax.random.key(5)
+    for _ in range(6):
+        ops = jnp.asarray(rng.integers(0, 2, B).astype(np.int32))
+        keys = jnp.asarray(rng.integers(0, 64, B).astype(np.int32))
+        key, sub = jax.random.split(key)
+        carry, _ = step(carry, ops, keys, jnp.zeros(B, jnp.int32), sub, 64)
+    assert int(carry.stats.eliminated) > 0, (
+        "low-key insert/delete mix must exercise the elimination pre-pass"
+    )
+
+
+# ---------------------------------------------------------------------------
+# 4. relaxed schedules conserve the multiset with elimination on
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "schedule",
+    [Schedule.SPRAY_HERLIHY, Schedule.MULTIQ, Schedule.LOCAL,
+     Schedule.SPRAY_FRASER],
+    ids=lambda s: s.name,
+)
+def test_elimination_conserves_relaxed(schedule):
+    rng = np.random.default_rng(int(schedule) + 10)
+    st = make_state(4, 64, head_width=16)
+    inserted, deleted = [], []
+    for step in range(10):
+        ops = rng.integers(0, 2, 16).astype(np.int32)
+        keys = rng.integers(0, 80, 16).astype(np.int32)
+        r = O.apply_op_batch(
+            st, jnp.asarray(ops), jnp.asarray(keys),
+            jnp.asarray(keys % 97), schedule=schedule, npods=2,
+            rng=jax.random.key(step), eliminate=True,
+        )
+        st = r.state
+        inserted.extend(keys[ops == O.OP_INSERT].tolist())
+        deleted.extend(np.asarray(r.deleted_keys)[: int(r.n_deleted)].tolist())
+        ok, msg = check_invariants(st)
+        assert ok, f"{schedule.name}: {msg}"
+    remaining = np.asarray(st.keys[st.keys < INF_KEY]).ravel().tolist()
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(deleted + remaining)),
+        np.sort(np.asarray(inserted)),
+        err_msg=f"{schedule.name}: element loss or duplication",
+    )
+
+
+# ---------------------------------------------------------------------------
+# 5. seq renumbering at the rebalance (int32 wrap fix)
+# ---------------------------------------------------------------------------
+
+
+def test_seq_renumber_on_near_wrap():
+    """Force next_seq within the renumber horizon of int32 wrap; the next
+    insert's guarded rebalance must renumber every shard's seqs back to the
+    shard population while keeping the linearization exact."""
+    rng = np.random.default_rng(11)
+    st, ref = make_state(4, 64, head_width=8), RefPQ(4, 64)
+    keys = rng.integers(0, 500, 80).astype(np.int32)
+    st, _ = O.insert(st, jnp.asarray(keys), jnp.asarray(keys % 97))
+    ref.insert_batch(keys, keys % 97)
+
+    offset = jnp.int32(L.SEQ_RENUMBER_THRESHOLD)
+    near_wrap = dataclasses.replace(
+        st,
+        head_seq=st.head_seq + offset,
+        tail_seq=st.tail_seq + offset,
+        next_seq=st.next_seq + offset,
+    )
+    ok, msg = check_invariants(near_wrap)
+    assert ok, msg
+    assert int(jnp.min(near_wrap.next_seq)) > L.SEQ_RENUMBER_THRESHOLD - 1
+
+    more = rng.integers(0, 500, 16).astype(np.int32)
+    st2, _ = O.insert(near_wrap, jnp.asarray(more), jnp.asarray(more % 97))
+    ref.insert_batch(more, more % 97)
+    assert int(jnp.max(st2.next_seq)) <= int(st2.total_size) + 1, (
+        "rebalance must renumber seqs positionally, resetting next_seq to "
+        "the shard population"
+    )
+    ok, msg = check_invariants(st2)
+    assert ok, msg
+    # linearization stays exact after renumbering
+    res = O.delete_min(st2, 8, schedule=Schedule.STRICT_FLAT, active=8)
+    rk, rv = ref.delete_min_exact(8)
+    np.testing.assert_array_equal(np.asarray(res.keys)[: int(res.n_out)], rk)
+    np.testing.assert_array_equal(np.asarray(res.vals)[: int(res.n_out)], rv)
+
+
+# ---------------------------------------------------------------------------
+# 6. bucketed tail compaction under forced-small bucket widths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bucket_width", [4, 16])
+def test_bucketed_tail_compaction_exact(monkeypatch, bucket_width):
+    """bucket_width=16 keeps every compaction on the bucket-merge path
+    (appends of <= 8 always fit); bucket_width=4 forces the over-wide
+    fallback.  Both must linearize exactly and uphold I4/I5/I6."""
+    monkeypatch.setattr(L, "TAIL_BUCKET_WIDTH", bucket_width)
+    rng = np.random.default_rng(100 + bucket_width)
+    st, ref = make_state(4, 64, head_width=8), RefPQ(4, 64)
+    compacted = False
+    for step in range(25):
+        # insert-biased (~70/30) so the tail keeps a durable sorted run for
+        # the `compacted` probe instead of draining every batch
+        ops = (rng.random(8) > 0.7).astype(np.int32)
+        keys = rng.integers(0, 300, 8).astype(np.int32)
+        vals = rng.integers(0, 99, 8).astype(np.int32)
+        r = O.apply_op_batch(
+            st, jnp.asarray(ops), jnp.asarray(keys), jnp.asarray(vals),
+            schedule=Schedule.STRICT_FLAT, eliminate=bool(step % 2),
+        )
+        st = r.state
+        compacted |= bool(np.any(np.asarray(st.tail_sorted) > 0))
+        ref.insert_batch(keys, vals, mask=ops == O.OP_INSERT)
+        rk, rv = ref.delete_min_exact(int((ops == O.OP_DELETE_MIN).sum()))
+        n = int(r.n_deleted)
+        np.testing.assert_array_equal(np.asarray(r.deleted_keys)[:n], rk)
+        np.testing.assert_array_equal(np.asarray(r.deleted_vals)[:n], rv)
+        ok, msg = check_invariants(st)
+        assert ok, msg
+    assert compacted, "workload never produced a sorted tail run"
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(st.keys[st.keys < INF_KEY]).ravel()),
+        ref.key_multiset(),
+    )

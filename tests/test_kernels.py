@@ -50,6 +50,28 @@ def test_merge_exact(S, C, R):
     np.testing.assert_array_equal(np.asarray(mv), np.asarray(rv))
 
 
+@pytest.mark.parametrize("R,N", [(1, 16), (4, 64), (6, 37), (8, 128), (3, 100)])
+def test_elim_sort_exact(R, N):
+    """The elimination-match full sort (bitonic network on (key, tag) pairs)
+    must be bit-identical to the stable-argsort reference under heavy
+    duplicates and INF-masked lanes — the pre-pass exactness contract."""
+    from repro.kernels.ops import elim_sort
+
+    keys = RNG.integers(0, 12, (R, N)).astype(np.int32)  # heavy ties
+    keys[RNG.random((R, N)) < 0.3] = INF_KEY  # masked non-insert lanes
+    tags = np.tile(np.arange(N, dtype=np.int32), (R, 1))
+    kk, kt = elim_sort(jnp.asarray(keys), jnp.asarray(tags), use_kernel=True)
+    rk, rt = REF.elim_sort_ref(jnp.asarray(keys), jnp.asarray(tags))
+    np.testing.assert_array_equal(np.asarray(kk), np.asarray(rk))
+    np.testing.assert_array_equal(np.asarray(kt), np.asarray(rt))
+    # and against the dispatching wrapper's jnp path
+    from repro.core.pqueue.local import sort_op_log
+
+    sk, st = sort_op_log(jnp.asarray(keys), use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(kk), np.asarray(sk))
+    np.testing.assert_array_equal(np.asarray(kt), np.asarray(st))
+
+
 def test_topk_all_equal_keys_stable():
     keys = np.zeros((2, 64), np.int32)
     vals = np.tile(np.arange(64, dtype=np.int32), (2, 1))

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 from repro.core.nuddle import (
     delegate_single_controller,
+    delegate_window,
     pq_tournament_ops,
     sorted_set_ops,
 )
@@ -60,6 +61,38 @@ def test_sorted_set_plugin():
         sorted_set_ops(jnp.asarray([present, absent], jnp.int32)), ls, 0, npods=2
     )
     assert list(np.asarray(verdict["hit"])) == [True, False]
+
+
+def test_delegate_window_matches_sequential():
+    """K fused delegation rounds == K sequential delegate calls, bit for
+    bit (states and every per-round verdict)."""
+    st = _filled_state()
+    ls = {"keys": st.keys, "vals": st.vals}
+    K = 4
+    ctxs = {"n": jnp.asarray([5, 3, 8, 1], jnp.int32)}
+
+    seq_states = {k: jnp.asarray(v) for k, v in ls.items()}
+    seq_verdicts = []
+    for t in range(K):
+        seq_states, v = delegate_single_controller(
+            pq_tournament_ops(), seq_states, 8, npods=2,
+            ctx={"n": ctxs["n"][t]},
+        )
+        seq_verdicts.append(v)
+
+    win_states, win_verdicts = jax.jit(
+        lambda s, c: delegate_window(pq_tournament_ops(), s, 8, 2, c)
+    )(ls, ctxs)
+    for k in ls:
+        np.testing.assert_array_equal(
+            np.asarray(win_states[k]), np.asarray(seq_states[k])
+        )
+    for t in range(K):
+        for k in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(win_verdicts[k])[t],
+                np.asarray(seq_verdicts[t][k]),
+            )
 
 
 def test_npods_invariance():
