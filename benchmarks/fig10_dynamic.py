@@ -1,66 +1,72 @@
 """Figures 10 & 11: time-varying contention — SmartPQ adapts, fixed modes
-don't.  Phase traces follow the paper's Tables 2 and 3 (rescaled: phase
-length in steps; sizes/ranges as given)."""
+don't.
+
+The phase schedules are the paper's Tables 2 and 3, and they live in
+`repro.workloads.traces` (`TABLE2` / `TABLE3`) — the SAME tables the
+replay tests exercise, one source of truth.  Each trace is generated once
+by `traces.phased_trace` and driven through the fused-window engine for
+every cast member: fixed modes pin all `mode_schedules` to one schedule
+(the switch predicate constant), SmartPQ runs the real decision stack —
+identical op stream, identical dispatch granularity, so the comparison is
+purely the adaptation story."""
+
+import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import PQWorkload, emit, smartpq_throughput_mops, throughput_mops
+from benchmarks.common import PQWorkload, emit
+from repro.core.classifier.features import NUM_MODES
 from repro.core.pqueue.schedules import Schedule
-from repro.core.smartpq import SmartPQ, SmartPQConfig
+from repro.workloads import traces as T
+from repro.workloads.registry import default_pq
 
-# Paper Table 2 traces (time, size is emergent; we pin the driving features).
-TABLE2 = {
-    "a_keyrange": [  # vary key range (50 threads, 75-25 mix)
-        dict(num_clients=50, key_range=100_000, insert_frac=0.75),
-        dict(num_clients=50, key_range=2_000, insert_frac=0.75),
-        dict(num_clients=50, key_range=1 << 20, insert_frac=0.75),
-        dict(num_clients=50, key_range=10_000, insert_frac=0.75),
-        dict(num_clients=50, key_range=50_000_000, insert_frac=0.75),
-    ],
-    "b_threads": [  # vary #threads (65-35 mix, range 20M)
-        dict(num_clients=57, key_range=20_000_000, insert_frac=0.65),
-        dict(num_clients=29, key_range=20_000_000, insert_frac=0.65),
-        dict(num_clients=15, key_range=20_000_000, insert_frac=0.65),
-        dict(num_clients=43, key_range=20_000_000, insert_frac=0.65),
-        dict(num_clients=15, key_range=20_000_000, insert_frac=0.65),
-    ],
-    "c_mix": [  # vary op mix (22 threads, range 5M)
-        dict(num_clients=22, key_range=5_000_000, insert_frac=0.5),
-        dict(num_clients=22, key_range=5_000_000, insert_frac=1.0),
-        dict(num_clients=22, key_range=5_000_000, insert_frac=0.3),
-        dict(num_clients=22, key_range=5_000_000, insert_frac=1.0),
-        dict(num_clients=22, key_range=5_000_000, insert_frac=0.0),
-    ],
-}
 
-# Paper Table 3: multiple features vary at once (subset of the 15 phases).
-TABLE3 = [
-    dict(num_clients=57, key_range=10_000_000, insert_frac=0.5),
-    dict(num_clients=36, key_range=10_000_000, insert_frac=0.7),
-    dict(num_clients=36, key_range=20_000_000, insert_frac=0.5),
-    dict(num_clients=36, key_range=20_000_000, insert_frac=0.8),
-    dict(num_clients=50, key_range=20_000_000, insert_frac=0.8),
-    dict(num_clients=50, key_range=100_000_000, insert_frac=0.5),
-    dict(num_clients=57, key_range=100_000_000, insert_frac=0.5),
-    dict(num_clients=22, key_range=100_000_000, insert_frac=1.0),
-    dict(num_clients=22, key_range=100_000_000, insert_frac=0.5),
-    dict(num_clients=57, key_range=200_000_000, insert_frac=0.0),
-    dict(num_clients=57, key_range=200_000_000, insert_frac=1.0),
-    dict(num_clients=57, key_range=20_000_000, insert_frac=0.0),
-    dict(num_clients=29, key_range=20_000_000, insert_frac=0.8),
-    dict(num_clients=29, key_range=20_000_000, insert_frac=0.5),
-]
+def _pq(shards, cap, schedule=None):
+    return default_pq(
+        num_shards=shards, capacity=cap,
+        mode_schedules=(
+            (schedule,) * NUM_MODES if schedule is not None else None
+        ),
+    )
+
+
+def _replay_mops(trace, pq, shards, cap, init_size, init_range):
+    """Wall-clock one warm fused-window replay of the trace; returns
+    (mops, modes_seen, transitions)."""
+    w = PQWorkload(num_clients=trace.width, size=init_size,
+                   key_range=init_range, insert_frac=0.5,
+                   num_shards=shards, capacity=cap)
+    xs = (jnp.asarray(trace.ops), jnp.asarray(trace.keys),
+          jnp.asarray(trace.vals), T.trace_rngs(trace),
+          jnp.asarray(trace.num_clients))
+
+    def fresh_carry():
+        return pq.init()._replace(state=w.init_state())
+
+    out = pq.jit_run_window(fresh_carry(), *xs)  # compile+warm
+    jax.block_until_ready(jax.tree.leaves(out[0].state))
+    carry = fresh_carry()
+    jax.block_until_ready(jax.tree.leaves(carry.state))
+    t0 = time.perf_counter()
+    carry, res = pq.jit_run_window(carry, *xs)
+    jax.block_until_ready(jax.tree.leaves(carry.state))
+    dt = time.perf_counter() - t0
+    ops_done = int(np.sum(trace.num_clients))
+    modes = sorted({int(m) for m in np.asarray(res.mode)})
+    return ops_done / dt / 1e6, modes, int(carry.stats.transitions)
 
 
 def _run_trace(name, phases, steps_per_phase=6, quick=False):
-    """Drive the SAME phase sequence through SmartPQ and both fixed modes;
-    report per-trace mean throughput + adaptation stats."""
+    """Drive the SAME phased trace through SmartPQ and the fixed modes;
+    report per-trace throughput + adaptation stats."""
     if quick:
         phases = phases[:2]
         steps_per_phase = 4
     shards, cap = 16, 1 << 15
+    trace = T.phased_trace(phases, steps_per_phase=steps_per_phase, seed=0)
+    init_size, init_range = 8192, int(phases[0]["key_range"])
 
     results = {}
     for label, sched in (
@@ -68,41 +74,26 @@ def _run_trace(name, phases, steps_per_phase=6, quick=False):
         ("multiqueue", Schedule.MULTIQ),
         ("nuddle", Schedule.HIER),
     ):
-        tot_ops, tot_t = 0, 0.0
-        for ph in phases:
-            w = PQWorkload(size=8192, num_shards=shards, capacity=cap,
-                           npods=2, **ph)
-            t = throughput_mops(w, sched, steps=steps_per_phase)
-            tot_ops += ph["num_clients"] * steps_per_phase
-            tot_t += ph["num_clients"] * steps_per_phase / (t * 1e6)
-        results[label] = tot_ops / tot_t / 1e6
-
-    # SmartPQ: one persistent queue across phases (the adaptation story)
-    pq = SmartPQ(SmartPQConfig(num_shards=shards, capacity=cap, npods=2,
-                               decision_interval=2))
-    tot_ops, tot_t, transitions = 0, 0.0, 0
-    modes_seen = set()
-    for ph in phases:
-        w = PQWorkload(size=8192, num_shards=shards, capacity=cap, npods=2, **ph)
-        s = smartpq_throughput_mops(w, steps=steps_per_phase, pq=pq)
-        tot_ops += ph["num_clients"] * steps_per_phase
-        tot_t += ph["num_clients"] * steps_per_phase / (s["mops"] * 1e6)
-        transitions = s["transitions"]
-        modes_seen.update(s["modes_seen"])
-    results["smartpq"] = tot_ops / tot_t / 1e6
+        results[label], _, _ = _replay_mops(
+            trace, _pq(shards, cap, sched), shards, cap, init_size,
+            init_range,
+        )
+    results["smartpq"], modes_seen, transitions = _replay_mops(
+        trace, _pq(shards, cap), shards, cap, init_size, init_range
+    )
 
     best_fixed = max(results[k] for k in ("oblivious", "multiqueue", "nuddle"))
     for label in ("oblivious", "multiqueue", "nuddle", "smartpq"):
         emit(
             f"{name}/{label}", 1.0 / results[label],
-            f"mops={results[label]:.2f}"
+            f"mops={results[label]:.3f}"
             + (f";vs_best_fixed={results['smartpq'] / best_fixed:.2f}"
                f";transitions={transitions}"
-               f";modes_seen={sorted(modes_seen)}" if label == "smartpq" else ""),
+               f";modes_seen={modes_seen}" if label == "smartpq" else ""),
         )
 
 
 def run(quick: bool = False):
-    for key, phases in TABLE2.items():
+    for key, phases in T.TABLE2.items():
         _run_trace(f"fig10/{key}", phases, quick=quick)
-    _run_trace("fig11/multi_feature", TABLE3, quick=quick)
+    _run_trace("fig11/multi_feature", T.TABLE3, quick=quick)

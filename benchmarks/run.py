@@ -21,7 +21,8 @@ def main() -> None:
     ap.add_argument(
         "--only", default=None,
         help="comma list of: fig1,fig7,fig9,fig9_latency,fig9_window,fig10,"
-             "fig12,classifier,roofline,kernels,rank_error,smoke",
+             "fig12,classifier,roofline,kernels,rank_error,smoke,"
+             "workloads_sssp,workloads_des",
     )
     ap.add_argument(
         "--schedule", default="all",
@@ -76,6 +77,7 @@ def main() -> None:
         roofline,
         smoke,
         window_amortization,
+        workloads_bench,
     )
 
     suites = {
@@ -92,6 +94,8 @@ def main() -> None:
         "rank_error": lambda quick=False: multiq_rank_error.run(
             quick=quick, schedule=args.schedule
         ),
+        "workloads_sssp": workloads_bench.run_sssp,
+        "workloads_des": workloads_bench.run_des,
         "smoke": smoke.run,
     }
     if args.smoke:
@@ -116,16 +120,37 @@ def main() -> None:
     if args.json:
         import jax
 
+        # Merge into an existing file: fresh records replace same-name
+        # committed ones, other suites' records survive — so partial runs
+        # (e.g. --only workloads_sssp,workloads_des) refresh their slice of
+        # BENCH_pq.json without dropping the rest of the trajectory.
+        out_path = Path(args.json)
+        records = list(common.BENCH_RECORDS)
+        if out_path.exists():
+            prev = json.loads(out_path.read_text())
+            if prev.get("backend") != jax.default_backend():
+                print(
+                    f"# WARNING: merging {jax.default_backend()} records "
+                    f"into a {prev.get('backend')} baseline — retained "
+                    f"records keep their old-backend medians",
+                    file=sys.stderr,
+                )
+            fresh_names = {r["name"] for r in records}
+            kept = [
+                r for r in prev["records"]
+                if r["name"] not in fresh_names
+            ]
+            records = kept + records
         payload = {
             "schema": 1,
             "backend": jax.default_backend(),
             "jax": jax.__version__,
             "generated_unix": int(time.time()),
-            "records": common.BENCH_RECORDS,
+            "records": records,
         }
-        Path(args.json).write_text(json.dumps(payload, indent=1) + "\n")
-        print(f"# wrote {len(common.BENCH_RECORDS)} records to {args.json}",
-              file=sys.stderr)
+        out_path.write_text(json.dumps(payload, indent=1) + "\n")
+        print(f"# wrote {len(common.BENCH_RECORDS)} fresh records to "
+              f"{args.json} ({len(records)} total)", file=sys.stderr)
 
     if args.check:
         compared, regressions = 0, []

@@ -1,10 +1,16 @@
 """Smoke benchmark — the fast tier-1 lane's perf-trajectory probe.
 
 A tiny deleteMin-dominated workload (the fig9 latency slice scaled down)
-timed for the three acceptance schedules.  Runs in seconds, emits the same
-BENCH_pq.json record schema as the full suites, so CI can diff medians
-across commits without paying for the full grid.
+timed for the three acceptance schedules, plus seconds-scale application-
+workload probes (a small SSSP instance and a short DES hold run) so the
+`--smoke --check` regression gate covers the `repro.workloads` drivers
+too.  Emits the same BENCH_pq.json record schema as the full suites, so
+CI can diff medians across commits without paying for the full grid.
 """
+
+import time
+
+import numpy as np
 
 from benchmarks.common import PQWorkload, emit, step_latency_us, workload_fields
 from repro.core.pqueue.schedules import Schedule
@@ -27,3 +33,37 @@ def run(quick: bool = False):
         emit(f"smoke/ins0/{name}", us, f"median_us_per_step={us:.1f}",
              schedule=sched.name, us_per_step=round(us, 3),
              **workload_fields(w))
+    _run_workloads()
+
+
+def _run_workloads():
+    """Seconds-scale probes of the application drivers (warm timings)."""
+    from repro.workloads import (
+        bellman_ford, make_hold_engine, make_sssp_engine, random_graph,
+    )
+    from repro.workloads.registry import default_pq
+
+    g = random_graph(n=128, seed=0)
+    engine = make_sssp_engine(g, Schedule.STRICT_FLAT, m=16, chunk=4)
+    r0 = engine(seed=1)  # compile+warm
+    t0 = time.perf_counter()
+    r = engine(seed=1)
+    us = (time.perf_counter() - t0) * 1e6 / max(r.steps, 1)
+    ok = bool(np.array_equal(r.dist, bellman_ford(g)))
+    emit("smoke/workloads_sssp", us,
+         f"median_us_per_step={us:.1f};correct={ok};pops={r.pops}",
+         us_per_step=round(us, 3), n_vertices=g.n)
+    del r0
+
+    from repro.core.classifier.features import NUM_MODES
+
+    pq = default_pq(mode_schedules=(Schedule.STRICT_FLAT,) * NUM_MODES)
+    K = 16
+    hold = make_hold_engine(pq, B=16, K=K)
+    hold(seed=2)  # compile+warm
+    t0 = time.perf_counter()
+    res = hold(seed=2)
+    us = (time.perf_counter() - t0) * 1e6 / K
+    emit("smoke/workloads_des", us,
+         f"median_us_per_step={us:.1f};events={res.events}",
+         us_per_step=round(us, 3))

@@ -1,0 +1,128 @@
+"""Application-workload suites (`workloads_sssp` / `workloads_des`).
+
+SSSP: per-schedule wavefront-Dijkstra runs on one random graph — wall
+clock per step (warm: the engine's jitted chunk program is compiled by a
+throwaway run first), empirical wasted-relaxation overhead, and the
+Bellman-Ford correctness bit.  DES: hold-model event throughput per
+schedule plus the bursty M/M/1 trace replayed through the adaptive
+fused-window engine (modes/transition stats).  Records land in
+BENCH_pq.json under stable names so the `--check` gate can diff medians.
+"""
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.classifier.features import NUM_MODES
+from repro.core.pqueue.schedules import Schedule
+from repro.workloads import (
+    bellman_ford,
+    default_pq,
+    hold_model_oracle,
+    make_hold_engine,
+    make_smartpq_sssp_engine,
+    make_sssp_engine,
+    random_graph,
+    replay,
+    traces,
+)
+
+SSSP_CAST = [
+    ("lotan_shavit", Schedule.STRICT_FLAT),
+    ("nuddle", Schedule.HIER),
+    ("alistarh_herlihy", Schedule.SPRAY_HERLIHY),
+    ("multiqueue", Schedule.MULTIQ),
+]
+
+
+def run_sssp(quick: bool = False):
+    n = 256 if quick else 512
+    g = random_graph(n=n, seed=0)
+    ref = bellman_ford(g)
+    for label, sched in SSSP_CAST:
+        engine = make_sssp_engine(g, sched, m=32)
+        engine(seed=1)  # compile+warm the chunk program
+        t0 = time.perf_counter()
+        r = engine(seed=1)
+        dt = time.perf_counter() - t0
+        us = dt * 1e6 / max(r.steps, 1)
+        ok = bool(np.array_equal(r.dist, ref))
+        wasted_pct = 100.0 * r.wasted / max(r.pops, 1)
+        emit(
+            f"workloads_sssp/{label}", us,
+            f"wasted_pct={wasted_pct:.1f};pops={r.pops};steps={r.steps};"
+            f"correct={ok}",
+            schedule=sched.name, us_per_step=round(us, 3),
+            n_vertices=g.n, n_edges=g.num_edges,
+        )
+    pq = default_pq(head_width=256)
+    engine = make_smartpq_sssp_engine(g, pq, m=16)
+    engine(seed=1)  # compile+warm
+    t0 = time.perf_counter()
+    r, _ = engine(seed=1)
+    dt = time.perf_counter() - t0
+    us = dt * 1e6 / max(r.steps, 1)
+    ok = bool(np.array_equal(r.dist, ref))
+    emit(
+        "workloads_sssp/smartpq", us,
+        f"wasted_pct={100.0 * r.wasted / max(r.pops, 1):.1f};"
+        f"pops={r.pops};steps={r.steps};correct={ok};"
+        f"modes_seen={sorted(set(r.modes.tolist()))};"
+        f"transitions={r.transitions}",
+        us_per_step=round(us, 3), n_vertices=g.n, n_edges=g.num_edges,
+    )
+
+
+DES_CAST = [
+    ("lotan_shavit", Schedule.STRICT_FLAT),
+    ("multiqueue", Schedule.MULTIQ),
+]
+
+
+def run_des(quick: bool = False):
+    B, K = 32, 32 if quick else 64
+    for label, sched in DES_CAST:
+        pq = default_pq(mode_schedules=(sched,) * NUM_MODES)
+        engine = make_hold_engine(pq, B=B, K=K)
+        engine(seed=3)  # compile+warm
+        t0 = time.perf_counter()
+        r = engine(seed=3)
+        dt = time.perf_counter() - t0
+        derived = f"events_per_s={r.events / dt:.0f};events={r.events}"
+        if sched is Schedule.STRICT_FLAT:
+            oracle = hold_model_oracle(B, K, seed=3)
+            match = all(
+                np.array_equal(r.popped[t][: r.n_out[t]],
+                               np.asarray(oracle[t], np.int32))
+                for t in range(K)
+            )
+            derived += f";oracle_match={bool(match)}"
+        emit(
+            f"workloads_des/hold/{label}", dt * 1e6 / K, derived,
+            schedule=sched.name, us_per_step=round(dt * 1e6 / K, 3),
+        )
+
+    # bursty M/M/1 arrival trace through the adaptive fused-window engine
+    trace = traces.bursty_des_trace(
+        phases=traces.BURSTY_PHASES_QUICK if quick else traces.BURSTY_PHASES,
+        seed=5,
+    )
+    pq = default_pq(num_shards=8, capacity=1024)
+    _, warm = replay(pq, trace)  # compile+warm
+    import jax
+
+    jax.block_until_ready(warm.keys)
+    t0 = time.perf_counter()
+    carry, res = replay(pq, trace)
+    jax.block_until_ready(jax.tree.leaves(carry.state))
+    dt = time.perf_counter() - t0
+    events = int(np.sum(np.asarray(res.n_out)))
+    modes = sorted({int(m) for m in np.asarray(res.mode)})
+    emit(
+        "workloads_des/bursty_smartpq", dt * 1e6 / trace.num_steps,
+        f"events_per_s={events / dt:.0f};events={events};"
+        f"modes_seen={modes};transitions={int(carry.stats.transitions)}",
+        us_per_step=round(dt * 1e6 / trace.num_steps, 3),
+        num_clients=trace.width,
+    )

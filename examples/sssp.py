@@ -1,14 +1,21 @@
 """Single-Source Shortest Paths over the distributed PQ — the paper's
-motivating graph application (§1).
+motivating graph application (§1), now a thin wrapper over the on-device
+driver in `repro.workloads.sssp`.
 
-Bulk-synchronous Dijkstra: each step deleteMin's a wavefront of m vertices,
-relaxes their edges, and inserts improved tentative distances.  Run twice:
+The driver runs the whole wavefront loop (deleteMin an m-wide wavefront,
+scatter-min edge relaxation, re-insert improved tentative distances) inside
+`lax.scan`; this script just compares the schedules:
 
-  * exact mode (HIER / Nuddle): every settled vertex is final -> zero wasted
-    relaxations, but each step pays the hierarchical tournament;
-  * relaxed mode (SPRAY / alistarh): collective-free deleteMin, but priority
-    inversion causes re-relaxations (wasted work) — the quantity the
-    SmartPQ cost model's `relax_alpha` captures (DESIGN.md §6).
+  * exact mode (HIER / Nuddle): every wavefront is the true global minimum
+    — wasted pops are only same-batch collisions, but each step pays the
+    hierarchical tournament;
+  * relaxed mode (SPRAY / MULTIQ): collective-free deleteMin, but priority
+    inversion causes stale pops (wasted re-relaxations) — the quantity the
+    SmartPQ cost model's `relax_alpha` captures, measured here empirically;
+  * adaptive SmartPQ: the decision tree picks per-step, on-device.
+
+The oracle is `repro.workloads.graphs.bellman_ford`; every schedule must
+converge to its distances bit for bit.
 
     PYTHONPATH=src python examples/sssp.py
 """
@@ -19,104 +26,44 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.core.pqueue import ops as O
 from repro.core.pqueue.schedules import Schedule
-from repro.core.pqueue.state import INF_KEY, make_state
-
-
-def random_graph(n=512, avg_deg=6, seed=0):
-    rng = np.random.default_rng(seed)
-    rows, cols, w = [], [], []
-    for u in range(n):
-        deg = rng.poisson(avg_deg) + 1
-        vs = rng.choice(n, size=min(deg, n - 1), replace=False)
-        for v in vs:
-            if v != u:
-                rows.append(u)
-                cols.append(int(v))
-                w.append(int(rng.integers(1, 64)))
-    return np.asarray(rows), np.asarray(cols), np.asarray(w), n
-
-
-def bellman_ford_ref(rows, cols, w, n, src=0):
-    dist = np.full(n, np.iinfo(np.int64).max)
-    dist[src] = 0
-    for _ in range(n):
-        nd = np.minimum.reduceat if False else None
-        changed = False
-        for u, v, wt in zip(rows, cols, w):
-            if dist[u] != np.iinfo(np.int64).max and dist[u] + wt < dist[v]:
-                dist[v] = dist[u] + wt
-                changed = True
-        if not changed:
-            break
-    return dist
-
-
-def sssp_pq(rows, cols, w, n, schedule, m=32, seed=0, src=0):
-    """Bulk Dijkstra.  Returns (dist, settles, steps) — `settles` counts
-    deleteMin pops; pops of stale entries are the wasted work."""
-    adj = {}
-    for u, v, wt in zip(rows, cols, w):
-        adj.setdefault(u, []).append((v, wt))
-
-    st = make_state(16, 1 << 14)
-    dist = np.full(n, np.iinfo(np.int64).max)
-    dist[src] = 0
-    # key packs (distance << 10 | vertex) so ties break deterministically.
-    st, _ = O.insert(st, jnp.asarray([0], jnp.int32), jnp.asarray([src], jnp.int32))
-    key = jax.random.key(seed)
-    pops = wasted = steps = 0
-
-    delete = jax.jit(
-        lambda s, k: O.delete_min(s, m, schedule=schedule, active=m, rng=k,
-                                  npods=2)
-    )
-    insert = jax.jit(O.insert)
-
-    while int(st.total_size) > 0 and steps < 10_000:
-        key, sub = jax.random.split(key)
-        res = delete(st, sub)
-        st = res.state
-        got_k = np.asarray(res.keys)[: int(res.n_out)]
-        got_v = np.asarray(res.vals)[: int(res.n_out)]
-        new_k, new_v = [], []
-        for d, u in zip(got_k.tolist(), got_v.tolist()):
-            pops += 1
-            if d > dist[u]:
-                wasted += 1  # stale entry (priority inversion cost)
-                continue
-            for v, wt in adj.get(u, []):
-                nd = d + wt
-                if nd < dist[v]:
-                    dist[v] = nd
-                    new_k.append(nd)
-                    new_v.append(v)
-        if new_k:
-            pad = (-len(new_k)) % m
-            kb = jnp.asarray(new_k + [INF_KEY] * pad, jnp.int32)
-            vb = jnp.asarray(new_v + [0] * pad, jnp.int32)
-            st, _ = insert(st, kb, vb)
-        steps += 1
-    return dist, pops, wasted, steps
+from repro.workloads import (
+    bellman_ford,
+    default_pq,
+    random_graph,
+    run_sssp,
+    run_sssp_smartpq,
+)
 
 
 def main():
-    rows, cols, w, n = random_graph()
-    ref = bellman_ford_ref(rows, cols, w, n)
-    print(f"graph: {n} vertices, {len(rows)} edges")
-    for name, sched in (("exact/Nuddle(HIER)", Schedule.HIER),
-                        ("relaxed/SprayList", Schedule.SPRAY_HERLIHY)):
-        dist, pops, wasted, steps = sssp_pq(rows, cols, w, n, sched)
-        ok = np.array_equal(dist, ref)
-        print(f"{name:22s} correct={ok} steps={steps} pops={pops} "
-              f"wasted={wasted} ({100.0 * wasted / max(pops, 1):.1f}% overhead)")
+    g = random_graph(n=512, seed=0)
+    ref = bellman_ford(g)
+    print(f"graph: {g.n} vertices, {g.num_edges} edges")
+    for name, sched in (
+        ("exact/Nuddle(HIER)", Schedule.HIER),
+        ("relaxed/SprayList", Schedule.SPRAY_HERLIHY),
+        ("relaxed/MultiQueue", Schedule.MULTIQ),
+    ):
+        r = run_sssp(g, sched, m=32, seed=1)
+        ok = np.array_equal(r.dist, ref)
+        print(f"{name:22s} correct={ok} steps={r.steps} pops={r.pops} "
+              f"wasted={r.wasted} "
+              f"({100.0 * r.wasted / max(r.pops, 1):.1f}% overhead)")
         assert ok, f"{name} produced wrong distances"
-    print("OK — both modes correct; relaxed mode pays wasted re-relaxations,"
-          " exact mode pays collectives: the SmartPQ trade-off.")
+
+    pq = default_pq(head_width=256)
+    r, _ = run_sssp_smartpq(g, pq, m=16, seed=1)
+    ok = np.array_equal(r.dist, ref)
+    print(f"{'adaptive/SmartPQ':22s} correct={ok} steps={r.steps} "
+          f"pops={r.pops} wasted={r.wasted} "
+          f"modes={sorted(set(r.modes.tolist()))} "
+          f"transitions={r.transitions}")
+    assert ok, "adaptive SmartPQ produced wrong distances"
+    print("OK — every mode converges to Bellman-Ford; relaxed modes pay "
+          "wasted re-relaxations, exact modes pay collectives: the SmartPQ "
+          "trade-off.")
 
 
 if __name__ == "__main__":

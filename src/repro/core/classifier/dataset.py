@@ -4,6 +4,13 @@ The paper sweeps 5525 training workloads and 10780 random test workloads.
 Same scale here: a structured grid for training (so the tree sees the regime
 boundaries) and uniform-random tuples for testing (so accuracy is measured
 off-grid, like the paper's random test set).
+
+Beyond the grid, `examples_from_trace` converts any `repro.workloads`
+operation trace (recorded SSSP/DES op logs, phased/adversarial generator
+streams) into labeled examples, and `make_mixed_training_set` folds them
+into the grid — so the tree can be trained on the correlated feature paths
+real applications walk, not just independent grid points
+(`benchmarks/classifier_eval.py` reports accuracy on both distributions).
 """
 
 from __future__ import annotations
@@ -42,6 +49,94 @@ def make_training_set(
                     feats.append(featurize(d, z, k, p))
                     labels.append(best_mode(w, hw, geom))
     return np.stack(feats), np.asarray(labels, np.int32)
+
+
+def examples_from_trace(
+    trace, window: int = 8, hw=TPU_V5E, geom: MeshGeom = MeshGeom()
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Labeled classifier examples from a recorded/generated op trace.
+
+    Walks the trace in decision-interval-sized windows, deriving the
+    Table-1 feature tuple the on-device featurizer would see — active
+    clients from the trace, queue size from the running insert/delete
+    balance (clamped at empty, like the real queue), per-window insert
+    fraction and key spread — and labels each window with the cost model's
+    `best_mode`.  This is how application-shaped distributions (bursty
+    phases, drifting mixes, SSSP/DES op logs) enter the training set: same
+    analytic ground truth as the grid, feature vectors from real streams.
+    """
+    from repro.core.pqueue.ops import OP_DELETE_MIN, OP_INSERT
+    from repro.core.pqueue.state import INF_KEY
+
+    ops, keys, nc = trace.ops, trace.keys, trace.num_clients
+    K = ops.shape[0]
+    feats, labels = [], []
+    # recorded traces carry their driver's pre-fill; it is the standing
+    # backlog every window's Size feature rides on
+    size = int(np.sum(trace.init_keys < INF_KEY)) if trace.init_keys.size \
+        else 0
+    for lo in range(0, K, window):
+        hi = min(lo + window, K)
+        o, k = ops[lo:hi], keys[lo:hi]
+        ins = (o == OP_INSERT) & (k < INF_KEY)
+        n_ins = int(np.sum(ins))
+        n_del = int(np.sum(o == OP_DELETE_MIN))
+        size = max(size + n_ins - n_del, 0)
+        frac = n_ins / max(n_ins + n_del, 1)
+        ik = k[ins]
+        key_range = int(ik.max()) - int(ik.min()) + 1 if ik.size else 1
+        d = max(int(round(float(np.mean(nc[lo:hi])))), 1)
+        w = Workload(d, max(size, 1), max(key_range, 1), frac)
+        feats.append(featurize(d, max(size, 1), max(key_range, 1), frac))
+        labels.append(best_mode(w, hw, geom))
+    return np.stack(feats), np.asarray(labels, np.int32)
+
+
+def _standard_traces(seeds: Tuple[int, ...]):
+    """The generator slice of `repro.workloads` (host-synthesized phased /
+    adversarial streams — no driver execution, so building the training
+    set stays cheap).  Imported lazily: workloads sits above the classifier
+    in the layering."""
+    from repro.workloads import traces as T
+
+    for seed in seeds:
+        yield T.phase_flip_trace(seed=seed)
+        yield T.size_ramp_trace(seed=seed)
+        yield T.mix_drift_trace(seed=seed)
+        yield T.bursty_des_trace(seed=seed)
+
+
+def make_trace_training_set(
+    seeds: Tuple[int, ...] = (0, 1, 2, 3, 4, 5), window: int = 4,
+    hw=TPU_V5E, geom: MeshGeom = MeshGeom(),
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Application-shaped examples from the standard workload generators."""
+    xs, ys = [], []
+    for trace in _standard_traces(seeds):
+        X, y = examples_from_trace(trace, window=window, hw=hw, geom=geom)
+        xs.append(X)
+        ys.append(y)
+    return np.concatenate(xs), np.concatenate(ys)
+
+
+def make_trace_test_set(
+    seeds: Tuple[int, ...] = (101, 102, 103), window: int = 4,
+    hw=TPU_V5E, geom: MeshGeom = MeshGeom(),
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Held-out trace examples (disjoint generator seeds) — the
+    application-distribution analogue of `make_test_set`."""
+    return make_trace_training_set(seeds=seeds, window=window, hw=hw,
+                                   geom=geom)
+
+
+def make_mixed_training_set(
+    hw=TPU_V5E, geom: MeshGeom = MeshGeom(),
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Analytic grid + trace-derived examples: the regime boundaries of
+    the grid plus the correlated feature paths real applications walk."""
+    Xg, yg = make_training_set(hw=hw, geom=geom)
+    Xt, yt = make_trace_training_set(hw=hw, geom=geom)
+    return np.concatenate([Xg, Xt]), np.concatenate([yg, yt])
 
 
 def make_test_set(

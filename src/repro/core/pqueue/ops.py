@@ -36,6 +36,12 @@ from repro.core.pqueue.state import INF_KEY, PQState
 
 OP_INSERT = 0
 OP_DELETE_MIN = 1
+# Padding sentinel for op batches of non-uniform width (trace lanes beyond
+# the step's active client count).  Every consumer tests ops by equality
+# against OP_INSERT / OP_DELETE_MIN, so a NOP lane is inert everywhere:
+# excluded from insert masks, delete counts, AND the workload statistics
+# SmartPQ's decision features are derived from.
+OP_NOP = 2
 
 _INT32_MIN = jnp.iinfo(jnp.int32).min
 

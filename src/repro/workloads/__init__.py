@@ -1,0 +1,57 @@
+"""repro.workloads — on-device application drivers for the adaptive PQ.
+
+The paper motivates concurrent priority queues with graph search and
+discrete event simulation (§1); this package supplies those applications
+as first-class workload drivers plus a trace record/replay pipeline:
+
+  * `graphs` / `sssp` — CSR random graphs, the Bellman-Ford oracle, and
+    the batched wavefront-Dijkstra engine (fixed-schedule and adaptive
+    SmartPQ forms) with an empirical wasted-relaxation counter;
+  * `des` — the hold-model churn driver (state-dependent keys, its own
+    fused scan) and the heapq oracle; the bursty M/M/1 arrival variant
+    lives in `traces` as a pregenerated stream;
+  * `traces` — the `Trace` npz interchange format, `replay` through
+    `SmartPQ.run_window`, the phased/adversarial generators, and the
+    paper's Table 2/3 phase schedules (single source of truth for
+    `benchmarks/fig10_dynamic.py` and the tests);
+  * `registry` — name → driver enumeration for benchmarks and tests.
+"""
+
+from repro.workloads.graphs import Graph, bellman_ford, random_graph
+from repro.workloads.sssp import (
+    SSSPResult,
+    make_smartpq_sssp_engine,
+    make_sssp_engine,
+    run_sssp,
+    run_sssp_smartpq,
+)
+from repro.workloads.des import (
+    DESResult,
+    hold_model_oracle,
+    make_hold_engine,
+    run_hold_model,
+)
+from repro.workloads.traces import (
+    Trace,
+    bursty_des_trace,
+    load_trace,
+    mix_drift_trace,
+    phase_flip_trace,
+    phased_trace,
+    prefill,
+    replay,
+    save_trace,
+    size_ramp_trace,
+)
+from repro.workloads.registry import WORKLOADS, WorkloadSpec, default_pq
+
+__all__ = [
+    "Graph", "bellman_ford", "random_graph",
+    "SSSPResult", "make_smartpq_sssp_engine", "make_sssp_engine",
+    "run_sssp", "run_sssp_smartpq",
+    "DESResult", "hold_model_oracle", "make_hold_engine", "run_hold_model",
+    "Trace", "bursty_des_trace", "load_trace", "mix_drift_trace",
+    "phase_flip_trace", "phased_trace", "prefill", "replay", "save_trace",
+    "size_ramp_trace",
+    "WORKLOADS", "WorkloadSpec", "default_pq",
+]

@@ -1,0 +1,181 @@
+"""Discrete-event-simulation drivers over the adaptive PQ.
+
+The classic **hold model** (Vaucher & Duval's PQ benchmark, and the DES
+workload used to evaluate MultiQueues): each of B logical servers holds its
+current event for a random time and reschedules it — pop the B most
+imminent events, insert B future ones at ``popped_time + hold``.  The
+insert keys depend on the *popped* keys, so the stream cannot be
+pregenerated: the event loop is its own donated `lax.scan` whose body is
+`SmartPQ.step` (the state-dependent-key sibling of `run_window`, same
+fusion, same on-device decisions), pipelined by one step — step t inserts
+the events step t-1 popped.
+
+The **bursty M/M/1 variant** (`traces.bursty_des_trace`) pregenerates an
+absolute-time arrival process instead, so its whole event loop runs inside
+a single `run_window` replay — arrival bursts grow the queue, service
+phases drain it, and the adaptive engine flips modes mid-window.
+
+Exactness probe: with an exact schedule pinned, the per-step popped key
+sequence is bit-equal to `hold_model_oracle` (a host `heapq` simulation of
+the same linearization) — the DES analogue of SSSP's Bellman-Ford check.
+"""
+
+from __future__ import annotations
+
+import functools
+import heapq
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.pqueue.ops import OP_DELETE_MIN, OP_INSERT, OP_NOP
+from repro.core.pqueue.state import INF_KEY, make_state
+
+
+class DESResult(NamedTuple):
+    popped: np.ndarray  # (K, B) per-step event times, ascending, INF-padded
+    n_out: np.ndarray  # (K,)
+    modes: np.ndarray  # (K,) on-device mode trace
+    transitions: int
+    events: int  # total events served
+    final_size: int  # events still queued after the horizon
+    trace: Optional[object] = None  # traces.Trace when record=True
+
+
+def sample_holds(
+    K: int, B: int, mean_hold: int = 64, seed: int = 0
+) -> np.ndarray:
+    """Quantized-exponential hold times >= 1 (the hold-model's service
+    distribution), shared by the device driver and the heapq oracle."""
+    rng = np.random.default_rng(seed)
+    return np.maximum(
+        rng.exponential(mean_hold, (K, B)).astype(np.int32), 1
+    )
+
+
+def initial_events(
+    n_init: int, mean_hold: int = 64, seed: int = 0
+) -> np.ndarray:
+    rng = np.random.default_rng(seed + 1)
+    return rng.integers(0, max(mean_hold, 2), n_init).astype(np.int32)
+
+
+def make_hold_engine(
+    pq,  # SmartPQ (pin mode_schedules to one exact schedule for the oracle)
+    B: int = 32,
+    K: int = 64,
+    num_clients: int | None = None,
+):
+    """Hold-model engine: K steps fused into one donated scan.
+
+    Step t: insert the events step t-1 popped, rescheduled at
+    ``popped + holds[t]``; pop the B most imminent.  Step 0 pops from the
+    ``n_init`` (default 4B) pre-filled initial events, so a standing
+    backlog of ``n_init - B`` churns through the queue.  Total batch width
+    is 2B (B insert lanes + B delete lanes), so the head tier needs
+    H >= 2B.  The returned ``run(seed, ...)`` closure reuses ONE jitted
+    scan program, so benchmarks can time warm runs."""
+    if num_clients is None:
+        num_clients = B
+    lane = jnp.arange(B, dtype=jnp.int32)
+    del_ops = jnp.full((B,), OP_DELETE_MIN, jnp.int32)
+    del_keys = jnp.full((B,), INF_KEY, jnp.int32)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def run_all(carry, xs):
+        def body(c, x):
+            pqc, prev_k, prev_n = c
+            holds_t, r = x
+            valid = lane < prev_n
+            ins_k = jnp.where(
+                valid, jnp.where(valid, prev_k, 0) + holds_t, INF_KEY
+            )
+            ops = jnp.concatenate(
+                [jnp.where(valid, OP_INSERT, OP_NOP), del_ops]
+            )
+            keys = jnp.concatenate([ins_k, del_keys])
+            vals = jnp.concatenate([lane, jnp.zeros((B,), jnp.int32)])
+            pqc, res = pq.step(pqc, ops, keys, vals, r, num_clients)
+            n = jnp.minimum(res.n_out, B)
+            return (pqc, res.keys[:B], n), (
+                res.keys[:B], n, pqc.stats.mode, ops, keys, vals
+            )
+
+        return jax.lax.scan(body, carry, xs)
+
+    def run(seed: int = 0, mean_hold: int = 64, n_init: int | None = None,
+            record: bool = False) -> DESResult:
+        if n_init is None:
+            n_init = 4 * B
+        from repro.workloads.traces import prefill
+
+        holds = jnp.asarray(sample_holds(K, B, mean_hold, seed))
+        init_k = initial_events(n_init, mean_hold, seed)
+        st = make_state(pq.config.num_shards, pq.config.capacity,
+                        head_width=pq.config.head_width)
+        st = prefill(st, init_k, np.arange(n_init, dtype=np.int32))
+        pqc = pq.init()._replace(state=st)
+        carry = (pqc, jnp.full((B,), INF_KEY, jnp.int32), jnp.int32(0))
+        rngs = jax.random.split(jax.random.key(seed), K)
+        carry, (pk, n_out, modes, ops_log, keys_log, vals_log) = run_all(
+            carry, (holds, rngs)
+        )
+        trace = None
+        if record:
+            from repro.workloads.traces import Trace
+
+            trace = Trace(
+                ops=np.asarray(ops_log), keys=np.asarray(keys_log),
+                vals=np.asarray(vals_log),
+                num_clients=np.full((K,), num_clients, np.int32), seed=seed,
+                init_keys=init_k,
+                init_vals=np.arange(n_init, dtype=np.int32),
+            )
+        return DESResult(
+            popped=np.asarray(pk), n_out=np.asarray(n_out),
+            modes=np.asarray(modes),
+            transitions=int(carry[0].stats.transitions),
+            events=int(np.sum(np.asarray(n_out))),
+            final_size=int(carry[0].state.total_size), trace=trace,
+        )
+
+    return run
+
+
+def run_hold_model(
+    pq,
+    B: int = 32,
+    K: int = 64,
+    mean_hold: int = 64,
+    seed: int = 0,
+    num_clients: int | None = None,
+    n_init: int | None = None,
+    record: bool = False,
+) -> DESResult:
+    """One-shot hold-model run (see `make_hold_engine`)."""
+    run = make_hold_engine(pq, B=B, K=K, num_clients=num_clients)
+    return run(seed=seed, mean_hold=mean_hold, n_init=n_init, record=record)
+
+
+def hold_model_oracle(
+    B: int, K: int, mean_hold: int = 64, seed: int = 0,
+    n_init: int | None = None,
+) -> list:
+    """Host `heapq` reference of the same linearization (inserts before
+    deletes within a step; holds indexed by ascending pop order — exactly
+    the device driver's lane order).  Returns per-step ascending pop
+    lists."""
+    if n_init is None:
+        n_init = 4 * B
+    holds = sample_holds(K, B, mean_hold, seed)
+    heap = initial_events(n_init, mean_hold, seed).tolist()
+    heapq.heapify(heap)
+    out, prev = [], []
+    for t in range(K):
+        for i, k in enumerate(prev):
+            heapq.heappush(heap, int(k) + int(holds[t, i]))
+        prev = [heapq.heappop(heap) for _ in range(min(B, len(heap)))]
+        out.append(prev)
+    return out

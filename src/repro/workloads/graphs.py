@@ -1,0 +1,100 @@
+"""Graph containers for the SSSP workload driver.
+
+Two views of the same random graph:
+
+  * a host CSR triple ``(indptr, indices, weights)`` — the reference form
+    the Bellman-Ford oracle iterates over;
+  * a device **padded adjacency** ``(n, deg_cap)`` pair of neighbor /
+    weight arrays (sentinel neighbor id ``n`` marks padding) — the
+    static-shape form the `lax.scan` relaxation step gathers from: every
+    popped wavefront vertex contributes exactly ``deg_cap`` relaxation
+    lanes, masked lanes carry INF keys, so the per-step op batch has a
+    fixed width of ``m * deg_cap`` insert lanes.
+
+Degree is capped at construction (``deg_cap``), not at conversion, so the
+oracle and the device driver always see the identical edge multiset.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.pqueue.state import INF_KEY
+
+
+class Graph(NamedTuple):
+    """CSR on the host + padded adjacency on the device."""
+
+    n: int
+    deg_cap: int
+    # host CSR (numpy) — the Bellman-Ford reference iterates these
+    indptr: np.ndarray  # (n + 1,) int32
+    indices: np.ndarray  # (nnz,) int32
+    weights: np.ndarray  # (nnz,) int32
+    # device padded adjacency — the scan body gathers these
+    nbr: jnp.ndarray  # (n, deg_cap) int32, sentinel n beyond degree
+    wgt: jnp.ndarray  # (n, deg_cap) int32, 0 beyond degree
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+
+def random_graph(
+    n: int = 512, avg_deg: int = 4, deg_cap: int = 8, max_weight: int = 64,
+    seed: int = 0,
+) -> Graph:
+    """Poisson-degree random digraph with positive int weights.
+
+    Out-degree is clipped to ``deg_cap`` so the padded adjacency is lossless
+    (the oracle and the driver relax the same edges)."""
+    rng = np.random.default_rng(seed)
+    indptr = np.zeros(n + 1, np.int32)
+    indices, weights = [], []
+    for u in range(n):
+        deg = min(int(rng.poisson(avg_deg)) + 1, deg_cap, n - 1)
+        vs = rng.choice(n, size=deg, replace=False)
+        vs = vs[vs != u][:deg_cap]
+        for v in vs:
+            indices.append(int(v))
+            weights.append(int(rng.integers(1, max_weight)))
+        indptr[u + 1] = len(indices)
+    indices = np.asarray(indices, np.int32)
+    weights = np.asarray(weights, np.int32)
+
+    nbr = np.full((n, deg_cap), n, np.int32)  # sentinel n == "no edge"
+    wgt = np.zeros((n, deg_cap), np.int32)
+    for u in range(n):
+        lo, hi = int(indptr[u]), int(indptr[u + 1])
+        nbr[u, : hi - lo] = indices[lo:hi]
+        wgt[u, : hi - lo] = weights[lo:hi]
+    return Graph(
+        n=n, deg_cap=deg_cap, indptr=indptr, indices=indices,
+        weights=weights, nbr=jnp.asarray(nbr), wgt=jnp.asarray(wgt),
+    )
+
+
+def bellman_ford(graph: Graph, src: int = 0) -> np.ndarray:
+    """Exact distances — the SSSP oracle.  Returns (n,) int32 with
+    unreachable vertices at INF_KEY (matching the device driver's
+    sentinel), computed in int64 so relaxations cannot overflow."""
+    n = graph.n
+    dist = np.full(n, np.int64(INF_KEY))
+    dist[src] = 0
+    u_of_edge = np.repeat(
+        np.arange(n, dtype=np.int64), np.diff(graph.indptr).astype(np.int64)
+    )
+    v_of_edge = graph.indices.astype(np.int64)
+    w_of_edge = graph.weights.astype(np.int64)
+    for _ in range(n):
+        cand = dist[u_of_edge] + w_of_edge
+        cand[dist[u_of_edge] >= INF_KEY] = INF_KEY
+        nd = dist.copy()
+        np.minimum.at(nd, v_of_edge, cand)
+        if np.array_equal(nd, dist):
+            break
+        dist = nd
+    return dist.astype(np.int32)

@@ -1,0 +1,308 @@
+"""Batched wavefront-Dijkstra / Δ-stepping SSSP over the concurrent PQ.
+
+The paper motivates concurrent priority queues with exactly this loop (§1):
+each step deleteMins an m-wide wavefront of tentative (distance, vertex)
+pairs, relaxes the popped vertices' out-edges, and inserts improved
+tentative distances back.  Everything runs on-device inside a `lax.scan`:
+
+  * the wavefront pop is a schedule deleteMin (`SCHEDULE_FNS` for a fixed
+    schedule, or the full adaptive `SmartPQ.step` for the SmartPQ driver);
+  * edge relaxation gathers the padded adjacency rows of the popped
+    vertices — a static ``(m, deg_cap)`` block — and folds the candidate
+    distances into the dense distance array with ONE scatter-min
+    (`dist.at[v].min(nd)`), the bulk-synchronous segment-min;
+  * candidates that strictly improved re-enter the queue via `ops.insert`
+    (masked lanes carry INF keys and cost nothing — the any-live-insert
+    guard skips the whole pipeline when nothing improved).
+
+Wasted relaxations: a popped pair whose distance exceeds the current
+tentative distance is *stale* — the priority-inversion cost relaxed
+schedules pay, and the quantity the classifier cost model's ``relax_alpha``
+models analytically.  The driver counts them empirically (``wasted`` /
+``pops``), which is what makes SSSP a measurement instrument and not just
+a demo: exact schedules must show zero waste beyond same-batch collisions,
+relaxed schedules trade waste for collective-free pops.
+
+Correctness does not depend on the schedule: the loop is label-correcting
+(like Δ-stepping), so ANY schedule that returns real queue elements
+converges to the exact distances once the queue drains — exact schedules
+just get there with fewer wasted pops.  The oracle is
+`graphs.bellman_ford`; the exact-schedule distances are bit-equal to it.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.pqueue import ops as O
+from repro.core.pqueue import schedules as SCH
+from repro.core.pqueue.ops import OP_DELETE_MIN, OP_INSERT, OP_NOP
+from repro.core.pqueue.schedules import Schedule
+from repro.core.pqueue.state import DEFAULT_HEAD_WIDTH, INF_KEY, make_state
+from repro.workloads.graphs import Graph
+
+
+class SSSPResult(NamedTuple):
+    dist: np.ndarray  # (n,) int32 tentative distances (exact on convergence)
+    pops: int  # total deleteMin pops served
+    wasted: int  # stale pops (priority-inversion cost, empirical)
+    improved: int  # relaxations that strictly improved a distance
+    steps: int  # scan steps executed
+    converged: bool  # queue drained before the step budget
+    modes: Optional[np.ndarray] = None  # (steps,) SmartPQ mode trace
+    transitions: int = 0
+
+
+def _relax(dist, pop_k, pop_v, n_out, nbr, wgt):
+    """One bulk relaxation: fold the popped wavefront's out-edges into
+    `dist` (scatter-min) and emit the strictly-improving candidates as an
+    INF-masked insert batch of static width m * deg_cap.
+
+    Returns (dist, ins_keys, ins_vals, n_wasted, n_improved)."""
+    n = dist.shape[0]
+    m = pop_k.shape[0]
+    lane = jnp.arange(m, dtype=jnp.int32)
+    valid = lane < n_out
+    u = jnp.clip(pop_v, 0, n - 1)
+    fresh = valid & (pop_k <= dist[u])  # stale pops carry d > dist[u]
+    n_wasted = jnp.sum(valid & ~fresh).astype(jnp.int32)
+
+    vs = nbr[u]  # (m, deg_cap), sentinel n beyond degree
+    ws = wgt[u]
+    edge_ok = fresh[:, None] & (vs < n)
+    d_src = jnp.where(fresh, pop_k, 0)  # keep the add overflow-free
+    nd = jnp.where(edge_ok, d_src[:, None] + ws, INF_KEY)
+    v_safe = jnp.where(edge_ok, vs, 0)
+    improved = edge_ok & (nd < dist[v_safe])
+    n_improved = jnp.sum(improved).astype(jnp.int32)
+
+    # segment-min: out-of-range sentinel targets drop out of the scatter
+    tgt = jnp.where(edge_ok, vs, n)
+    dist = dist.at[tgt.ravel()].min(nd.ravel(), mode="drop")
+
+    ins_keys = jnp.where(improved, nd, INF_KEY).ravel()
+    ins_vals = v_safe.ravel()
+    return dist, ins_keys, ins_vals, n_wasted, n_improved
+
+
+def _init_dist_and_state(graph: Graph, num_shards, capacity, head_width, src):
+    from repro.workloads.traces import prefill
+
+    dist = jnp.full((graph.n,), INF_KEY, jnp.int32).at[src].set(0)
+    st = make_state(num_shards, capacity, head_width=head_width)
+    st = prefill(st, np.asarray([0], np.int32), np.asarray([src], np.int32))
+    return dist, st
+
+
+def make_sssp_engine(
+    graph: Graph,
+    schedule: Schedule,
+    m: int = 32,
+    num_shards: int = 8,
+    capacity: int = 4096,
+    head_width: int | None = None,
+    npods: int = 2,
+    chunk: int = 8,
+):
+    """Fixed-schedule SSSP engine: chunks of `chunk` scan steps run
+    on-device; the host only checks queue emptiness between chunks.  The
+    returned ``run(src, seed, max_steps)`` closure reuses ONE jitted chunk
+    program across calls, so benchmarks can time warm runs."""
+    fn = SCH.SCHEDULE_FNS[schedule]
+    nbr, wgt = graph.nbr, graph.wgt
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def run_chunk(carry, rngs):
+        def body(c, r):
+            state, dist, pops, wasted, improved = c
+            res = fn(state, m, jnp.int32(m), r, npods)
+            dist, ins_k, ins_v, w, imp = _relax(
+                dist, res.keys, res.vals, res.n_out, nbr, wgt
+            )
+            state, _ = O.insert(res.state, ins_k, ins_v)
+            return (state, dist, pops + res.n_out, wasted + w,
+                    improved + imp), None
+
+        c2, _ = jax.lax.scan(body, carry, rngs)
+        return c2
+
+    def run(src: int = 0, seed: int = 0, max_steps: int = 4096) -> SSSPResult:
+        dist, st = _init_dist_and_state(
+            graph, num_shards, capacity, head_width, src
+        )
+        # distinct zero buffers: the donated carry may not alias leaves
+        carry = (st, dist, jnp.zeros((), jnp.int32),
+                 jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+        key = jax.random.key(seed)
+        steps = 0
+        while steps < max_steps:
+            key, sub = jax.random.split(key)
+            carry = run_chunk(carry, jax.random.split(sub, chunk))
+            steps += chunk
+            if int(carry[0].total_size) == 0:
+                break
+        st, dist, pops, wasted, improved = carry
+        return SSSPResult(
+            dist=np.asarray(dist), pops=int(pops), wasted=int(wasted),
+            improved=int(improved), steps=steps,
+            converged=int(st.total_size) == 0,
+        )
+
+    return run
+
+
+def run_sssp(
+    graph: Graph,
+    schedule: Schedule,
+    m: int = 32,
+    num_shards: int = 8,
+    capacity: int = 4096,
+    head_width: int | None = None,
+    npods: int = 2,
+    src: int = 0,
+    seed: int = 0,
+    chunk: int = 8,
+    max_steps: int = 4096,
+) -> SSSPResult:
+    """One-shot fixed-schedule SSSP (see `make_sssp_engine`)."""
+    run = make_sssp_engine(
+        graph, schedule, m=m, num_shards=num_shards, capacity=capacity,
+        head_width=head_width, npods=npods, chunk=chunk,
+    )
+    return run(src=src, seed=seed, max_steps=max_steps)
+
+
+def make_smartpq_sssp_engine(
+    graph: Graph,
+    pq,  # SmartPQ — its config fixes shards/capacity/modes
+    m: int = 16,
+    chunk: int = 8,
+    num_clients: int | None = None,
+):
+    """Adaptive SSSP engine through `SmartPQ.step` — the full decision
+    stack (featurization, packed-tree inference, N-mode switch,
+    elimination) runs in the scan body, fed by the application's own op
+    stream.
+
+    The wavefront is pipelined by one step: step t inserts the improving
+    candidates step t-1 relaxed, then pops the next m-wide wavefront — one
+    mixed (insert, deleteMin) batch per step, which is exactly the op-log
+    shape the trace recorder captures.  Batch width B = m * deg_cap + m;
+    the SmartPQ head tier must satisfy H >= B (H-sizing rule in state.py).
+
+    ``run(src, seed, max_steps, record)`` returns (SSSPResult, trace)
+    where trace is a `traces.Trace` of the recorded (ops, keys, vals)
+    windows when record=True, else None."""
+    D = graph.deg_cap
+    b_ins = m * D
+    B = b_ins + m
+    H = min(pq.config.head_width or DEFAULT_HEAD_WIDTH, pq.config.capacity)
+    if B > H:
+        raise ValueError(
+            f"adaptive SSSP batch width {B} (m={m} * deg_cap={D} + m) "
+            f"exceeds the hot head tier H={H} (H-sizing rule in state.py)"
+        )
+    if num_clients is None:
+        num_clients = m
+    nbr, wgt = graph.nbr, graph.wgt
+    del_ops = jnp.full((m,), OP_DELETE_MIN, jnp.int32)
+    del_keys = jnp.full((m,), INF_KEY, jnp.int32)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def run_chunk(carry, rngs):
+        def body(c, r):
+            pqc, dist, pend_k, pend_v, pops, wasted, improved = c
+            ins_ops = jnp.where(pend_k < INF_KEY, OP_INSERT, OP_NOP)
+            ops = jnp.concatenate([ins_ops, del_ops])
+            keys = jnp.concatenate([pend_k, del_keys])
+            vals = jnp.concatenate([pend_v, jnp.zeros((m,), jnp.int32)])
+            pqc, res = pq.step(pqc, ops, keys, vals, r, num_clients)
+            dist, ins_k, ins_v, w, imp = _relax(
+                dist, res.keys[:m], res.vals[:m], res.n_out, nbr, wgt
+            )
+            c2 = (pqc, dist, ins_k, ins_v, pops + res.n_out, wasted + w,
+                  improved + imp)
+            return c2, (ops, keys, vals, pqc.stats.mode)
+
+        return jax.lax.scan(body, carry, rngs)
+
+    def run(src: int = 0, seed: int = 0, max_steps: int = 4096,
+            record: bool = False):
+        dist, st = _init_dist_and_state(
+            graph, pq.config.num_shards, pq.config.capacity,
+            pq.config.head_width, src,
+        )
+        pqc = pq.init()._replace(state=st)
+        pend_k = jnp.full((b_ins,), INF_KEY, jnp.int32)
+        pend_v = jnp.zeros((b_ins,), jnp.int32)
+        # distinct zero buffers: the donated carry may not alias leaves
+        carry = (pqc, dist, pend_k, pend_v, jnp.zeros((), jnp.int32),
+                 jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+        key = jax.random.key(seed)
+        steps = 0
+        log_ops, log_keys, log_vals, log_modes = [], [], [], []
+        while steps < max_steps:
+            key, sub = jax.random.split(key)
+            carry, (o, k, v, mo) = run_chunk(
+                carry, jax.random.split(sub, chunk)
+            )
+            steps += chunk
+            log_modes.append(np.asarray(mo))
+            if record:
+                log_ops.append(np.asarray(o))
+                log_keys.append(np.asarray(k))
+                log_vals.append(np.asarray(v))
+            pqc, pend_k = carry[0], carry[2]
+            pending = int(jnp.sum(pend_k < INF_KEY))
+            if int(pqc.state.total_size) == 0 and pending == 0:
+                break
+        pqc, dist = carry[0], carry[1]
+        # the pipelined lag means a drained queue with pending candidates
+        # is NOT converged: their out-edges were never relaxed
+        pending = int(jnp.sum(carry[2] < INF_KEY))
+        result = SSSPResult(
+            dist=np.asarray(dist), pops=int(carry[4]), wasted=int(carry[5]),
+            improved=int(carry[6]), steps=steps,
+            converged=int(pqc.state.total_size) == 0 and pending == 0,
+            modes=np.concatenate(log_modes),
+            transitions=int(pqc.stats.transitions),
+        )
+        trace = None
+        if record:
+            from repro.workloads.traces import Trace
+
+            trace = Trace(
+                ops=np.concatenate(log_ops),
+                keys=np.concatenate(log_keys),
+                vals=np.concatenate(log_vals),
+                num_clients=np.full((steps,), num_clients, np.int32),
+                seed=seed,
+                init_keys=np.asarray([0], np.int32),
+                init_vals=np.asarray([src], np.int32),
+            )
+        return result, trace
+
+    return run
+
+
+def run_sssp_smartpq(
+    graph: Graph,
+    pq,
+    m: int = 16,
+    src: int = 0,
+    seed: int = 0,
+    chunk: int = 8,
+    max_steps: int = 4096,
+    num_clients: int | None = None,
+    record: bool = False,
+):
+    """One-shot adaptive SSSP (see `make_smartpq_sssp_engine`)."""
+    run = make_smartpq_sssp_engine(
+        graph, pq, m=m, chunk=chunk, num_clients=num_clients
+    )
+    return run(src=src, seed=seed, max_steps=max_steps, record=record)

@@ -1,0 +1,311 @@
+"""Operation-trace record/replay — the workload pipeline's interchange form.
+
+A `Trace` is an application-shaped op stream captured as dense ``(K, B)``
+windows: per-step op codes (`OP_INSERT` / `OP_DELETE_MIN` / `OP_NOP` lane
+padding), insert keys/vals (INF-masked), the per-step active-client count
+(the paper's #Threads feature), and the rng seed the replay derives its
+per-step keys from.  The format is deliberately exactly what
+`SmartPQ.run_window` consumes, so
+
+    carry, res = replay(pq, trace)
+
+is ONE donated fused-window dispatch and is bit-reproducible: the same
+trace replayed twice (or saved to npz, reloaded, and replayed) produces
+identical delete outputs, identical mode traces, and an identical final
+carry.  Three trace sources feed the pipeline:
+
+  * **recorders** — the SSSP and DES drivers log the op batches their
+    event loops actually issued (`run_sssp_smartpq(record=True)`,
+    `run_hold_model(record=True)`);
+  * **phased generators** — insert-storm→delete-storm flips, size ramps,
+    mix drift, and the bursty M/M/1-style DES arrival process: the
+    time-varying contention of the paper's Figs. 10/11, in replayable form;
+  * **the paper's phase tables** — `TABLE2` / `TABLE3` (paper Tables 2/3)
+    live here as the single source of truth: `benchmarks/fig10_dynamic.py`
+    and the tests replay the SAME schedules via `phased_trace`.
+
+`classifier.dataset.examples_from_trace` converts any trace into labeled
+training examples, closing the loop: the decision tree can be trained on
+application-shaped feature distributions instead of only the analytic grid.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List, NamedTuple, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.pqueue import ops as O
+from repro.core.pqueue.ops import OP_DELETE_MIN, OP_INSERT, OP_NOP
+from repro.core.pqueue.state import INF_KEY
+
+
+@jax.jit
+def _prefill_jit(state, keys, vals):
+    st, _ = O.insert(state, keys, vals)
+    return st
+
+
+def prefill(state, keys, vals):
+    """One jitted bulk insert — every driver's pre-fill path.  (An eager
+    `ops.insert` dispatches the tiered pipeline op by op and costs ~1s at
+    C=4096 on XLA:CPU; jitted it is sub-millisecond.)"""
+    return _prefill_jit(
+        state, jnp.asarray(keys, jnp.int32), jnp.asarray(vals, jnp.int32)
+    )
+
+
+_EMPTY = np.zeros(0, np.int32)
+
+
+class Trace(NamedTuple):
+    """A replayable op stream in `run_window` form (host numpy arrays).
+
+    ``init_keys`` / ``init_vals`` capture elements the recording driver
+    pre-filled BEFORE its first step (DES initial events, the SSSP
+    source) — `replay` inserts them into the fresh carry so the replayed
+    queue sees the same starting state the driver did."""
+
+    ops: np.ndarray  # (K, B) int32 op codes (OP_NOP pads inactive lanes)
+    keys: np.ndarray  # (K, B) int32 insert keys, INF for non-insert lanes
+    vals: np.ndarray  # (K, B) int32 payloads
+    num_clients: np.ndarray  # (K,) int32 active clients per step
+    seed: int  # rng stream id: replay rngs = split(key(seed), K)
+    init_keys: np.ndarray = _EMPTY  # pre-fill before step 0
+    init_vals: np.ndarray = _EMPTY
+
+    @property
+    def num_steps(self) -> int:
+        return int(self.ops.shape[0])
+
+    @property
+    def width(self) -> int:
+        return int(self.ops.shape[1])
+
+
+def trace_rngs(trace: Trace) -> jax.Array:
+    """The (K,) per-step key array every replay of this trace uses."""
+    return jax.random.split(jax.random.key(trace.seed), trace.num_steps)
+
+
+def save_trace(path, trace: Trace) -> None:
+    """Persist to the small npz interchange format (int32 throughout)."""
+    np.savez_compressed(
+        path, ops=trace.ops.astype(np.int32),
+        keys=trace.keys.astype(np.int32), vals=trace.vals.astype(np.int32),
+        num_clients=trace.num_clients.astype(np.int32),
+        seed=np.int64(trace.seed),
+        init_keys=trace.init_keys.astype(np.int32),
+        init_vals=trace.init_vals.astype(np.int32),
+    )
+
+
+def load_trace(path) -> Trace:
+    with np.load(Path(path)) as z:
+        return Trace(
+            ops=z["ops"], keys=z["keys"], vals=z["vals"],
+            num_clients=z["num_clients"], seed=int(z["seed"]),
+            init_keys=z["init_keys"], init_vals=z["init_vals"],
+        )
+
+
+def replay(pq, trace: Trace, carry=None):
+    """Replay the whole trace through ONE donated `run_window` call.
+
+    `carry` defaults to a fresh `pq.init()` pre-filled with the trace's
+    ``init_keys`` (the recording driver's starting state); a caller-passed
+    carry is used as-is — and DONATED either way (its buffers are deleted;
+    thread the returned carry).  Returns (carry, WindowResult): per-step
+    delete outputs + the on-device mode trace, bit-identical across
+    replays of the same trace."""
+    if carry is None:
+        carry = pq.init()
+        if trace.init_keys.size:
+            carry = carry._replace(
+                state=prefill(carry.state, trace.init_keys, trace.init_vals)
+            )
+    return pq.jit_run_window(
+        carry, jnp.asarray(trace.ops), jnp.asarray(trace.keys),
+        jnp.asarray(trace.vals), trace_rngs(trace),
+        jnp.asarray(trace.num_clients),
+    )
+
+
+# ---------------------------------------------------------------------------
+# phased generators
+# ---------------------------------------------------------------------------
+
+# Paper Table 2 traces (time, size is emergent; we pin the driving
+# features).  Consumed by benchmarks/fig10_dynamic.py AND the replay tests —
+# one source of truth for the phase schedules.
+TABLE2: Dict[str, List[dict]] = {
+    "a_keyrange": [  # vary key range (50 threads, 75-25 mix)
+        dict(num_clients=50, key_range=100_000, insert_frac=0.75),
+        dict(num_clients=50, key_range=2_000, insert_frac=0.75),
+        dict(num_clients=50, key_range=1 << 20, insert_frac=0.75),
+        dict(num_clients=50, key_range=10_000, insert_frac=0.75),
+        dict(num_clients=50, key_range=50_000_000, insert_frac=0.75),
+    ],
+    "b_threads": [  # vary #threads (65-35 mix, range 20M)
+        dict(num_clients=57, key_range=20_000_000, insert_frac=0.65),
+        dict(num_clients=29, key_range=20_000_000, insert_frac=0.65),
+        dict(num_clients=15, key_range=20_000_000, insert_frac=0.65),
+        dict(num_clients=43, key_range=20_000_000, insert_frac=0.65),
+        dict(num_clients=15, key_range=20_000_000, insert_frac=0.65),
+    ],
+    "c_mix": [  # vary op mix (22 threads, range 5M)
+        dict(num_clients=22, key_range=5_000_000, insert_frac=0.5),
+        dict(num_clients=22, key_range=5_000_000, insert_frac=1.0),
+        dict(num_clients=22, key_range=5_000_000, insert_frac=0.3),
+        dict(num_clients=22, key_range=5_000_000, insert_frac=1.0),
+        dict(num_clients=22, key_range=5_000_000, insert_frac=0.0),
+    ],
+}
+
+# Paper Table 3: multiple features vary at once (subset of the 15 phases).
+TABLE3: List[dict] = [
+    dict(num_clients=57, key_range=10_000_000, insert_frac=0.5),
+    dict(num_clients=36, key_range=10_000_000, insert_frac=0.7),
+    dict(num_clients=36, key_range=20_000_000, insert_frac=0.5),
+    dict(num_clients=36, key_range=20_000_000, insert_frac=0.8),
+    dict(num_clients=50, key_range=20_000_000, insert_frac=0.8),
+    dict(num_clients=50, key_range=100_000_000, insert_frac=0.5),
+    dict(num_clients=57, key_range=100_000_000, insert_frac=0.5),
+    dict(num_clients=22, key_range=100_000_000, insert_frac=1.0),
+    dict(num_clients=22, key_range=100_000_000, insert_frac=0.5),
+    dict(num_clients=57, key_range=200_000_000, insert_frac=0.0),
+    dict(num_clients=57, key_range=200_000_000, insert_frac=1.0),
+    dict(num_clients=57, key_range=20_000_000, insert_frac=0.0),
+    dict(num_clients=29, key_range=20_000_000, insert_frac=0.8),
+    dict(num_clients=29, key_range=20_000_000, insert_frac=0.5),
+]
+
+
+def phased_trace(
+    phases: Sequence[dict],
+    steps_per_phase: int = 8,
+    width: int | None = None,
+    seed: int = 0,
+) -> Trace:
+    """Uniform-random op stream following a phase schedule.
+
+    Each phase dict pins (num_clients, key_range, insert_frac) for
+    `steps_per_phase` steps — the TABLE2/TABLE3 entries drop straight in.
+    Lane width is max(num_clients) across phases; steps with fewer active
+    clients pad the remaining lanes with OP_NOP (inert everywhere,
+    including the decision features)."""
+    B = width or max(int(p["num_clients"]) for p in phases)
+    rng = np.random.default_rng(seed)
+    K = len(phases) * steps_per_phase
+    ops = np.full((K, B), OP_NOP, np.int32)
+    keys = np.full((K, B), INF_KEY, np.int32)
+    vals = np.zeros((K, B), np.int32)
+    nc = np.zeros((K,), np.int32)
+    t = 0
+    for ph in phases:
+        d = min(int(ph["num_clients"]), B)
+        for _ in range(steps_per_phase):
+            is_ins = rng.random(d) < float(ph["insert_frac"])
+            ops[t, :d] = np.where(is_ins, OP_INSERT, OP_DELETE_MIN)
+            k = rng.integers(
+                0, max(int(ph["key_range"]), 1), d
+            ).astype(np.int64)
+            k = np.minimum(k, INF_KEY - 1).astype(np.int32)
+            keys[t, :d] = np.where(is_ins, k, INF_KEY)
+            vals[t, :d] = np.where(is_ins, k % 97, 0)
+            nc[t] = d  # the clients actually issuing ops this step
+            t += 1
+    return Trace(ops=ops, keys=keys, vals=vals, num_clients=nc, seed=seed)
+
+
+def phase_flip_trace(
+    B: int = 64, steps_per_phase: int = 12, n_flips: int = 4,
+    key_range: int = 1 << 14, seed: int = 0,
+) -> Trace:
+    """Adversarial insert-storm → delete-storm square wave: each flip
+    inverts the op mix edge-to-edge, the worst case for a sticky mode."""
+    phases = [
+        dict(num_clients=B, key_range=key_range,
+             insert_frac=0.95 if i % 2 == 0 else 0.05)
+        for i in range(n_flips)
+    ]
+    return phased_trace(phases, steps_per_phase=steps_per_phase, seed=seed)
+
+
+def size_ramp_trace(
+    B: int = 64, steps_per_phase: int = 10, key_range: int = 1 << 14,
+    seed: int = 0,
+) -> Trace:
+    """Queue-size ramp: insert-only growth, a mixed steady plateau, then a
+    delete-only drain — sweeps the Size feature across its whole range
+    while the mix stays piecewise-constant."""
+    phases = [
+        dict(num_clients=B, key_range=key_range, insert_frac=1.0),
+        dict(num_clients=B, key_range=key_range, insert_frac=1.0),
+        dict(num_clients=B, key_range=key_range, insert_frac=0.5),
+        dict(num_clients=B, key_range=key_range, insert_frac=0.0),
+        dict(num_clients=B, key_range=key_range, insert_frac=0.0),
+    ]
+    return phased_trace(phases, steps_per_phase=steps_per_phase, seed=seed)
+
+
+def mix_drift_trace(
+    B: int = 64, steps: int = 48, key_range: int = 1 << 14, seed: int = 0,
+) -> Trace:
+    """Gradual mix drift 0.9 → 0.1: no phase edges at all, so a classifier
+    trained only on piecewise-constant grids sees in-between mixtures."""
+    phases = [
+        dict(num_clients=B, key_range=key_range,
+             insert_frac=0.9 - 0.8 * t / max(steps - 1, 1))
+        for t in range(steps)
+    ]
+    return phased_trace(phases, steps_per_phase=1, seed=seed)
+
+
+# The canonical bursty M/M/1 phase profile (num_clients, arrival_frac,
+# steps) and its seconds-scale variant — shared by the registry, the
+# workloads_des benchmark, and the mode-transition acceptance test.
+BURSTY_PHASES = ((512, 0.95, 30), (16, 0.6, 12), (64, 0.3, 12))
+BURSTY_PHASES_QUICK = ((512, 0.95, 8), (16, 0.6, 4), (64, 0.3, 4))
+
+
+def bursty_des_trace(
+    B: int = 128,
+    phases: Sequence[tuple] = BURSTY_PHASES,
+    mean_interarrival: int = 3,
+    seed: int = 0,
+) -> Trace:
+    """Bursty M/M/1-style discrete-event arrival process, pregenerated so
+    the event loop runs entirely inside `run_window`.
+
+    Event keys are ABSOLUTE arrival times: a shared exponential clock
+    advances per arrival, so the key range grows with simulated time and
+    the queue rides the burst (arrival-heavy ON phases grow it,
+    service-heavy phases drain it) — the phased contention that makes the
+    adaptive mode switch pay.  Each phase tuple is (num_clients,
+    arrival_frac, steps)."""
+    rng = np.random.default_rng(seed)
+    K = sum(int(p[2]) for p in phases)
+    ops = np.full((K, B), OP_NOP, np.int32)
+    keys = np.full((K, B), INF_KEY, np.int32)
+    vals = np.zeros((K, B), np.int32)
+    nc = np.zeros((K,), np.int32)
+    clock = 0.0
+    t = 0
+    for num_clients, arrival_frac, steps in phases:
+        for _ in range(int(steps)):
+            n_arr = int(round(arrival_frac * B))
+            n_srv = B - n_arr
+            ia = rng.exponential(mean_interarrival, n_arr)
+            times = clock + np.cumsum(ia)
+            clock = float(times[-1]) if n_arr else clock
+            ops[t, :n_arr] = OP_INSERT
+            keys[t, :n_arr] = np.minimum(times, INF_KEY - 1).astype(np.int32)
+            vals[t, :n_arr] = np.arange(n_arr, dtype=np.int32)
+            ops[t, n_arr : n_arr + n_srv] = OP_DELETE_MIN
+            nc[t] = num_clients
+            t += 1
+    return Trace(ops=ops, keys=keys, vals=vals, num_clients=nc, seed=seed)

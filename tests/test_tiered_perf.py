@@ -156,15 +156,25 @@ def test_bench_smoke_writes_json(tmp_path):
     data = json.loads(out.read_text())
     assert data["schema"] == 1
     recs = data["records"]
-    assert {r["schedule"] for r in recs} >= {
+    assert {r.get("schedule") for r in recs} >= {
         "STRICT_FLAT", "SPRAY_HERLIHY", "MULTIQ"
     }
     for r in recs:  # stable before/after-diffable schema
-        for key in ("suite", "name", "us_per_call", "derived", "schedule",
-                    "us_per_step", "capacity", "num_clients", "num_shards",
-                    "size", "insert_frac"):
+        for key in ("suite", "name", "us_per_call", "derived",
+                    "us_per_step"):
             assert key in r, (key, r)
         assert r["us_per_step"] > 0
+    # the PQWorkload-driven ins0 slice carries full workload coordinates
+    ins0 = [r for r in recs if r["name"].startswith("smoke/ins0/")]
+    assert len(ins0) == 3
+    for r in ins0:
+        for key in ("schedule", "capacity", "num_clients", "num_shards",
+                    "size", "insert_frac"):
+            assert key in r, (key, r)
+    # the application-workload probes ride the same smoke lane
+    assert {r["name"] for r in recs} >= {
+        "smoke/workloads_sssp", "smoke/workloads_des"
+    }
 
 
 @pytest.mark.slow
