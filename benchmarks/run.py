@@ -22,7 +22,7 @@ def main() -> None:
         "--only", default=None,
         help="comma list of: fig1,fig7,fig9,fig9_latency,fig9_window,fig10,"
              "fig12,classifier,roofline,kernels,rank_error,smoke,"
-             "workloads_sssp,workloads_des",
+             "workloads_sssp,workloads_des,serve_slo",
     )
     ap.add_argument(
         "--schedule", default="all",
@@ -75,6 +75,7 @@ def main() -> None:
         kernels_bench,
         multiq_rank_error,
         roofline,
+        serve_slo,
         smoke,
         window_amortization,
         workloads_bench,
@@ -96,6 +97,7 @@ def main() -> None:
         ),
         "workloads_sssp": workloads_bench.run_sssp,
         "workloads_des": workloads_bench.run_des,
+        "serve_slo": serve_slo.run,
         "smoke": smoke.run,
     }
     if args.smoke:

@@ -1,0 +1,90 @@
+"""serve_slo — SLO latency/throughput records for the serving tier.
+
+Drives the model-free serving engine (synthetic decode: completion timing
+is exactly `max_new_tokens`, so runs are deterministic) over the canonical
+open-loop bursty MMPP trace and records, per `sched_window` x
+{baseline, forecast}:
+
+  * us_per_call   wall microseconds per completed token (the --check gate's
+                  regression metric: scheduler dispatch + engine host loop);
+  * tokens_per_step   throughput on the engine-step clock — the
+                  slot-utilization metric mid-window admission moves;
+  * p50/p99 queueing delay and per-token latency in engine steps.
+
+The baseline rows freeze the window's dispatch budget at its start (the
+pre-forecast behavior: budgets [free, 0, ..., 0]); the forecast rows admit
+mid-window from the slot-availability forecast.  The paired records in
+BENCH_pq.json are the acceptance evidence that mid-window admission
+strictly increases throughput (and cuts tail latency) at K in {4, 16}.
+"""
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.workloads.traces import bursty_serve_workload
+
+
+def drive(
+    sched_window: int,
+    forecast: bool,
+    steps: int = 64,
+    batch_size: int = 8,
+    seed: int = 1,
+):
+    """One serving run over the bursty trace; returns the SLO summary."""
+    workload = bursty_serve_workload(steps=steps, seed=seed)
+    total = sum(len(a) for a in workload)
+    eng = ServeEngine(None, None, EngineConfig(
+        batch_size=batch_size, max_seq=512, sched_window=sched_window,
+        forecast=forecast,
+    ))
+    t0 = time.perf_counter()
+    summary = eng.run(workload, max_steps=100_000)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    lat = eng.latency_records()
+    tokens = float(lat["tokens"].sum())
+    return {
+        "completed": summary["completed"],
+        "total": total,
+        "engine_steps": summary["steps"],
+        "us_per_token": wall_us / max(tokens, 1.0),
+        "tokens_per_step": tokens / max(summary["steps"], 1),
+        "p50_queue_steps": float(np.percentile(lat["queueing_steps"], 50)),
+        "p99_queue_steps": float(np.percentile(lat["queueing_steps"], 99)),
+        "p50_per_token_steps": float(
+            np.percentile(lat["per_token_steps"], 50)
+        ),
+        "p99_per_token_steps": float(
+            np.percentile(lat["per_token_steps"], 99)
+        ),
+    }
+
+
+def run(quick: bool = False):
+    steps = 32 if quick else 64
+    for K in (4, 16):
+        for forecast in (False, True):
+            tag = "forecast" if forecast else "baseline"
+            r = drive(K, forecast, steps=steps)
+            assert r["completed"] == r["total"], (
+                f"serve run dropped requests: {r['completed']}/{r['total']}"
+            )
+            emit(
+                f"serve_slo/K{K}/{tag}",
+                r["us_per_token"],
+                f"tok_per_step={r['tokens_per_step']:.3f};"
+                f"p99_queue={r['p99_queue_steps']:.1f};"
+                f"p99_per_token={r['p99_per_token_steps']:.2f}",
+                sched_window=K,
+                forecast=forecast,
+                completed=r["completed"],
+                engine_steps=r["engine_steps"],
+                tokens_per_step=round(r["tokens_per_step"], 4),
+                p50_queue_steps=round(r["p50_queue_steps"], 2),
+                p99_queue_steps=round(r["p99_queue_steps"], 2),
+                p50_per_token_steps=round(r["p50_per_token_steps"], 3),
+                p99_per_token_steps=round(r["p99_per_token_steps"], 3),
+            )

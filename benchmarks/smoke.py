@@ -34,6 +34,22 @@ def run(quick: bool = False):
              schedule=sched.name, us_per_step=round(us, 3),
              **workload_fields(w))
     _run_workloads()
+    _run_serve()
+
+
+def _run_serve():
+    """Seconds-scale probe of the serving tier: the model-free engine with
+    windowed mid-window admission on a short bursty trace — the serve_slo
+    suite's fast slice, so the `--smoke --check` 2x gate covers the
+    scheduler/engine dispatch path too."""
+    from benchmarks.serve_slo import drive
+
+    r = drive(sched_window=4, forecast=True, steps=16, batch_size=4)
+    emit("smoke/serve_slo", r["us_per_token"],
+         f"tok_per_step={r['tokens_per_step']:.3f};"
+         f"completed={r['completed']}",
+         sched_window=4, forecast=True,
+         tokens_per_step=round(r["tokens_per_step"], 4))
 
 
 def _run_workloads():

@@ -13,6 +13,23 @@ KV memory is slot-paged: a fixed pool of `batch_size` cache slots; the
 scheduler admits a request only when a slot is free (capacity-rejected
 inserts retry next tick — the same MoE-style overflow contract the PQ's
 `route_capped` uses).
+
+With `sched_window > 1` the engine batches K scheduler ticks into one
+fused device call (`SmartPQScheduler.tick_window`) and spreads the
+window's dispatch budget across ticks with a slot-availability forecast:
+tick 0 gets the free slots visible at window start, and tick t adds the
+slots predicted to free during the window — the count of active slots
+whose `remaining` token budget runs out by tick t, plus an expected-value
+EOS-hazard term for early stops.  The forecast is advisory only:
+over-admissions park in the engine's admit backlog and fill slots as they
+actually free, so completions never depend on it (disable with
+`forecast=False` to reproduce the window-start-budget baseline, whose
+dispatch stream is bit-identical to K sequential single ticks).
+
+`cfg=None` runs a model-free synthetic decode (next token derived from
+the current token, never EOS) — the same engine loop without building a
+model, used by the SLO benchmarks and the fast-lane window-semantics
+tests.
 """
 
 from __future__ import annotations
@@ -26,8 +43,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.io import init_caches
-from repro.models.registry import build_model
 from repro.serve.scheduler import Request, SmartPQScheduler
 
 
@@ -38,33 +53,54 @@ class EngineConfig:
     eos_token: int = 2
     kv_chunk: int = 2048
     # Scheduler dispatch granularity: >1 batches K ticks into ONE fused
-    # SmartPQ.run_window device call (scheduler.tick_window) instead of K
-    # per-step dispatches.  Dispatch decisions for the window are made with
-    # the slot budget visible at the window start; over-admissions park in
-    # the engine's admit backlog and fill slots as they free.
+    # device call (scheduler.tick_window) instead of K per-step dispatches.
     sched_window: int = 1
+    # Mid-window admission: derive per-tick dispatch budgets from the
+    # slot-availability forecast instead of freezing the window-start free
+    # count.  Off -> budgets [free, 0, ..., 0], the pre-forecast baseline.
+    forecast: bool = True
+    # Per-step probability an active slot stops early (EOS) — folded into
+    # the forecast as an expected-completions term.  0 trusts `remaining`
+    # alone (exact for synthetic decode, conservative for real models).
+    eos_hazard: float = 0.0
 
 
 class ServeEngine:
     """Small-model serving loop (CPU-runnable end-to-end example)."""
 
-    def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
-                 mesh=None, seed: int = 0):
+    def __init__(self, cfg: Optional[ModelConfig], params,
+                 engine_cfg: EngineConfig, mesh=None, seed: int = 0):
         self.cfg = cfg
         self.ecfg = engine_cfg
-        self.model = build_model(cfg, mesh=mesh, remat=False,
-                                 kv_chunk=engine_cfg.kv_chunk)
         self.params = params
-        self.scheduler = SmartPQScheduler(batch_size=64, seed=seed)
         B, S = engine_cfg.batch_size, engine_cfg.max_seq
-        self.caches = init_caches(cfg, B, S)
+        if cfg is not None:
+            from repro.models.io import init_caches
+            from repro.models.registry import build_model
+
+            self.model = build_model(cfg, mesh=mesh, remat=False,
+                                     kv_chunk=engine_cfg.kv_chunk)
+            self.caches = init_caches(cfg, B, S)
+            self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        else:  # model-free synthetic decode: scheduler/engine loop only
+            self.model = None
+            self.caches = ()
+            self._decode = jax.jit(_synthetic_decode)
+        self.scheduler = SmartPQScheduler(batch_size=64, seed=seed)
         self.tokens = jnp.zeros((B, 1), jnp.int32)
         self.lengths = jnp.zeros((B,), jnp.int32)
         self.active: List[Optional[Request]] = [None] * B
         self.remaining = np.zeros(B, np.int64)
         self.outputs: Dict[int, List[int]] = {}
         self._backlog: List[Request] = []  # dispatched, awaiting a free slot
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        # SLO accounting (engine-step clock): arrival -> admission -> done.
+        self.arrival_step: Dict[int, int] = {}
+        self.admit_step: Dict[int, int] = {}
+        self.done_step: Dict[int, int] = {}
+        # EMA of observed service times (tokens emitted per completed
+        # request) — the forecast's slot-recycling horizon.  The prior only
+        # matters for the first window; completions tighten it online.
+        self._service_est = 8.0
         self._step = 0
 
     # -- admission -------------------------------------------------------------
@@ -82,8 +118,59 @@ class ServeEngine:
             self.active[slot] = req
             self.remaining[slot] = req.max_new_tokens
             self.outputs[req.uid] = []
+            self.admit_step[req.uid] = self._step
             self.tokens = self.tokens.at[slot, 0].set(req.uid % 100 + 3)
             self.lengths = self.lengths.at[slot].set(0)
+
+    def _note_arrivals(self, arrivals: List[Request], step: int):
+        """Stamp arrival time on the engine-step clock: the scheduler's
+        aging term and the SLO latency records both key off it."""
+        for r in arrivals:
+            r.arrival_step = step
+            self.arrival_step[r.uid] = step
+
+    # -- slot-availability forecast ---------------------------------------------
+
+    def _window_budgets(self, K: int) -> List[int]:
+        """Per-tick dispatch budgets for the next K-tick window.
+
+        budgets[0] is the free-slot count at window start (the baseline's
+        whole budget).  With the forecast on, budgets[t>0] adds the slots
+        predicted to free at tick t: (a) active slots whose `remaining`
+        token budget runs out (a slot with remaining == t frees for
+        admission at tick t), (b) the accumulated-and-floored expectation
+        of EOS early stops among slots still running, and (c) SLOT
+        RECYCLING — every predicted admission is itself projected to hold
+        its slot for `_service_est` ticks and free it again, so long
+        windows keep their slots saturated instead of predicting only one
+        generation of completions.  Over-prediction is safe: dispatches
+        beyond the queue depth are no-ops, and over-admissions park in the
+        admit backlog until a slot actually frees."""
+        budgets = [len(self._free_slots())] + [0] * (K - 1)
+        if not self.ecfg.forecast:
+            return budgets
+        rem = [int(self.remaining[i]) for i, r in enumerate(self.active)
+               if r is not None]
+        # (a) deterministic completions of the currently active slots
+        frees = [0] * K
+        for r in rem:
+            if 1 <= r < K:
+                frees[r] += 1
+        # (b) expected EOS early stops, credited as they accumulate to 1
+        h = self.ecfg.eos_hazard
+        if h > 0.0:
+            acc, credited = 0.0, 0
+            for t in range(1, K):
+                acc += h * sum(1 for r in rem if r > t)
+                frees[t] += int(acc) - credited
+                credited = int(acc)
+        # (c) recycle: an admission at tick t frees its slot at t + est
+        est = max(int(round(self._service_est)), 1)
+        for t in range(1, K):
+            if t - 1 + est < K:
+                frees[t - 1 + est] += budgets[t - 1]
+            budgets[t] += frees[t]
+        return budgets
 
     # -- stepping ---------------------------------------------------------------
 
@@ -116,6 +203,10 @@ class ServeEngine:
             full = int(np.asarray(self.lengths)[i]) >= self.ecfg.max_seq - 1
             if self.remaining[i] <= 0 or hit_eos or full:
                 done.append(req.uid)
+                self.done_step[req.uid] = self._step
+                self._service_est = (
+                    0.9 * self._service_est + 0.1 * len(self.outputs[req.uid])
+                )
                 self.active[i] = None
         self._step += 1
         return done
@@ -124,10 +215,10 @@ class ServeEngine:
         """Drive until the workload drains.  Returns summary stats.
 
         With `sched_window > 1` the scheduler runs one fused device call per
-        K engine ticks: the window's dispatch budget is the free-slot count
-        at its start (ticks past the first carry budget 0 — completions that
-        free slots mid-window are absorbed by the admit backlog and the next
-        window's budget)."""
+        K engine ticks; each tick's dispatch budget comes from
+        `_window_budgets` — mid-window completions admit at the tick the
+        forecast predicts them, and any over-admission parks in the admit
+        backlog until a slot actually frees."""
         t0 = time.time()
         completed = 0
         step = 0
@@ -138,9 +229,9 @@ class ServeEngine:
                     workload[step + i] if step + i < len(workload) else []
                     for i in range(K)
                 ]
-                budget = len(self._free_slots())
-                ticks = [(arr[0], budget)] + [(a, 0) for a in arr[1:]]
-                for d in self.scheduler.tick_window(ticks):
+                for i, a in enumerate(arr):
+                    self._note_arrivals(a, step + i)
+                for d in self.scheduler.tick_window(arr, self._window_budgets(K)):
                     if step >= max_steps:
                         # already popped from the device queue — park for
                         # admission on a later run() instead of losing them
@@ -150,6 +241,7 @@ class ServeEngine:
                     step += 1
             else:
                 arrivals = workload[step] if step < len(workload) else []
+                self._note_arrivals(arrivals, step)
                 completed += len(self.step(arrivals))
                 step += 1
             if (
@@ -166,3 +258,41 @@ class ServeEngine:
             "mode_trace": self.scheduler.stats.mode_trace,
             "pq_transitions": int(self.scheduler.carry.stats.transitions),
         }
+
+    # -- SLO accounting ----------------------------------------------------------
+
+    def latency_records(self) -> Dict[str, np.ndarray]:
+        """Per-completed-request latency vectors on the engine-step clock:
+        queueing delay (arrival -> slot admission), end-to-end latency, and
+        per-token latency (end-to-end / tokens emitted) — the inputs to the
+        serve_slo benchmark's p50/p99 records."""
+        uids = sorted(self.done_step)
+        queueing = np.array(
+            [self.admit_step[u] - self.arrival_step.get(u, 0) for u in uids],
+            np.float64,
+        )
+        e2e = np.array(
+            [self.done_step[u] - self.arrival_step.get(u, 0) + 1 for u in uids],
+            np.float64,
+        )
+        tokens = np.array(
+            [max(len(self.outputs.get(u, ())), 1) for u in uids], np.float64
+        )
+        return {
+            "uids": np.array(uids, np.int64),
+            "queueing_steps": queueing,
+            "e2e_steps": e2e,
+            "per_token_steps": e2e / tokens,
+            "tokens": tokens,
+        }
+
+
+def _synthetic_decode(params, caches, tokens, lengths):
+    """Model-free decode stub with the `decode_step` signature: the next
+    token is a pure function of the current one and never hits the default
+    EOS id (2), so completion timing is driven entirely by
+    `max_new_tokens` — deterministic ground truth for scheduler tests and
+    SLO benchmarks."""
+    del params, lengths
+    nxt = (tokens[:, 0] % 97) + 3
+    return jax.nn.one_hot(nxt, 128, dtype=jnp.float32), caches

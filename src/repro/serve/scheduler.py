@@ -3,7 +3,17 @@ a first-class serving feature.
 
 Every pending request lives in the adaptive priority queue keyed by
 
-    priority_key = slo_class << 28 | arrival_order ... (smaller = sooner)
+    priority_key = (slo_class << 27) + max(prompt_len - 4 * age, 0)
+
+(smaller = sooner).  The high bits are SLO-major: an interactive request
+(slo 0) always sorts ahead of every standard (slo 1) and batch (slo 2)
+request, because the minor term is bounded by prompt_len < 2**27.  The
+minor term is shortest-prompt-first with linear aging: each scheduler step
+a request waits shaves 4 off its effective prompt length, so long prompts
+cannot starve behind a stream of short ones — an aged request decays to
+the head of its SLO class (minor term 0), where FIFO order re-emerges from
+the queue's insertion-seq tiebreak.  `test_priority_key_semantics` pins
+these invariants.
 
 Each engine step:
   arrivals  -> insert batch          (insert-dominated under bursts)
@@ -17,19 +27,28 @@ request descriptors — the ffwd cache-line analogue.
 
 Two dispatch granularities:
   tick()        one step, one device call — the interactive path.
-  tick_window() K ticks fused into ONE device call via SmartPQ.run_window —
-                mode decisions (and the elimination pre-pass that serves
-                same-window insert/deleteMin matches without touching the
-                queue) happen on-device mid-window, so per-request scheduler
-                overhead amortizes K-fold.  The per-tick dispatch lists come
-                back identical to K sequential tick() calls.
+  tick_window() K ticks fused into ONE device call.  Arrivals ride a
+                device-resident admission ring — fixed-capacity
+                (key-fields, uid) arrays threaded through the scan — that
+                each tick consumes into its insert lanes, and every tick
+                carries its own dispatch budget, so completions the engine
+                forecasts mid-window turn into dispatches at the tick they
+                happen instead of waiting for the next window.  Priority
+                keys are computed on-device at the admitting tick with the
+                same aging formula `Request.priority_key` uses, so the
+                dispatch stream is bit-identical to K sequential tick()
+                calls with the same per-tick budgets (tested, including
+                rng-dependent spray mode).  Arrivals that overflow the lane
+                width wait in the ring for the next tick; ring overflow
+                waits in a host-side arrival backlog — nothing is dropped
+                (tick() used to silently drop arrivals beyond the lane
+                width; both paths now spill to the backlog).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,8 +69,9 @@ class Request:
     tokens_done: int = 0
 
     def priority_key(self, step: int) -> int:
-        # slo-major, then arrival order (FIFO within class); headroom-aware
-        # boost for requests close to completion (frees KV pages sooner).
+        # SLO-major, shortest-prompt-first minor with linear aging (see
+        # module docstring).  Must stay in lockstep with the on-device
+        # computation in SmartPQScheduler._window_scan.
         age = max(step - self.arrival_step, 0)
         key = (self.slo_class << 27) + max(self.prompt_len - 4 * age, 0)
         return int(min(key, INF_KEY - 1))
@@ -73,10 +93,14 @@ class SmartPQScheduler:
         batch_size: int,
         pq_config: Optional[SmartPQConfig] = None,
         seed: int = 0,
+        ring_capacity: int = 1024,
     ):
         from repro.core.smartpq import MODE_AWARE
 
         self.batch = batch_size
+        # Admission-ring width: arrivals beyond this per window spill to the
+        # host-side backlog (FIFO), so correctness never depends on it.
+        self.ring_capacity = ring_capacity
         # Start in the exact (Nuddle) mode: a near-empty queue must respect
         # SLO order strictly; the classifier relaxes to oblivious only once
         # arrival pressure makes the queue deep enough that the spray
@@ -87,7 +111,9 @@ class SmartPQScheduler:
         ))
         self.carry = self.pq.init()
         self._step_fn = self.pq.jit_step  # donated carry: zero-copy steps
+        self._window_fn = jax.jit(self._window_scan, donate_argnums=(0,))
         self._requests: Dict[int, Request] = {}
+        self._arrival_backlog: List[Request] = []  # submitted, not yet inserted
         self._rng = jax.random.key(seed)
         self._step = 0
         self.stats = SchedulerStats()
@@ -123,9 +149,16 @@ class SmartPQScheduler:
         ]
 
     def tick(self, arrivals: List[Request], n_dispatch: int) -> List[Request]:
-        """One scheduler step: enqueue arrivals, dequeue up to n_dispatch."""
+        """One scheduler step: enqueue arrivals, dequeue up to n_dispatch.
+
+        Arrivals beyond the lane width join the FIFO arrival backlog and
+        insert on later ticks (ahead of newer arrivals) — the same
+        spill-don't-drop contract the windowed admission ring implements."""
         self.submit(arrivals)
-        ops, keys, vals, na = self._pack_tick(arrivals, n_dispatch)
+        arrivals = self._arrival_backlog + list(arrivals)
+        na = min(len(arrivals), self.batch)
+        self._arrival_backlog = arrivals[na:]
+        ops, keys, vals, na = self._pack_tick(arrivals[:na], n_dispatch)
         self._rng, sub = jax.random.split(self._rng)
 
         self.carry, res = self._step_fn(
@@ -145,57 +178,144 @@ class SmartPQScheduler:
         self.stats.mode_trace.append(int(self.carry.stats.mode))
         return dispatched
 
-    def tick_window(
-        self, ticks: List[Tuple[List[Request], int]]
-    ) -> List[List[Request]]:
-        """K scheduler ticks in ONE device call (SmartPQ.run_window).
+    # -- fused windowed admission ---------------------------------------------
 
-        `ticks` is a list of (arrivals, n_dispatch) pairs.  Returns the
-        per-tick dispatch lists — identical to calling tick() K times (the
-        fused scan is bit-identical to the sequential step loop), at one
-        K-th of the dispatch overhead.  Requests that arrive and win a
-        dispatch slot within the same window ride the on-device elimination
-        pre-pass and never touch the queue state."""
-        K = len(ticks)
+    def _window_scan(self, carry, ring, avail_by_tick, budgets, step0, rngs):
+        """K scheduler ticks as ONE fused lax.scan over `SmartPQ.step`.
+
+        `ring` is the admission ring: fixed-capacity (slo, prompt_len,
+        arrival_step, uid) int32 arrays.  Each tick consumes the FIFO
+        prefix of ring entries that have arrived by that tick (bounded by
+        the lane width), computes their priority keys on-device with the
+        tick's step number — bit-identical to host `Request.priority_key`
+        — and spends that tick's dispatch budget on delete lanes.  The
+        consumed count threads through the scan, so a burst that overflows
+        one tick's lanes admits on the following ticks of the SAME window.
+        """
+        slo, plen, astep, uid = ring
+        B = self.batch
+        R = slo.shape[0]
+        lane = jnp.arange(B, dtype=jnp.int32)
+
+        def body(state, x):
+            cr, head = state
+            t, budget, avail, rng = x
+            step = step0 + t
+            n_arr = jnp.clip(avail - head, 0, B)
+            idx = jnp.minimum(head + lane, R - 1)
+            is_arr = lane < n_arr
+            age = jnp.maximum(step - astep[idx], 0)
+            pkey = (slo[idx] << 27) + jnp.maximum(plen[idx] - 4 * age, 0)
+            pkey = jnp.minimum(pkey, INF_KEY - 1)
+            n_del = jnp.clip(budget, 0, B - n_arr)
+            is_del = (lane >= n_arr) & (lane < n_arr + n_del)
+            ops = jnp.where(
+                is_del, OP_DELETE_MIN, OP_INSERT
+            ).astype(jnp.int32)
+            keys = jnp.where(is_arr, pkey, INF_KEY).astype(jnp.int32)
+            vals = jnp.where(is_arr, uid[idx], 0).astype(jnp.int32)
+            cr2, res = self.pq.step(cr, ops, keys, vals, rng, 512)
+            return (cr2, head + n_arr), (
+                res.keys, res.vals, res.n_out, cr2.stats.mode
+            )
+
+        K = budgets.shape[0]
+        t_idx = jnp.arange(K, dtype=jnp.int32)
+        (carry, head), (dk, dv, dn, dm) = jax.lax.scan(
+            body, (carry, jnp.int32(0)), (t_idx, budgets, avail_by_tick, rngs)
+        )
+        return carry, head, dk, dv, dn, dm
+
+    def tick_window(
+        self,
+        arrivals: Sequence[List[Request]],
+        budgets: Sequence[int],
+    ) -> List[List[Request]]:
+        """K scheduler ticks in ONE device call, budgeted per tick.
+
+        `arrivals[t]` is the request list arriving at tick t; `budgets[t]`
+        caps that tick's dispatches (the engine derives mid-window budgets
+        from its slot-availability forecast; `[free, 0, 0, ...]` reproduces
+        the window-start-budget baseline).  Arrivals — prefixed by any
+        backlog from earlier windows — load into the device admission ring
+        once, and the fused scan consumes them at their arrival ticks, so
+        the host moves one compact descriptor batch per window instead of
+        K lists.  Returns the per-tick dispatch lists — bit-identical to K
+        sequential `tick(arrivals[t], budgets[t])` calls (same lanes, same
+        rng stream, same mode trace).  Ring overflow stays in the host
+        backlog for the next window; nothing is dropped."""
+        K = len(arrivals)
         if K == 0:
             return []
-        packed = []
+        if len(budgets) != K:
+            raise ValueError(
+                f"budgets must give one dispatch cap per tick: "
+                f"{len(budgets)} budgets for {K} ticks"
+            )
+        for reqs in arrivals:
+            self.submit(reqs)
+
+        # Load the ring: backlog first (FIFO), available at tick 0; this
+        # window's arrivals become available at their own tick.  Overflow
+        # beyond the fixed capacity returns to the backlog untouched.
+        R = self.ring_capacity
+        pending = [(r, 0) for r in self._arrival_backlog] + [
+            (r, t) for t, reqs in enumerate(arrivals) for r in reqs
+        ]
+        loaded = pending[:R]
+        slo = np.zeros(R, np.int32)
+        plen = np.zeros(R, np.int32)
+        astep = np.zeros(R, np.int32)
+        uid = np.zeros(R, np.int32)
+        avail_tick = np.full(len(loaded), 0, np.int32)
+        for i, (r, t) in enumerate(loaded):
+            slo[i] = r.slo_class
+            plen[i] = r.prompt_len
+            astep[i] = r.arrival_step
+            uid[i] = r.uid
+            avail_tick[i] = t
+        # entries are FIFO by (tick, submission order) already — backlog
+        # carries tick 0 and arrivals append in tick order
+        avail_by_tick = np.searchsorted(
+            avail_tick, np.arange(K), side="right"
+        ).astype(np.int32)
+
+        step0 = self._step
         subs = []
-        for arrivals, n_dispatch in ticks:
-            self.submit(arrivals)
-            packed.append(self._pack_tick(arrivals, n_dispatch))
+        for _ in range(K):
             self._step += 1  # priority keys age per tick, as in tick()
             # split exactly as K sequential tick() calls would — the rng
             # stream (and self._rng afterwards) must match bit for bit,
             # otherwise spray/multiq modes diverge from the per-step path
             self._rng, sub = jax.random.split(self._rng)
             subs.append(sub)
-        ops = np.stack([p[0] for p in packed])
-        keys = np.stack([p[1] for p in packed])
-        vals = np.stack([p[2] for p in packed])
-        subs = jnp.stack(subs)
 
-        self.carry, wres = self.pq.jit_run_window(
+        self.carry, head, dk, dv, dn, dm = self._window_fn(
             self.carry,
-            jnp.asarray(ops),
-            jnp.asarray(keys),
-            jnp.asarray(vals),
-            subs,
-            512,
+            (jnp.asarray(slo), jnp.asarray(plen), jnp.asarray(astep),
+             jnp.asarray(uid)),
+            jnp.asarray(avail_by_tick),
+            jnp.asarray(np.asarray(budgets, np.int32)),
+            jnp.int32(step0),
+            jnp.stack(subs),
         )
-        out_k = np.asarray(wres.keys)
-        out_v = np.asarray(wres.vals)
-        n_out = np.asarray(wres.n_out)
-        modes = np.asarray(wres.mode)
+        consumed = int(head)
+        self._arrival_backlog = [r for r, _ in pending[consumed:]]
+
+        out_k = np.asarray(dk)
+        out_v = np.asarray(dv)
+        n_out = np.asarray(dn)
+        modes = np.asarray(dm)
         dispatched_per_tick = []
         for t in range(K):
             d = self._collect(out_k[t], out_v[t], int(n_out[t]))
             dispatched_per_tick.append(d)
-            self.stats.inserted += packed[t][3]
             self.stats.dispatched += len(d)
             self.stats.mode_trace.append(int(modes[t]))
+        self.stats.inserted += consumed
         return dispatched_per_tick
 
     @property
     def pending(self) -> int:
-        return int(self.carry.state.total_size)
+        """Requests awaiting dispatch: queued on device + arrival backlog."""
+        return int(self.carry.state.total_size) + len(self._arrival_backlog)

@@ -34,10 +34,14 @@ from repro.workloads.des import (
 from repro.workloads.traces import (
     Trace,
     bursty_des_trace,
+    bursty_serve_workload,
     load_trace,
     mix_drift_trace,
+    mmpp_arrival_counts,
+    open_loop_requests,
     phase_flip_trace,
     phased_trace,
+    poisson_arrival_counts,
     prefill,
     replay,
     save_trace,
@@ -50,8 +54,9 @@ __all__ = [
     "SSSPResult", "make_smartpq_sssp_engine", "make_sssp_engine",
     "run_sssp", "run_sssp_smartpq",
     "DESResult", "hold_model_oracle", "make_hold_engine", "run_hold_model",
-    "Trace", "bursty_des_trace", "load_trace", "mix_drift_trace",
-    "phase_flip_trace", "phased_trace", "prefill", "replay", "save_trace",
-    "size_ramp_trace",
+    "Trace", "bursty_des_trace", "bursty_serve_workload", "load_trace",
+    "mix_drift_trace", "mmpp_arrival_counts", "open_loop_requests",
+    "phase_flip_trace", "phased_trace", "poisson_arrival_counts", "prefill",
+    "replay", "save_trace", "size_ramp_trace",
     "WORKLOADS", "WorkloadSpec", "default_pq",
 ]

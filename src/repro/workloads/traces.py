@@ -272,6 +272,122 @@ BURSTY_PHASES = ((512, 0.95, 30), (16, 0.6, 12), (64, 0.3, 12))
 BURSTY_PHASES_QUICK = ((512, 0.95, 8), (16, 0.6, 4), (64, 0.3, 4))
 
 
+# ---------------------------------------------------------------------------
+# open-loop arrival processes (the serving tier's request streams)
+# ---------------------------------------------------------------------------
+#
+# PQ op traces above are CLOSED-loop: each lane is a client that blocks on
+# its own op.  The serving tier needs OPEN-loop streams — arrivals keep
+# coming whether or not the engine keeps up (the MultiQueue serving regime
+# of Williams et al., arXiv 2504.11652) — so backlog, queueing delay, and
+# SLO tail latency are properties of the schedule, not the generator.
+# Requests are a STATELESS uid stream: every attribute (slo_class,
+# prompt_len, max_new_tokens) is a hash of the uid alone, so a trace with
+# millions of synthetic clients costs O(arrivals materialized), any slice
+# of the stream regenerates without history, and two runs over the same
+# (seed, uid range) see identical clients.
+
+
+def _hash_u32(x: np.ndarray, salt: int) -> np.ndarray:
+    """splitmix32-style avalanche hash: uid -> iid uniform uint32."""
+    salted = (salt * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    z = (np.asarray(x, np.uint64) + np.uint64(salted)) \
+        & np.uint64(0xFFFFFFFF)
+    z = (z ^ (z >> np.uint64(16))) * np.uint64(0x85EBCA6B) \
+        & np.uint64(0xFFFFFFFF)
+    z = (z ^ (z >> np.uint64(13))) * np.uint64(0xC2B2AE35) \
+        & np.uint64(0xFFFFFFFF)
+    return (z ^ (z >> np.uint64(16))).astype(np.uint32)
+
+
+def poisson_arrival_counts(
+    steps: int, rate: float, seed: int = 0
+) -> np.ndarray:
+    """Open-loop Poisson arrivals: iid per-step counts at `rate`."""
+    return np.random.default_rng(seed).poisson(
+        rate, steps
+    ).astype(np.int32)
+
+
+def mmpp_arrival_counts(
+    steps: int,
+    rates: Sequence[float] = (12.0, 0.5),
+    mean_dwell: Sequence[float] = (16.0, 32.0),
+    seed: int = 0,
+) -> np.ndarray:
+    """Markov-modulated Poisson arrivals (bursty open-loop load).
+
+    A hidden Markov chain over `len(rates)` states emits Poisson counts at
+    the state's rate and advances to the next state with probability
+    1/mean_dwell[state] per step (geometric dwell times) — the canonical
+    ON/OFF burst process whose ON phases drive the queue into the
+    insert-storm contention regime."""
+    rng = np.random.default_rng(seed)
+    counts = np.zeros(steps, np.int32)
+    state = 0
+    for t in range(steps):
+        counts[t] = rng.poisson(rates[state])
+        if rng.random() < 1.0 / float(mean_dwell[state]):
+            state = (state + 1) % len(rates)
+    return counts
+
+
+def open_loop_requests(
+    counts: np.ndarray,
+    seed: int = 0,
+    uid_base: int = 0,
+    slo_weights: Sequence[float] = (0.25, 0.5, 0.25),
+    prompt_range: tuple = (4, 64),
+    new_tokens_range: tuple = (2, 16),
+):
+    """Materialize per-step serving `Request` lists from arrival counts.
+
+    Returns a list of length `len(counts)`; step t holds `counts[t]`
+    requests.  uids are consecutive from `uid_base`, and every request
+    attribute derives from `_hash_u32(uid, seed*salt)` — the stateless
+    stream contract above.  slo_class is drawn from `slo_weights`
+    (interactive/standard/batch); prompt lengths and decode budgets are
+    uniform over their ranges."""
+    from repro.serve.scheduler import Request  # serve dep kept call-local
+
+    cum = np.concatenate([[0], np.cumsum(counts.astype(np.int64))])
+    total = int(cum[-1])
+    uids = uid_base + np.arange(total, dtype=np.int64)
+    cw = np.cumsum(np.asarray(slo_weights, np.float64))
+    cw = cw / cw[-1]
+    u_slo = _hash_u32(uids, seed * 3 + 1).astype(np.float64) / 2**32
+    slo = np.searchsorted(cw, u_slo, side="right").astype(np.int64)
+    plo, phi = prompt_range
+    prompt = plo + _hash_u32(uids, seed * 3 + 2) % max(phi - plo, 1)
+    tlo, thi = new_tokens_range
+    ntok = tlo + _hash_u32(uids, seed * 3 + 3) % max(thi - tlo, 1)
+    workload = []
+    for t in range(len(counts)):
+        lo, hi = int(cum[t]), int(cum[t + 1])
+        workload.append([
+            Request(
+                uid=int(uids[i]), prompt_len=int(prompt[i]),
+                max_new_tokens=int(ntok[i]), slo_class=int(slo[i]),
+                arrival_step=t,
+            )
+            for i in range(lo, hi)
+        ])
+    return workload
+
+
+def bursty_serve_workload(
+    steps: int = 64,
+    rates: Sequence[float] = (12.0, 0.5),
+    mean_dwell: Sequence[float] = (16.0, 32.0),
+    seed: int = 0,
+):
+    """The serve_slo benchmark's canonical open-loop bursty trace: MMPP
+    arrival counts fed through the stateless request stream."""
+    return open_loop_requests(
+        mmpp_arrival_counts(steps, rates, mean_dwell, seed=seed), seed=seed
+    )
+
+
 def bursty_des_trace(
     B: int = 128,
     phases: Sequence[tuple] = BURSTY_PHASES,

@@ -35,3 +35,19 @@ def run_device_script(name: str, n_devices: int = 8, timeout: int = 900):
 @pytest.fixture(scope="session")
 def device_script_runner():
     return run_device_script
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Drop compiled executables after each test module.
+
+    jax 0.4.37's CPU backend segfaults inside `backend_compile` once a few
+    hundred distinct programs have been compiled in one process (observed
+    deterministically at ~130 tests into the suite, in a trivial program
+    that compiles fine standalone).  Programs rarely repeat across modules,
+    so releasing the jit caches at module boundaries costs nothing and
+    keeps the accumulated compiler state below the crash threshold."""
+    yield
+    import jax
+
+    jax.clear_caches()

@@ -1,0 +1,34 @@
+"""Repo hygiene: fast checks that keep generated artifacts out of git.
+
+PR 5 committed nothing but `__pycache__/*.pyc` files; this gate makes that
+class of regression impossible to land again."""
+
+import subprocess
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _tracked_files():
+    out = subprocess.run(
+        ["git", "ls-files"], cwd=REPO, capture_output=True, text=True,
+        check=True,
+    )
+    return out.stdout.splitlines()
+
+
+def test_no_bytecode_tracked():
+    """No compiled-python artifacts may be tracked by git."""
+    bad = [
+        f for f in _tracked_files()
+        if f.endswith(".pyc") or "__pycache__" in f.split("/")
+        or ".pytest_cache" in f.split("/")
+    ]
+    assert bad == [], f"generated artifacts tracked by git: {bad}"
+
+
+def test_gitignore_covers_bytecode():
+    """The root .gitignore must keep covering the artifact classes."""
+    patterns = (REPO / ".gitignore").read_text().splitlines()
+    for needed in ("__pycache__/", "*.pyc", ".pytest_cache/"):
+        assert needed in patterns, f".gitignore is missing {needed!r}"
