@@ -1,0 +1,125 @@
+"""overload — graceful-degradation records for the serving tier.
+
+Sweeps offered load from ~1x to ~4x the engine's service capacity
+(capacity = decode slots / mean tokens-per-request on the synthetic
+decode's deterministic clock) and records, per load point, a BASELINE row
+(open-loop admission, the pre-overload engine: unbounded backlog, no
+shedding) next to a SHED row (OverloadController with per-class p99
+queueing targets).
+
+The acceptance evidence the paired rows carry: at 2x offered load the
+controlled run holds the highest SLO class's p99 queueing delay within its
+target while the shed rate absorbs the excess — the baseline run, by
+contrast, lets the backlog grow without bound and the tail degrade for
+everyone.  Shed/evicted counts are explicit in every record: a dropped
+request is an accounted decision, never a silent loss.
+"""
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.workloads.traces import open_loop_requests, poisson_arrival_counts
+
+# Per-class p99 queueing-delay targets (engine steps) for the controlled
+# rows — tight enough that a 2x storm trips degradation inside the sweep's
+# horizon.  Class 0 is the protected interactive tier.
+TARGETS = (8.0, 16.0, 32.0)
+MEAN_TOKENS = 8.5  # open_loop_requests new_tokens_range=(2, 16) mean
+
+
+def drive_overload(
+    load_factor: float,
+    control: bool,
+    steps: int = 96,
+    batch_size: int = 8,
+    sched_window: int = 4,
+    seed: int = 7,
+):
+    """One serving run at `load_factor` x capacity; returns summary + SLO
+    tails.  `control=False` reproduces the open-loop baseline engine."""
+    rate = load_factor * batch_size / MEAN_TOKENS
+    workload = open_loop_requests(
+        poisson_arrival_counts(steps, rate, seed=seed), seed=seed
+    )
+    total = sum(len(a) for a in workload)
+    eng = ServeEngine(None, None, EngineConfig(
+        batch_size=batch_size, max_seq=512, sched_window=sched_window,
+        forecast=True,
+        slo_targets=TARGETS if control else None,
+        backlog_cap=512,
+    ), seed=seed)
+    t0 = time.perf_counter()
+    # Bounded horizon: an uncontrolled overload run never drains — give it
+    # the arrival span plus a drain margin and stop.
+    summary = eng.run(workload, max_steps=steps * 3)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    lat = eng.latency_records()
+    tokens = float(lat["tokens"].sum())
+    shed = summary["shed"] + summary["evicted"]
+    out = {
+        "completed": summary["completed"],
+        "total": total,
+        "engine_steps": summary["steps"],
+        "us_per_token": wall_us / max(tokens, 1.0),
+        "shed": shed,
+        "shed_rate": shed / max(total, 1),
+        "pending": eng.scheduler.pending + len(eng._backlog),
+    }
+    for c in range(3):
+        q = lat["queueing_steps"][lat["slo"] == c]
+        out[f"p99_queue_c{c}"] = (
+            float(np.percentile(q, 99)) if q.size else float("nan")
+        )
+        out[f"completed_c{c}"] = int(q.size)
+    return out
+
+
+def run(quick: bool = False):
+    steps = 64 if quick else 96
+    for load in (1.0, 2.0, 4.0):
+        rows = {}
+        for control in (False, True):
+            tag = "shed" if control else "baseline"
+            r = drive_overload(load, control, steps=steps)
+            rows[tag] = r
+            emit(
+                f"overload/L{load:g}x/{tag}",
+                r["us_per_token"],
+                f"shed_rate={r['shed_rate']:.3f};"
+                f"p99_c0={r['p99_queue_c0']:.1f};"
+                f"p99_c1={r['p99_queue_c1']:.1f};"
+                f"p99_c2={r['p99_queue_c2']:.1f};"
+                f"completed={r['completed']}/{r['total']}",
+                load_factor=load,
+                control=control,
+                completed=r["completed"],
+                total=r["total"],
+                shed=r["shed"],
+                shed_rate=round(r["shed_rate"], 4),
+                target_c0=TARGETS[0],
+                **{
+                    f"p99_queue_c{c}": round(r[f"p99_queue_c{c}"], 2)
+                    for c in range(3)
+                },
+            )
+        if load >= 2.0:
+            # Under sustained overload the controller must engage.
+            r = rows["shed"]
+            assert r["shed_rate"] > 0.0, (
+                f"no shedding at {load:g}x offered load — the controller "
+                f"never engaged"
+            )
+        if load == 2.0:
+            # The tentpole's acceptance bar: at 2x the protected class's
+            # p99 holds within target while shed absorbs the excess.  (At
+            # 4x class 0 ALONE offers ~1x capacity — no admission policy
+            # can hold its target without preemption, so the bar is
+            # engagement, not the class-0 target.)
+            r = rows["shed"]
+            assert r["p99_queue_c0"] <= TARGETS[0], (
+                f"class-0 p99 {r['p99_queue_c0']:.1f} exceeds target "
+                f"{TARGETS[0]} at {load:g}x with control on"
+            )

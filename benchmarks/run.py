@@ -22,7 +22,7 @@ def main() -> None:
         "--only", default=None,
         help="comma list of: fig1,fig7,fig9,fig9_latency,fig9_window,fig10,"
              "fig12,classifier,roofline,kernels,rank_error,smoke,"
-             "workloads_sssp,workloads_des,serve_slo",
+             "workloads_sssp,workloads_des,serve_slo,overload",
     )
     ap.add_argument(
         "--schedule", default="all",
@@ -74,6 +74,7 @@ def main() -> None:
         fig12_cpu_adaptive,
         kernels_bench,
         multiq_rank_error,
+        overload,
         roofline,
         serve_slo,
         smoke,
@@ -98,6 +99,7 @@ def main() -> None:
         "workloads_sssp": workloads_bench.run_sssp,
         "workloads_des": workloads_bench.run_des,
         "serve_slo": serve_slo.run,
+        "overload": overload.run,
         "smoke": smoke.run,
     }
     if args.smoke:

@@ -35,6 +35,7 @@ def run(quick: bool = False):
              **workload_fields(w))
     _run_workloads()
     _run_serve()
+    _run_overload()
 
 
 def _run_serve():
@@ -50,6 +51,27 @@ def _run_serve():
          f"completed={r['completed']}",
          sched_window=4, forecast=True,
          tokens_per_step=round(r["tokens_per_step"], 4))
+
+
+def _run_overload():
+    """Seconds-scale probe of graceful degradation: a short 2x-overload
+    run with the controller on — keeps the shed/degrade dispatch path
+    under the `--smoke --check` 2x gate and re-asserts the protected
+    class's target on every smoke run."""
+    from benchmarks.overload import TARGETS, drive_overload
+
+    r = drive_overload(2.0, control=True, steps=24, batch_size=4)
+    assert r["p99_queue_c0"] <= TARGETS[0], (
+        f"smoke overload: class-0 p99 {r['p99_queue_c0']:.1f} exceeds "
+        f"target {TARGETS[0]}"
+    )
+    emit("smoke/overload", r["us_per_token"],
+         f"shed_rate={r['shed_rate']:.3f};"
+         f"p99_c0={r['p99_queue_c0']:.1f};"
+         f"completed={r['completed']}/{r['total']}",
+         load_factor=2.0, control=True,
+         shed_rate=round(r["shed_rate"], 4),
+         p99_queue_c0=round(r["p99_queue_c0"], 2))
 
 
 def _run_workloads():

@@ -1,0 +1,79 @@
+"""Structured error taxonomy for the PQ/serving stack.
+
+Every failure the overload/fault layer can surface is a typed exception
+with a stable machine-readable ``code`` — callers (the window-recovery
+path, the chaos tests, operational tooling) dispatch on the type or the
+code, never on message text.  The taxonomy is deliberately small:
+
+  PQError                    base — anything raised by this stack
+  ├─ InvariantViolation      a PQState invariant (I1–I6) failed a runtime
+  │                          validation pass (`SmartPQConfig.validate`)
+  ├─ TraceCorruptError       a Trace npz failed to load or to validate
+  │                          (truncated file, bad op codes, shape mismatch)
+  └─ WindowValidationError   a scheduler window tripped validation AND the
+                             conservative fallback retry (STRICT, forecast
+                             off) failed too — carries the violations of
+                             both attempts; the pre-window checkpoint has
+                             been restored when this is raised
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+
+class PQError(Exception):
+    """Base of the taxonomy; ``code`` is stable across releases."""
+
+    code = "PQ_ERROR"
+
+
+class InvariantViolation(PQError):
+    """One PQState invariant failed a runtime validation pass.
+
+    ``invariant`` is the state.py docstring's identifier ("I1".."I6"),
+    ``shard`` the offending shard (or -1 for whole-state violations)."""
+
+    code = "INVARIANT"
+
+    def __init__(self, invariant: str, shard: int, detail: str):
+        self.invariant = invariant
+        self.shard = int(shard)
+        self.detail = detail
+        super().__init__(f"{invariant} shard={shard}: {detail}")
+
+
+class TraceCorruptError(PQError):
+    """A Trace npz could not be loaded/validated (truncation, flipped
+    bytes, out-of-range op codes, inconsistent shapes)."""
+
+    code = "TRACE_CORRUPT"
+
+    def __init__(self, detail: str, path: Optional[str] = None):
+        self.detail = detail
+        self.path = path
+        super().__init__(
+            f"corrupt trace{f' {path}' if path else ''}: {detail}"
+        )
+
+
+class WindowValidationError(PQError):
+    """A scheduler window failed validation and so did its one-shot
+    conservative retry.  State has been rolled back to the pre-window
+    checkpoint before this is raised — the queue is NOT corrupted; the
+    window's work simply did not happen."""
+
+    code = "WINDOW_VALIDATION"
+
+    def __init__(
+        self,
+        first: List[InvariantViolation],
+        retry: List[InvariantViolation],
+    ):
+        self.first = list(first)
+        self.retry = list(retry)
+        super().__init__(
+            f"window validation failed and fallback retry failed too "
+            f"(first: {[str(v) for v in first]}; "
+            f"retry: {[str(v) for v in retry]})"
+        )

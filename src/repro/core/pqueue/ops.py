@@ -45,6 +45,36 @@ OP_NOP = 2
 
 _INT32_MIN = jnp.iinfo(jnp.int32).min
 
+# Largest float32 value that casts into the valid int32 key range without
+# overflow (float32 can't represent INF_KEY - 1 exactly; the nearest safely
+# representable bound below 2**31 is 2**31 - 256).
+_MAX_FINITE_KEY_F32 = float(2**31 - 256)
+
+
+def sanitize_keys(
+    keys: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Admission-boundary key sanitizer: (keys_int32, rejected_mask).
+
+    Floating-point key batches are the adversarial entry: IEEE ordering would
+    silently sort NaN/±inf keys *somewhere* (NaN placement is sort-
+    implementation-defined), poisoning the queue order.  Instead, non-finite
+    lanes are REJECTED — mapped to the inert `INF_KEY` sentinel (excluded
+    from every insert mask) and reported in the returned mask so callers
+    count them (`SmartPQStats.rejected`).  Finite float keys clamp into the
+    representable int32 key range and cast.  Integer batches pass through
+    unchanged with an all-False mask (INF_KEY is already the reserved
+    sentinel and negative keys are legal), so the hot int path costs
+    nothing — the dtype test is trace-time, never in the compiled graph.
+    """
+    if not jnp.issubdtype(keys.dtype, jnp.floating):
+        return keys.astype(jnp.int32), jnp.zeros(keys.shape, bool)
+    bad = ~jnp.isfinite(keys)
+    clamped = jnp.clip(
+        jnp.where(bad, 0.0, keys), float(_INT32_MIN), _MAX_FINITE_KEY_F32
+    ).astype(jnp.int32)
+    return jnp.where(bad, INF_KEY, clamped), bad
+
 
 def insert(
     state: PQState,

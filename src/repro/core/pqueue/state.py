@@ -215,10 +215,25 @@ def fill_state(
     return new_state
 
 
-def check_invariants(state: PQState) -> Tuple[bool, str]:
-    """Host-side invariant checker (I1, I2, I4, I5, I6).
-    Returns (ok, message)."""
+def invariant_violations(state: PQState, first_only: bool = True):
+    """Host-side runtime validation pass (I1, I2, I4, I5, I6).
+
+    Returns a list of `repro.core.errors.InvariantViolation` (empty when the
+    state is healthy).  This is the structured form behind both
+    `check_invariants` (the legacy (ok, msg) surface) and the
+    `SmartPQConfig.validate` guard tier: the serving scheduler runs it after
+    every validated window and keys its rollback/retry decision off the
+    result.  ``first_only`` stops at the first violation (the guard tier's
+    fast path); pass False for a full report."""
     import numpy as np
+
+    from repro.core.errors import InvariantViolation
+
+    out: list = []
+
+    def _bad(invariant: str, shard: int, detail: str) -> bool:
+        out.append(InvariantViolation(invariant, shard, detail))
+        return first_only
 
     hk = np.asarray(state.head_keys)
     hq = np.asarray(state.head_seq)
@@ -234,55 +249,82 @@ def check_invariants(state: PQState) -> Tuple[bool, str]:
     for s in range(S):
         row, n = hk[s], int(hsize[s])
         if not np.all(row[:-1] <= row[1:]):
-            return False, f"shard {s}: head keys not ascending (I1)"
+            if _bad("I1", s, f"shard {s}: head keys not ascending (I1)"):
+                return out
         if n < H and not np.all(row[n:] == INF_KEY):
-            return False, f"shard {s}: head padding not INF beyond size={n} (I2)"
+            if _bad("I2", s,
+                    f"shard {s}: head padding not INF beyond size={n} (I2)"):
+                return out
         if np.any(row[:n] == INF_KEY):
-            return False, f"shard {s}: INF sentinel inside head prefix (I2)"
+            if _bad("I2", s, f"shard {s}: INF sentinel inside head prefix (I2)"):
+                return out
         tn = int(tsize[s])
         t0 = int(tstart[s])
         if t0 < 0 or t0 + tn > T:
-            return False, (
-                f"shard {s}: tail window [{t0},{t0 + tn}) outside arena "
-                f"[0,{T}) (I5)"
-            )
+            if _bad("I5", s,
+                    f"shard {s}: tail window [{t0},{t0 + tn}) outside arena "
+                    f"[0,{T}) (I5)"):
+                return out
+            tn = 0  # window unreadable: skip the window-dependent checks
         tvalid = tk[s, t0 : t0 + tn]
         tqwin = tq[s, t0 : t0 + tn]
         if np.any(tvalid == INF_KEY):
-            return False, f"shard {s}: INF inside tail window (I5)"
+            if _bad("I5", s, f"shard {s}: INF inside tail window (I5)"):
+                return out
         if tn > 0 and n > 0:
             hmax, tmin = int(row[n - 1]), int(tvalid.min())
             if hmax > tmin:
-                return False, (
-                    f"shard {s}: head max {hmax} > tail min {tmin} (I4)"
-                )
+                if _bad("I4", s,
+                        f"shard {s}: head max {hmax} > tail min {tmin} (I4)"):
+                    return out
             # equal keys straddling the boundary: head seqs must be smaller
             at_h = hq[s, :n][row[:n] == tmin]
             at_t = tqwin[tvalid == tmin]
             if at_h.size and at_t.size and at_h.max() > at_t.min():
-                return False, f"shard {s}: boundary-tie seq inversion (I4)"
+                if _bad("I4", s,
+                        f"shard {s}: boundary-tie seq inversion (I4)"):
+                    return out
         # (an empty head over a non-empty tail is legal between steps — the
         # next delete's cond-guarded refill restores the hot tier lazily)
         # bucketed tail: the window's leading run is (key, seq)-lex sorted
         # with the seq column globally ascending (I6)
         srt = int(tsorted[s])
         if srt < 0 or srt > tn:
-            return False, f"shard {s}: tail_sorted {srt} outside [0,{tn}] (I6)"
+            if _bad("I6", s,
+                    f"shard {s}: tail_sorted {srt} outside [0,{tn}] (I6)"):
+                return out
+            srt = 0
         if srt > 1:
             rk_ = tvalid[:srt].astype(np.int64)
             rq_ = tqwin[:srt].astype(np.int64)
             if np.any(np.diff(rk_) < 0):
-                return False, f"shard {s}: tail sorted run keys descend (I6)"
+                if _bad("I6", s,
+                        f"shard {s}: tail sorted run keys descend (I6)"):
+                    return out
             if np.any(np.diff(rq_) < 0):
-                return False, f"shard {s}: tail sorted run seqs descend (I6)"
+                if _bad("I6", s,
+                        f"shard {s}: tail sorted run seqs descend (I6)"):
+                    return out
         # seq accounting: unique, < next_seq, and head equal-key runs ordered
         seqs = np.concatenate([hq[s, :n], tqwin])
         if seqs.size and (seqs.max() >= int(nseq[s]) or
                           np.unique(seqs).size != seqs.size):
-            return False, f"shard {s}: seq not unique/bounded (I5)"
+            if _bad("I5", s, f"shard {s}: seq not unique/bounded (I5)"):
+                return out
         for k in np.unique(row[:n][np.r_[False, row[1:n] == row[: n - 1]]]
                            if n > 1 else []):
             grp = hq[s, :n][row[:n] == k]
             if np.any(np.diff(grp) < 0):
-                return False, f"shard {s}: head equal-key seq disorder (I4)"
+                if _bad("I4", s,
+                        f"shard {s}: head equal-key seq disorder (I4)"):
+                    return out
+    return out
+
+
+def check_invariants(state: PQState) -> Tuple[bool, str]:
+    """Legacy (ok, message) surface over `invariant_violations` (I1, I2,
+    I4, I5, I6) — message is the first violation's detail."""
+    viols = invariant_violations(state, first_only=True)
+    if viols:
+        return False, viols[0].detail
     return True, "ok"

@@ -96,6 +96,7 @@ class SmartPQStats(NamedTuple):
     max_key: jnp.ndarray  # () int32 largest
     transitions: jnp.ndarray  # () int32 — mode flips (overhead accounting)
     eliminated: jnp.ndarray  # () int32 — pairs served by the pre-pass
+    rejected: jnp.ndarray  # () int32 — non-finite keys refused at admission
 
 
 class SmartPQCarry(NamedTuple):
@@ -134,6 +135,16 @@ class SmartPQConfig:
     # exact schedules (ops.py docstring), envelope-tightening for relaxed
     # ones.  Off -> the plain insert-then-schedule step, bit for bit.
     eliminate: bool = True
+    # Runtime guard tier: when True, validated callers (the serving
+    # scheduler's tick/tick_window, `traces.replay`) run the host-side
+    # invariant checker (`state.invariant_violations`) after every
+    # step/window and surface a structured `InvariantViolation` — the
+    # serving scheduler additionally checkpoints before the call and, on a
+    # trip, rolls back and retries once in a conservative fallback (STRICT
+    # schedule, elimination off) before raising the typed error.  Off
+    # (default) costs nothing; on costs one host sync + one state copy per
+    # validated call.
+    validate: bool = False
 
     def __post_init__(self):
         assert len(self.mode_schedules) == NUM_MODES, (
@@ -175,6 +186,7 @@ class SmartPQ:
             max_key=jnp.int32(0),
             transitions=jnp.int32(0),
             eliminated=jnp.int32(0),
+            rejected=jnp.int32(0),
         )
         return SmartPQCarry(
             make_state(c.num_shards, c.capacity, head_width=c.head_width),
@@ -201,13 +213,17 @@ class SmartPQ:
         rng: jax.Array,
         num_clients: jnp.ndarray | int | None = None,
         presorted: Tuple[jnp.ndarray, jnp.ndarray] | None = None,
+        mode_override: jnp.ndarray | None = None,
     ) -> Tuple[SmartPQCarry, DeleteResult]:
         """One bulk step: update stats -> (maybe) re-decide mode -> eliminate
         matched pairs -> apply the rest under the selected mode.  Pure
         function; jit/scan friendly.  `presorted` is the (sorted_keys,
         sorted_tags) insert log from `run_window`'s vectorized pre-pass —
         it is bit-identical to the in-step sort, just hoisted out of the
-        scan."""
+        scan.  `mode_override` (scalar int32, -1 = none) pins the mode for
+        this step regardless of the classifier — the serving tier's
+        graceful-degradation hook (force the relaxed MULTIQ mode under
+        overload); None compiles the exact pre-override graph."""
         c = self.config
         state, stats = carry
         B = ops.shape[0]
@@ -216,6 +232,18 @@ class SmartPQ:
         num_clients = jnp.asarray(num_clients, jnp.int32)
 
         ins_mask = ops == OP_INSERT
+        n_rejected = stats.rejected
+        if jnp.issubdtype(jnp.asarray(keys).dtype, jnp.floating):
+            # Admission-boundary sanitization: float key batches may carry
+            # NaN/±inf — reject (-> INF sentinel, counted) instead of
+            # letting IEEE sort semantics order them into the queue.  The
+            # dtype test is trace-time: integer batches compile the exact
+            # pre-sanitizer graph.
+            keys, bad_keys = O.sanitize_keys(keys)
+            n_rejected = n_rejected + jnp.sum(
+                bad_keys & ins_mask
+            ).astype(jnp.int32)
+            ins_mask = ins_mask & ~bad_keys
         b_ins = jnp.sum(ins_mask).astype(jnp.int32)
         b_del = jnp.sum(ops == OP_DELETE_MIN).astype(jnp.int32)
 
@@ -239,9 +267,18 @@ class SmartPQ:
             n_insert.astype(jnp.float32) / total_ops.astype(jnp.float32),
         )
         pred = tree_predict(self.packed, feats)
-        # NEUTRAL (and any future >= NUM_MODES sentinel) keeps the mode.
-        keep = (~do_decide) | (pred >= NUM_MODES)
+        # NEUTRAL (and any future >= NUM_MODES sentinel) keeps the mode; a
+        # NEGATIVE class (possible only from a corrupted packed tree) must
+        # not reach the switch either.
+        keep = (~do_decide) | (pred >= NUM_MODES) | (pred < 0)
         new_mode = jnp.where(keep, stats.mode, pred).astype(jnp.int32)
+        if mode_override is not None:
+            ov = jnp.asarray(mode_override, jnp.int32)
+            new_mode = jnp.where(ov >= 0, ov, new_mode)
+        # Hard clamp before `lax.switch`: an out-of-range branch index —
+        # whether from a corrupt tree label, a corrupt carry, or a bad
+        # override — degrades to the nearest valid mode instead of UB.
+        new_mode = jnp.clip(new_mode, 0, NUM_MODES - 1)
         transitions = stats.transitions + (new_mode != stats.mode).astype(jnp.int32)
         # Reset windowed op counters after each decision.
         n_insert = jnp.where(do_decide, 0, n_insert)
@@ -298,6 +335,7 @@ class SmartPQ:
             max_key=max_key,
             transitions=transitions,
             eliminated=stats.eliminated + n_elim,
+            rejected=n_rejected,
         )
         return SmartPQCarry(res.state, new_stats), res
 
@@ -319,6 +357,7 @@ class SmartPQ:
         vals: jnp.ndarray,  # (K, B)
         rngs: jax.Array,  # (K,) key array, one per step
         num_clients: jnp.ndarray | int | None = None,  # scalar or (K,)
+        mode_override: jnp.ndarray | int | None = None,  # scalar or (K,)
     ) -> Tuple[SmartPQCarry, WindowResult]:
         """K adaptive steps fused into one `lax.scan` — ONE device dispatch
         for K * B operations.  The body is exactly `step` (decisions, mode
@@ -326,7 +365,10 @@ class SmartPQ:
         `jit_step` calls with the same rngs; only the elimination pre-pass's
         operation-log sort is hoisted in front of the scan, where it
         vectorizes over the whole (K, B) window (Pallas match kernel on
-        TPU)."""
+        TPU).  Float key batches are sanitized once up front (non-finite
+        lanes rejected into `stats.rejected`, exactly as `step` would
+        per-batch); `mode_override` (scalar or (K,), -1 = none) pins the
+        mode per step — the overload controller's degradation hook."""
         c = self.config
         K, B = ops.shape
         if num_clients is None:
@@ -335,6 +377,15 @@ class SmartPQ:
             jnp.asarray(num_clients, jnp.int32), (K,)
         )
 
+        if jnp.issubdtype(jnp.asarray(keys).dtype, jnp.floating):
+            keys, bad = O.sanitize_keys(keys)
+            n_rej = jnp.sum(bad & (ops == OP_INSERT)).astype(jnp.int32)
+            carry = carry._replace(
+                stats=carry.stats._replace(
+                    rejected=carry.stats.rejected + n_rej
+                )
+            )
+
         if c.eliminate:
             ins = ops == OP_INSERT
             sk, stg = L.sort_op_log(jnp.where(ins, keys, INF_KEY))
@@ -342,15 +393,47 @@ class SmartPQ:
             sk = jnp.zeros((K, B), jnp.int32)
             stg = jnp.zeros((K, B), jnp.int32)
 
-        def body(cr, x):
-            o, k, v, r, d, sk_t, stg_t = x
-            cr2, res = self.step(cr, o, k, v, r, d, presorted=(sk_t, stg_t))
-            return cr2, (res.keys, res.vals, res.n_out, cr2.stats.mode)
+        if mode_override is None:
 
-        carry, (dk, dv, dn, dm) = jax.lax.scan(
-            body, carry, (ops, keys, vals, rngs, nc, sk, stg)
-        )
+            def body(cr, x):
+                o, k, v, r, d, sk_t, stg_t = x
+                cr2, res = self.step(
+                    cr, o, k, v, r, d, presorted=(sk_t, stg_t)
+                )
+                return cr2, (res.keys, res.vals, res.n_out, cr2.stats.mode)
+
+            xs = (ops, keys, vals, rngs, nc, sk, stg)
+        else:
+            ovs = jnp.broadcast_to(
+                jnp.asarray(mode_override, jnp.int32), (K,)
+            )
+
+            def body(cr, x):
+                o, k, v, r, d, sk_t, stg_t, ov = x
+                cr2, res = self.step(
+                    cr, o, k, v, r, d, presorted=(sk_t, stg_t),
+                    mode_override=ov,
+                )
+                return cr2, (res.keys, res.vals, res.n_out, cr2.stats.mode)
+
+            xs = (ops, keys, vals, rngs, nc, sk, stg, ovs)
+
+        carry, (dk, dv, dn, dm) = jax.lax.scan(body, carry, xs)
         return carry, WindowResult(dk, dv, dn, dm)
+
+    # -- the runtime guard tier -------------------------------------------------
+
+    def validate_carry(self, carry: SmartPQCarry) -> None:
+        """Run the host-side invariant checker over the carry's state and
+        raise the first structured `InvariantViolation` found.  This is the
+        `SmartPQConfig.validate` guard tier's primitive: one host sync per
+        call — validated serving windows and `traces.replay` use it; the
+        default (validate=False) path never does."""
+        from repro.core.pqueue.state import invariant_violations
+
+        viols = invariant_violations(carry.state, first_only=True)
+        if viols:
+            raise viols[0]
 
     # -- host-dispatch variant -------------------------------------------------
 

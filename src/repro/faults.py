@@ -1,0 +1,279 @@
+"""repro.faults — deterministic fault injection for the PQ/serving stack.
+
+SmartPQ's pitch is staying fast *and correct* "under all various contention
+scenarios"; this harness manufactures the scenarios the happy path never
+produces.  Every injector is a pure-ish transform behind a seed-driven
+`FaultSpec`, so a chaos test is just: build the healthy object, inject,
+drive it, and assert the contract — either the stack absorbs the fault
+(sanitization, clamping, backlog spill, window rollback) or it surfaces a
+typed error from `repro.core.errors`.  Silent corruption is the only
+forbidden outcome, and `tests/test_hygiene.py` asserts every registered
+injector is exercised by at least one test.
+
+Injector domains (heterogeneous by design — faults enter at different
+layers):
+
+  name                 injects into            adversarial condition
+  -------------------------------------------------------------------------
+  nonfinite_keys       workloads.traces.Trace  NaN/±inf priority keys on
+                                               insert lanes (float batch)
+  duplicate_keys       workloads.traces.Trace  equal-key storms across lanes
+  ring_overflow_storm  serve workload          arrivals compressed into
+                       (List[List[Request]])   bursts of >= ring capacity
+  corrupt_trace_npz    saved npz path          truncated / bit-flipped file
+  oob_tree_class       SmartPQ                 packed tree emitting classes
+                                               outside [0, NUM_CLASSES)
+  forecast_extreme     ServeEngine             service-time estimate pinned
+                                               to a pathological extreme
+  corrupt_state        SmartPQCarry            head tier scrambled (I1/I2
+                                               violations) — the rollback
+                                               drill's trigger
+  validator_tripwire   (none — returns a hook) validation reports a
+                                               synthetic violation N times,
+                                               then heals — exercises the
+                                               rollback+retry SUCCESS path
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core.errors import InvariantViolation
+from repro.core.pqueue.ops import OP_INSERT
+from repro.core.pqueue.state import INF_KEY
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One injection, fully determined by (kind, seed, rate, magnitude,
+    variant) — the same spec always produces the same fault."""
+
+    kind: str
+    seed: int = 0
+    rate: float = 0.25  # fraction of lanes/steps/bytes affected
+    magnitude: float = 1.0  # injector-specific scale (storm factor, trips)
+    variant: str = ""  # injector-specific discriminator
+
+
+INJECTORS: Dict[str, Callable] = {}
+
+
+def _injector(name: str):
+    def reg(fn):
+        INJECTORS[name] = fn
+        return fn
+
+    return reg
+
+
+def inject(target, spec: FaultSpec):
+    """Dispatch `target` through the injector `spec.kind` names."""
+    if spec.kind not in INJECTORS:
+        raise KeyError(
+            f"unknown fault kind {spec.kind!r}; registered: "
+            f"{sorted(INJECTORS)}"
+        )
+    return INJECTORS[spec.kind](target, spec)
+
+
+# ---------------------------------------------------------------------------
+# trace-level injectors
+# ---------------------------------------------------------------------------
+
+
+@_injector("nonfinite_keys")
+def nonfinite_keys(trace, spec: FaultSpec):
+    """Poison a `Trace` with non-finite float priority keys.
+
+    Returns an in-memory Trace whose ``keys`` array is float32 with a
+    `spec.rate` fraction of insert lanes set to NaN/+inf/-inf (cycled).
+    The admission boundary (`ops.sanitize_keys`, run by `SmartPQ.step` /
+    `run_window` on float batches) must reject exactly those lanes into
+    `stats.rejected` — IEEE sort order never reaches the queue."""
+    rng = np.random.default_rng(spec.seed)
+    keys = trace.keys.astype(np.float32)
+    ins = trace.ops == OP_INSERT
+    hit = ins & (rng.random(trace.ops.shape) < spec.rate)
+    fills = np.array([np.nan, np.inf, -np.inf], np.float32)
+    keys[hit] = fills[np.arange(int(hit.sum())) % 3]
+    return trace._replace(keys=keys)
+
+
+@_injector("duplicate_keys")
+def duplicate_keys(trace, spec: FaultSpec):
+    """Equal-key storm: a `spec.rate` fraction of insert lanes copy the key
+    of another (seed-chosen) insert lane of the same step.  Duplicates are
+    legal inputs — the per-shard seq tiebreak must keep the linearization
+    stable and every invariant intact; this injector exists to prove the
+    path at adversarial density, not to trigger an error."""
+    rng = np.random.default_rng(spec.seed)
+    keys = trace.keys.copy()
+    for t in range(trace.ops.shape[0]):
+        lanes = np.flatnonzero(trace.ops[t] == OP_INSERT)
+        if lanes.size < 2:
+            continue
+        victims = lanes[rng.random(lanes.size) < spec.rate]
+        if victims.size:
+            sources = rng.choice(lanes, victims.size)
+            keys[t, victims] = keys[t, sources]
+    return trace._replace(keys=keys)
+
+
+@_injector("corrupt_trace_npz")
+def corrupt_trace_npz(path, spec: FaultSpec):
+    """Damage a saved trace npz on disk: ``variant='truncate'`` keeps only
+    the leading `1 - rate` fraction of the file; ``variant='flip'`` XORs
+    random bytes in the middle.  `traces.load_trace` must surface a typed
+    `TraceCorruptError` — never a half-loaded trace."""
+    from pathlib import Path
+
+    rng = np.random.default_rng(spec.seed)
+    p = Path(path)
+    blob = bytearray(p.read_bytes())
+    if spec.variant == "flip":
+        n = max(int(len(blob) * spec.rate), 1)
+        for i in rng.integers(len(blob) // 4, len(blob), n):
+            blob[int(i)] ^= 0xFF
+        p.write_bytes(bytes(blob))
+    else:  # truncate
+        keep = max(int(len(blob) * (1.0 - spec.rate)), 16)
+        p.write_bytes(bytes(blob[:keep]))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# serving-workload injectors
+# ---------------------------------------------------------------------------
+
+
+@_injector("ring_overflow_storm")
+def ring_overflow_storm(workload, spec: FaultSpec):
+    """Compress an open-loop serve workload's arrivals into periodic storms.
+
+    Every `1/rate` steps, all requests that would have arrived over the
+    inter-storm span (scaled by `magnitude`, repeating requests with fresh
+    uids when magnitude > 1) land in ONE step — sized to blow past the
+    admission ring so the host backlog spill + bounded-backlog shed paths
+    run.  Steps between storms are empty."""
+    period = max(int(round(1.0 / max(spec.rate, 1e-6))), 1)
+    flat = [r for step in workload for r in step]
+    out: List[List] = [[] for _ in workload]
+    if not flat:
+        return out
+    uid_next = max(r.uid for r in flat) + 1
+    reps = max(int(round(spec.magnitude)), 1)
+    for t in range(0, len(workload), period):
+        lo = (t // period) * len(flat) // ((len(workload) + period - 1)
+                                           // period)
+        hi = (t // period + 1) * len(flat) // ((len(workload) + period - 1)
+                                               // period)
+        storm = []
+        for rep in range(reps):
+            for r in flat[lo:hi]:
+                if rep == 0:
+                    storm.append(dataclasses.replace(r, arrival_step=t))
+                else:
+                    storm.append(dataclasses.replace(
+                        r, uid=uid_next, arrival_step=t
+                    ))
+                    uid_next += 1
+        out[t] = storm
+    return out
+
+
+@_injector("forecast_extreme")
+def forecast_extreme(engine, spec: FaultSpec):
+    """Pin the engine's service-time EMA to a pathological extreme:
+    ``variant='low'`` (estimate ~0 -> the forecast over-admits maximally,
+    flooding the admit backlog), anything else -> `magnitude` steps
+    (under-admission starvation when huge).  Correctness must never depend
+    on the forecast — every request still completes."""
+    engine._service_est = 1e-6 if spec.variant == "low" else float(
+        max(spec.magnitude, 1.0)
+    )
+    return engine
+
+
+# ---------------------------------------------------------------------------
+# core-state / classifier injectors
+# ---------------------------------------------------------------------------
+
+
+@_injector("oob_tree_class")
+def oob_tree_class(pq, spec: FaultSpec):
+    """Corrupt the packed decision tree so inference emits classes outside
+    [0, NUM_CLASSES): alternating negative and huge labels on a `rate`
+    fraction of nodes (seeded).  The step's keep-rule + pre-switch clamp
+    must degrade this to a valid mode — never an out-of-range
+    `lax.switch` branch."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(spec.seed)
+    label = np.asarray(pq.packed.label).copy()
+    hit = rng.random(label.shape) < spec.rate
+    if not hit.any():
+        hit[rng.integers(label.size)] = True
+    n = int(hit.sum())
+    label[hit] = np.where(np.arange(n) % 2 == 0, -3, 1 << 20)
+    pq.packed = pq.packed._replace(label=jnp.asarray(label))
+    return pq
+
+
+@_injector("corrupt_state")
+def corrupt_state(carry, spec: FaultSpec):
+    """Scramble one shard's hot head tier in a `SmartPQCarry`: reverse the
+    head prefix when the shard is non-empty (breaks I1's ascending order),
+    or plant a finite key in the INF padding of an empty shard (breaks I2).
+    The `SmartPQConfig.validate` guard tier must detect it; the scheduler's
+    window recovery must roll back and — since the corruption predates the
+    checkpoint — surface a typed `WindowValidationError`."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(spec.seed)
+    hk = np.asarray(carry.state.head_keys).copy()
+    hs = np.asarray(carry.state.head_size)
+    s = int(rng.integers(hk.shape[0]))
+    n = int(hs[s])
+    if n >= 2:
+        hk[s, :n] = hk[s, :n][::-1]
+        if hk[s, 0] == hk[s, n - 1]:  # all-equal prefix: force descent
+            hk[s, 0] = hk[s, n - 1] + 1
+    else:
+        hk[s, hk.shape[1] - 1] = 5  # finite key inside INF padding (I2)
+    return carry._replace(
+        state=dataclasses.replace(carry.state, head_keys=jnp.asarray(hk))
+    )
+
+
+@_injector("validator_tripwire")
+def validator_tripwire(_target, spec: FaultSpec):
+    """Return a validation hook that reports a synthetic violation for the
+    first `int(magnitude)` calls, then heals.  Wired into
+    `SmartPQScheduler.validate_hook`, it deterministically exercises the
+    checkpoint -> rollback -> conservative-retry -> SUCCESS path (a real
+    corruption predating the checkpoint can only exercise the error
+    path)."""
+    trips = max(int(spec.magnitude), 1)
+    calls = {"n": 0}
+
+    def hook(_state) -> List[InvariantViolation]:
+        calls["n"] += 1
+        if calls["n"] <= trips:
+            return [InvariantViolation(
+                "I0", -1,
+                f"injected tripwire ({calls['n']}/{trips})",
+            )]
+        return []
+
+    return hook
+
+
+__all__ = [
+    "FaultSpec", "INJECTORS", "inject",
+    "nonfinite_keys", "duplicate_keys", "corrupt_trace_npz",
+    "ring_overflow_storm", "forecast_extreme", "oob_tree_class",
+    "corrupt_state", "validator_tripwire",
+]

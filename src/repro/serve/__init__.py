@@ -1,2 +1,11 @@
-from repro.serve.scheduler import SmartPQScheduler, Request  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    Request,
+    SchedulerCheckpoint,
+    SchedulerStats,
+    SmartPQScheduler,
+)
 from repro.serve.engine import ServeEngine, EngineConfig  # noqa: F401
+from repro.serve.overload import (  # noqa: F401
+    OverloadConfig,
+    OverloadController,
+)

@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +63,19 @@ class EngineConfig:
     # the forecast as an expected-completions term.  0 trusts `remaining`
     # alone (exact for synthetic decode, conservative for real models).
     eos_hazard: float = 0.0
+    # Overload control: per-SLO-class p99 queueing-delay targets (engine
+    # steps).  None (default) -> open-loop admission, exactly the
+    # pre-overload engine.  Set -> an OverloadController gates admission
+    # (shed/degrade low classes, cap backlogs) so the highest class's p99
+    # holds under sustained overload.
+    slo_targets: Optional[Tuple[float, ...]] = None
+    # Host backlog bound (scheduler arrival backlog eviction cap + engine
+    # admit-backlog requeue threshold) — only enforced with control on.
+    backlog_cap: int = 4096
+    # Arm the PQ's runtime guard tier (SmartPQConfig.validate): every
+    # scheduler window validates invariants against a pre-window
+    # checkpoint, rolling back + retrying conservatively on violation.
+    validate: bool = False
 
 
 class ServeEngine:
@@ -86,7 +99,28 @@ class ServeEngine:
             self.model = None
             self.caches = ()
             self._decode = jax.jit(_synthetic_decode)
-        self.scheduler = SmartPQScheduler(batch_size=64, seed=seed)
+        overload = None
+        if engine_cfg.slo_targets is not None:
+            from repro.serve.overload import OverloadConfig, OverloadController
+
+            overload = OverloadController(OverloadConfig(
+                targets=tuple(engine_cfg.slo_targets),
+                backlog_cap=engine_cfg.backlog_cap,
+            ))
+        self.overload = overload
+        pq_config = None
+        if engine_cfg.validate:
+            from repro.core.smartpq import MODE_AWARE, SmartPQConfig
+
+            # The scheduler's default queue geometry, with the runtime
+            # guard tier armed.
+            pq_config = SmartPQConfig(
+                num_shards=16, capacity=8192, npods=2, decision_interval=4,
+                initial_mode=MODE_AWARE, validate=True,
+            )
+        self.scheduler = SmartPQScheduler(
+            batch_size=64, seed=seed, pq_config=pq_config, overload=overload,
+        )
         self.tokens = jnp.zeros((B, 1), jnp.int32)
         self.lengths = jnp.zeros((B,), jnp.int32)
         self.active: List[Optional[Request]] = [None] * B
@@ -97,6 +131,7 @@ class ServeEngine:
         self.arrival_step: Dict[int, int] = {}
         self.admit_step: Dict[int, int] = {}
         self.done_step: Dict[int, int] = {}
+        self.slo: Dict[int, int] = {}  # uid -> SLO class (set at arrival)
         # EMA of observed service times (tokens emitted per completed
         # request) — the forecast's slot-recycling horizon.  The prior only
         # matters for the first window; completions tighten it online.
@@ -112,6 +147,19 @@ class ServeEngine:
         reqs = self._backlog + list(reqs)
         slots = self._free_slots()
         self._backlog = reqs[len(slots):]
+        if (
+            self.overload is not None
+            and len(self._backlog) > self.ecfg.backlog_cap
+        ):
+            # The admit backlog is NOT priority-ordered — a forecast gone
+            # wrong (see faults.forecast_extreme) could grow it without
+            # bound and serve it FIFO, inverting SLO order.  Overflow goes
+            # BACK to the priority queue instead of being dropped: already-
+            # admitted work is never lost, and it re-dispatches in SLO
+            # order when slots actually free.
+            overflow = self._backlog[self.ecfg.backlog_cap:]
+            del self._backlog[self.ecfg.backlog_cap:]
+            self.scheduler.requeue(overflow)
         for slot, req in zip(slots, reqs):
             # Prompt "prefill" for the example engine: teacher-forced decode
             # of the prompt tokens (prompt = synthetic [uid-derived] tokens).
@@ -128,6 +176,7 @@ class ServeEngine:
         for r in arrivals:
             r.arrival_step = step
             self.arrival_step[r.uid] = step
+            self.slo[r.uid] = r.slo_class
 
     # -- slot-availability forecast ---------------------------------------------
 
@@ -251,12 +300,16 @@ class ServeEngine:
                 and all(r is None for r in self.active)
             ):
                 break
+        sst = self.scheduler.stats
         return {
             "steps": step,
             "completed": completed,
             "wall_s": time.time() - t0,
-            "mode_trace": self.scheduler.stats.mode_trace,
+            "mode_trace": sst.mode_trace,
             "pq_transitions": int(self.scheduler.carry.stats.transitions),
+            "shed": sst.shed,
+            "evicted": sst.evicted,
+            "recovered_windows": sst.recovered_windows,
         }
 
     # -- SLO accounting ----------------------------------------------------------
@@ -280,6 +333,7 @@ class ServeEngine:
         )
         return {
             "uids": np.array(uids, np.int64),
+            "slo": np.array([self.slo.get(u, 1) for u in uids], np.int64),
             "queueing_steps": queueing,
             "e2e_steps": e2e,
             "per_token_steps": e2e / tokens,

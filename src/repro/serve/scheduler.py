@@ -43,20 +43,46 @@ Two dispatch granularities:
                 waits in a host-side arrival backlog — nothing is dropped
                 (tick() used to silently drop arrivals beyond the lane
                 width; both paths now spill to the backlog).
+
+Overload hardening (opt-in, `overload=` / `SmartPQConfig.validate`):
+
+  admission     an `OverloadController` filters arrivals BEFORE submit —
+                SHEDDING classes are rejected with explicit per-class
+                accounting (`stats.shed`), and the arrival backlog is
+                hard-capped (`stats.evicted`), so host memory stays bounded
+                under any storm.  The controller's mode vote threads into
+                the device step as `mode_override` (-1 = classifier rules),
+                forcing relaxed MULTIQ while best-effort classes drown.
+  recovery      with the guard tier armed (pq validate flag or a
+                `validate_hook`), every tick/window runs against a
+                pre-window checkpoint (deep-copied carry + host mirrors —
+                the copy MUST precede the donated device call).  A window
+                that trips validation rolls back and retries ONCE on a
+                conservative fallback queue (all-STRICT schedules,
+                elimination off, same state layout); if the retry trips
+                too, the checkpoint is restored again and a typed
+                `WindowValidationError` surfaces — the queue is never left
+                corrupt, the window's work simply did not happen.  The
+                checkpoint restores rng and step too, so a recovered
+                window replays the exact subkey stream.
 """
 
 from __future__ import annotations
 
+import copy
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import InvariantViolation, WindowValidationError
 from repro.core.pqueue.state import INF_KEY
 from repro.core.smartpq import SmartPQ, SmartPQConfig
 from repro.core.pqueue.ops import OP_DELETE_MIN, OP_INSERT
+from repro.serve.overload import OverloadConfig, OverloadController
 
 
 @dataclasses.dataclass
@@ -82,7 +108,29 @@ class SchedulerStats:
     inserted: int = 0
     dispatched: int = 0
     rejected: int = 0
+    shed: int = 0  # refused at admission by the overload controller
+    evicted: int = 0  # dropped from the backlog by the cap
+    recovered_windows: int = 0  # rolled back + fallback retry succeeded
+    failed_windows: int = 0  # rolled back twice -> WindowValidationError
     mode_trace: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class SchedulerCheckpoint:
+    """Everything a window can mutate, deep enough to restore twice.
+
+    `carry` holds its own buffer copies (the live carry is DONATED to the
+    device step — checkpointing after the call would capture deleted
+    buffers), and `restore` re-copies on the way out so one checkpoint
+    survives rollback -> retry -> rollback."""
+
+    carry: object
+    rng: jax.Array
+    step: int
+    backlog: List[Request]
+    requests: Dict[int, Request]
+    stats: SchedulerStats
+    overload: Optional[OverloadController]
 
 
 class SmartPQScheduler:
@@ -94,6 +142,10 @@ class SmartPQScheduler:
         pq_config: Optional[SmartPQConfig] = None,
         seed: int = 0,
         ring_capacity: int = 1024,
+        overload: OverloadController | OverloadConfig | None = None,
+        validate_hook: Optional[
+            Callable[[object], List[InvariantViolation]]
+        ] = None,
     ):
         from repro.core.smartpq import MODE_AWARE
 
@@ -111,16 +163,36 @@ class SmartPQScheduler:
         ))
         self.carry = self.pq.init()
         self._step_fn = self.pq.jit_step  # donated carry: zero-copy steps
-        self._window_fn = jax.jit(self._window_scan, donate_argnums=(0,))
+        self._window_fn = jax.jit(
+            functools.partial(self._window_scan, self.pq),
+            donate_argnums=(0,),
+        )
         self._requests: Dict[int, Request] = {}
         self._arrival_backlog: List[Request] = []  # submitted, not yet inserted
         self._rng = jax.random.key(seed)
         self._step = 0
         self.stats = SchedulerStats()
+        if isinstance(overload, OverloadConfig):
+            overload = OverloadController(overload)
+        self.overload = overload
+        # Extra validation hook (state -> violations); chaos tests use it to
+        # trip the recovery path deterministically.  Guarded execution is on
+        # iff the pq's validate flag or a hook is set.
+        self.validate_hook = validate_hook
+        self._fb: Optional[SmartPQ] = None  # lazy conservative fallback
 
     def submit(self, reqs: List[Request]):
         for r in reqs:
             self._requests[r.uid] = r
+
+    def requeue(self, reqs: List[Request]) -> None:
+        """Return dispatched-but-unserved requests to the queue (via the
+        FIFO arrival backlog, so they re-insert ahead of newer arrivals
+        with their original arrival step — aging keeps accruing).  The
+        engine's admit-backlog relief valve: bounded backlogs without
+        dropping work that already passed the shed filter."""
+        self.submit(reqs)
+        self._arrival_backlog.extend(reqs)
 
     def _pack_tick(self, arrivals: List[Request], n_dispatch: int):
         """Build one tick's (ops, keys, vals) lane vectors + arrival count."""
@@ -142,11 +214,149 @@ class SmartPQScheduler:
 
     def _collect(self, out_keys: np.ndarray, out_vals: np.ndarray,
                  n_out: int) -> List[Request]:
-        return [
-            self._requests[int(v)]
-            for k, v in zip(out_keys[:n_out], out_vals[:n_out])
-            if k < INF_KEY and int(v) in self._requests
-        ]
+        # Dispatched descriptors leave the host map — `_requests` holds
+        # in-flight requests only, so host memory tracks queue depth, not
+        # request history (asserted by the chaos memory-bound test).
+        out = []
+        for k, v in zip(out_keys[:n_out], out_vals[:n_out]):
+            if k < INF_KEY:
+                r = self._requests.pop(int(v), None)
+                if r is not None:
+                    out.append(r)
+        return out
+
+    # -- overload hooks --------------------------------------------------------
+
+    def _admit(self, arrivals: List[Request]) -> List[Request]:
+        """Admission filter: SHEDDING classes are rejected here, before the
+        requests ever reach `_requests` — an explicit, counted drop."""
+        if self.overload is None:
+            return arrivals
+        kept, shed = self.overload.admit(arrivals)
+        self.stats.shed += len(shed)
+        return kept
+
+    def _enforce_backlog_cap(self) -> None:
+        if self.overload is None:
+            return
+        evicted = self.overload.evict(self._arrival_backlog)
+        for r in evicted:
+            self._requests.pop(r.uid, None)
+        self.stats.evicted += len(evicted)
+
+    def _mode_override(self) -> int:
+        return self.overload.mode_override() if self.overload else -1
+
+    def _observe(
+        self, dispatched: List[Tuple[Request, int]], step: int
+    ) -> None:
+        """Feed the controller: completed queueing delays (each request
+        stamped with its actual dispatch tick) + censored waits of
+        everything still awaiting dispatch, then run the control law.
+
+        The censored pass walks `_requests` — on-device queue AND host
+        backlog — not just the backlog: under hard overload a starved
+        class stops completing entirely, so its (stale) completed samples
+        read as healthy while hundreds of its requests age invisibly
+        inside the device queue.  `_collect` pops dispatched uids, so the
+        walk is O(requests in flight), bounded by queue capacity."""
+        if self.overload is None:
+            return
+        for r, at in dispatched:
+            self.overload.observe(r.slo_class, at - r.arrival_step)
+        for r in self._requests.values():
+            self.overload.observe_pending(r.slo_class, step - r.arrival_step)
+        self.overload.update()
+
+    # -- guarded execution: checkpoint / validate / rollback -------------------
+
+    @property
+    def _guard_active(self) -> bool:
+        return self.pq.config.validate or self.validate_hook is not None
+
+    def checkpoint(self) -> SchedulerCheckpoint:
+        return SchedulerCheckpoint(
+            carry=jax.tree.map(jnp.copy, self.carry),
+            rng=self._rng,
+            step=self._step,
+            backlog=list(self._arrival_backlog),
+            requests=dict(self._requests),
+            stats=dataclasses.replace(
+                self.stats, mode_trace=list(self.stats.mode_trace)
+            ),
+            overload=copy.deepcopy(self.overload),
+        )
+
+    def restore(self, ckpt: SchedulerCheckpoint) -> None:
+        # Re-copy the carry: the restored buffers will be donated to the
+        # next device call, and the checkpoint must survive a second
+        # restore (rollback -> retry -> rollback).
+        self.carry = jax.tree.map(jnp.copy, ckpt.carry)
+        self._rng = ckpt.rng
+        self._step = ckpt.step
+        self._arrival_backlog = list(ckpt.backlog)
+        self._requests = dict(ckpt.requests)
+        self.stats = dataclasses.replace(
+            ckpt.stats, mode_trace=list(ckpt.stats.mode_trace)
+        )
+        if ckpt.overload is not None and self.overload is not None:
+            # In-place: the engine may hold a reference to the controller.
+            self.overload.__dict__.update(
+                copy.deepcopy(ckpt.overload).__dict__
+            )
+
+    def _validate(self) -> List[InvariantViolation]:
+        viols: List[InvariantViolation] = []
+        if self.validate_hook is not None:
+            viols.extend(self.validate_hook(self.carry.state) or [])
+        if self.pq.config.validate:
+            from repro.core.pqueue.state import invariant_violations
+
+            viols.extend(invariant_violations(self.carry.state))
+        return viols
+
+    def _fallback_pq(self) -> SmartPQ:
+        """Conservative retry queue: every mode pinned to the exact STRICT
+        schedule, elimination off — the least clever, most checkable
+        configuration that still shares the PQState layout (so the rolled-
+        back carry threads straight through)."""
+        if self._fb is None:
+            from repro.core.pqueue.schedules import Schedule
+            from repro.core.smartpq import NUM_MODES
+
+            cfg = dataclasses.replace(
+                self.pq.config,
+                mode_schedules=(Schedule.STRICT_FLAT,) * NUM_MODES,
+                eliminate=False,
+            )
+            self._fb = SmartPQ(cfg)
+            self._fb_step_fn = self._fb.jit_step
+            self._fb_window_fn = jax.jit(
+                functools.partial(self._window_scan, self._fb),
+                donate_argnums=(0,),
+            )
+        return self._fb
+
+    def _run_guarded(self, run):
+        """Execute `run(fallback)` under the window-recovery contract."""
+        if not self._guard_active:
+            return run(False)
+        ckpt = self.checkpoint()
+        out = run(False)
+        viols = self._validate()
+        if not viols:
+            return out
+        self.restore(ckpt)
+        out = run(True)
+        retry = self._validate()
+        if retry:
+            self.restore(ckpt)
+            self.stats.failed_windows += 1
+            raise WindowValidationError(viols, retry)
+        self.stats.recovered_windows += 1
+        return out
+
+    # -- per-step path ---------------------------------------------------------
 
     def tick(self, arrivals: List[Request], n_dispatch: int) -> List[Request]:
         """One scheduler step: enqueue arrivals, dequeue up to n_dispatch.
@@ -154,20 +364,36 @@ class SmartPQScheduler:
         Arrivals beyond the lane width join the FIFO arrival backlog and
         insert on later ticks (ahead of newer arrivals) — the same
         spill-don't-drop contract the windowed admission ring implements."""
+        arrivals = list(arrivals)
+        return self._run_guarded(
+            lambda fb: self._tick_impl(arrivals, n_dispatch, fb)
+        )
+
+    def _tick_impl(
+        self, arrivals: List[Request], n_dispatch: int, fallback: bool
+    ) -> List[Request]:
+        arrivals = self._admit(arrivals)
         self.submit(arrivals)
-        arrivals = self._arrival_backlog + list(arrivals)
-        na = min(len(arrivals), self.batch)
-        self._arrival_backlog = arrivals[na:]
-        ops, keys, vals, na = self._pack_tick(arrivals[:na], n_dispatch)
+        queue = self._arrival_backlog + list(arrivals)
+        na = min(len(queue), self.batch)
+        self._arrival_backlog = queue[na:]
+        self._enforce_backlog_cap()
+        ops, keys, vals, na = self._pack_tick(queue[:na], n_dispatch)
+        ov = jnp.int32(self._mode_override())
         self._rng, sub = jax.random.split(self._rng)
 
-        self.carry, res = self._step_fn(
+        step_fn = self._step_fn
+        if fallback:
+            self._fallback_pq()
+            step_fn = self._fb_step_fn
+        self.carry, res = step_fn(
             self.carry,
             jnp.asarray(ops),
             jnp.asarray(keys),
             jnp.asarray(vals),
             sub,
             512,
+            mode_override=ov,
         )
         self._step += 1
         dispatched = self._collect(
@@ -176,11 +402,14 @@ class SmartPQScheduler:
         self.stats.inserted += na
         self.stats.dispatched += len(dispatched)
         self.stats.mode_trace.append(int(self.carry.stats.mode))
+        self._observe([(r, self._step) for r in dispatched], self._step)
         return dispatched
 
     # -- fused windowed admission ---------------------------------------------
 
-    def _window_scan(self, carry, ring, avail_by_tick, budgets, step0, rngs):
+    def _window_scan(
+        self, pq, carry, ring, avail_by_tick, budgets, step0, rngs, mode_ov
+    ):
         """K scheduler ticks as ONE fused lax.scan over `SmartPQ.step`.
 
         `ring` is the admission ring: fixed-capacity (slo, prompt_len,
@@ -191,6 +420,9 @@ class SmartPQScheduler:
         — and spends that tick's dispatch budget on delete lanes.  The
         consumed count threads through the scan, so a burst that overflows
         one tick's lanes admits on the following ticks of the SAME window.
+        `pq` is bound by functools.partial (main queue or the conservative
+        fallback); `mode_ov` is the window's mode-override scalar (-1 =
+        classifier rules), identical at every tick of the window.
         """
         slo, plen, astep, uid = ring
         B = self.batch
@@ -214,7 +446,9 @@ class SmartPQScheduler:
             ).astype(jnp.int32)
             keys = jnp.where(is_arr, pkey, INF_KEY).astype(jnp.int32)
             vals = jnp.where(is_arr, uid[idx], 0).astype(jnp.int32)
-            cr2, res = self.pq.step(cr, ops, keys, vals, rng, 512)
+            cr2, res = pq.step(
+                cr, ops, keys, vals, rng, 512, mode_override=mode_ov
+            )
             return (cr2, head + n_arr), (
                 res.keys, res.vals, res.n_out, cr2.stats.mode
             )
@@ -243,7 +477,10 @@ class SmartPQScheduler:
         K lists.  Returns the per-tick dispatch lists — bit-identical to K
         sequential `tick(arrivals[t], budgets[t])` calls (same lanes, same
         rng stream, same mode trace).  Ring overflow stays in the host
-        backlog for the next window; nothing is dropped."""
+        backlog for the next window; nothing is dropped without accounting:
+        with an overload controller attached, SHEDDING-class arrivals are
+        refused at admission (stats.shed) and the backlog cap evicts
+        (stats.evicted) — otherwise the backlog is unbounded as before."""
         K = len(arrivals)
         if K == 0:
             return []
@@ -252,6 +489,19 @@ class SmartPQScheduler:
                 f"budgets must give one dispatch cap per tick: "
                 f"{len(budgets)} budgets for {K} ticks"
             )
+        arrivals = [list(reqs) for reqs in arrivals]
+        return self._run_guarded(
+            lambda fb: self._window_impl(arrivals, budgets, fb)
+        )
+
+    def _window_impl(
+        self,
+        arrivals: List[List[Request]],
+        budgets: Sequence[int],
+        fallback: bool,
+    ) -> List[List[Request]]:
+        K = len(arrivals)
+        arrivals = [self._admit(reqs) for reqs in arrivals]
         for reqs in arrivals:
             self.submit(reqs)
 
@@ -280,6 +530,7 @@ class SmartPQScheduler:
             avail_tick, np.arange(K), side="right"
         ).astype(np.int32)
 
+        ov = jnp.int32(self._mode_override())
         step0 = self._step
         subs = []
         for _ in range(K):
@@ -290,7 +541,11 @@ class SmartPQScheduler:
             self._rng, sub = jax.random.split(self._rng)
             subs.append(sub)
 
-        self.carry, head, dk, dv, dn, dm = self._window_fn(
+        window_fn = self._window_fn
+        if fallback:
+            self._fallback_pq()
+            window_fn = self._fb_window_fn
+        self.carry, head, dk, dv, dn, dm = window_fn(
             self.carry,
             (jnp.asarray(slo), jnp.asarray(plen), jnp.asarray(astep),
              jnp.asarray(uid)),
@@ -298,21 +553,26 @@ class SmartPQScheduler:
             jnp.asarray(np.asarray(budgets, np.int32)),
             jnp.int32(step0),
             jnp.stack(subs),
+            ov,
         )
         consumed = int(head)
         self._arrival_backlog = [r for r, _ in pending[consumed:]]
+        self._enforce_backlog_cap()
 
         out_k = np.asarray(dk)
         out_v = np.asarray(dv)
         n_out = np.asarray(dn)
         modes = np.asarray(dm)
         dispatched_per_tick = []
+        all_dispatched: List[Tuple[Request, int]] = []
         for t in range(K):
             d = self._collect(out_k[t], out_v[t], int(n_out[t]))
             dispatched_per_tick.append(d)
+            all_dispatched.extend((r, step0 + t + 1) for r in d)
             self.stats.dispatched += len(d)
             self.stats.mode_trace.append(int(modes[t]))
         self.stats.inserted += consumed
+        self._observe(all_dispatched, self._step)
         return dispatched_per_tick
 
     @property

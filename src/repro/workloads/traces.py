@@ -38,6 +38,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.errors import TraceCorruptError
 from repro.core.pqueue import ops as O
 from repro.core.pqueue.ops import OP_DELETE_MIN, OP_INSERT, OP_NOP
 from repro.core.pqueue.state import INF_KEY
@@ -104,12 +105,57 @@ def save_trace(path, trace: Trace) -> None:
 
 
 def load_trace(path) -> Trace:
-    with np.load(Path(path)) as z:
-        return Trace(
-            ops=z["ops"], keys=z["keys"], vals=z["vals"],
-            num_clients=z["num_clients"], seed=int(z["seed"]),
-            init_keys=z["init_keys"], init_vals=z["init_vals"],
-        )
+    """Load + validate an npz trace.  A damaged file (truncation, flipped
+    bytes, missing arrays — see `faults.corrupt_trace_npz`) surfaces a
+    typed `TraceCorruptError`; a half-loaded trace is never returned."""
+    try:
+        with np.load(Path(path)) as z:
+            trace = Trace(
+                ops=z["ops"], keys=z["keys"], vals=z["vals"],
+                num_clients=z["num_clients"], seed=int(z["seed"]),
+                init_keys=z["init_keys"], init_vals=z["init_vals"],
+            )
+    except TraceCorruptError:
+        raise
+    except Exception as e:  # zipfile/np errors are implementation details
+        raise TraceCorruptError(
+            f"unreadable npz ({type(e).__name__}: {e})", path=str(path)
+        ) from e
+    validate_trace(trace, path=str(path))
+    return trace
+
+
+def validate_trace(trace: Trace, path: str | None = None) -> Trace:
+    """Structural validation of a trace: consistent (K, B) shapes, integral
+    op codes restricted to {INSERT, DELETE_MIN, NOP}, matched pre-fill
+    arrays.  Raises `TraceCorruptError` — used by `load_trace` on every
+    deserialization and available to callers ingesting foreign traces."""
+
+    def bad(detail: str):
+        raise TraceCorruptError(detail, path=path)
+
+    ops = np.asarray(trace.ops)
+    if ops.ndim != 2:
+        bad(f"ops must be (K, B); got shape {ops.shape}")
+    if not np.issubdtype(ops.dtype, np.integer):
+        bad(f"ops dtype must be integral; got {ops.dtype}")
+    for name in ("keys", "vals"):
+        arr = np.asarray(getattr(trace, name))
+        if arr.shape != ops.shape:
+            bad(f"{name} shape {arr.shape} != ops shape {ops.shape}")
+    nc = np.asarray(trace.num_clients)
+    if nc.shape != (ops.shape[0],):
+        bad(f"num_clients shape {nc.shape} != ({ops.shape[0]},)")
+    legal = np.isin(ops, (OP_INSERT, OP_DELETE_MIN, OP_NOP))
+    if not legal.all():
+        t, b = np.argwhere(~legal)[0]
+        bad(f"illegal op code {int(ops[t, b])} at step {int(t)} lane "
+            f"{int(b)}")
+    if np.asarray(trace.init_keys).shape != np.asarray(
+        trace.init_vals
+    ).shape:
+        bad("init_keys / init_vals length mismatch")
+    return trace
 
 
 def replay(pq, trace: Trace, carry=None):
@@ -127,11 +173,17 @@ def replay(pq, trace: Trace, carry=None):
             carry = carry._replace(
                 state=prefill(carry.state, trace.init_keys, trace.init_vals)
             )
-    return pq.jit_run_window(
+    carry, res = pq.jit_run_window(
         carry, jnp.asarray(trace.ops), jnp.asarray(trace.keys),
         jnp.asarray(trace.vals), trace_rngs(trace),
         jnp.asarray(trace.num_clients),
     )
+    if pq.config.validate:
+        # Guard tier: one post-window invariant sweep (raises a typed
+        # InvariantViolation) — the replay analogue of the scheduler's
+        # validated windows.
+        pq.validate_carry(carry)
+    return carry, res
 
 
 # ---------------------------------------------------------------------------

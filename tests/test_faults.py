@@ -1,0 +1,271 @@
+"""Chaos tests: every `repro.faults` injector driven through the stack.
+
+The contract under test is uniform — an injected fault is either ABSORBED
+(sanitized, clamped, spilled to the backlog, or rolled back and retried) or
+it SURFACES as a typed error from `repro.core.errors`.  Silent corruption
+is the only forbidden outcome.  `tests/test_hygiene.py` asserts every name
+in `faults.INJECTORS` appears here.
+
+All tests use deliberately small queue geometries: each `SmartPQ` instance
+carries its own jit cache, so small shards/capacities keep compile time in
+check without changing any code path.
+"""
+
+import dataclasses
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.errors import (  # noqa: E402
+    TraceCorruptError,
+    WindowValidationError,
+)
+from repro.core.pqueue.ops import OP_INSERT  # noqa: E402
+from repro.core.smartpq import (  # noqa: E402
+    MODE_AWARE,
+    NUM_MODES,
+    SmartPQ,
+    SmartPQConfig,
+)
+from repro.faults import FaultSpec, inject  # noqa: E402
+from repro.serve.engine import EngineConfig, ServeEngine  # noqa: E402
+from repro.serve.overload import OverloadConfig  # noqa: E402
+from repro.serve.scheduler import Request, SmartPQScheduler  # noqa: E402
+from repro.workloads.traces import (  # noqa: E402
+    load_trace,
+    open_loop_requests,
+    phased_trace,
+    poisson_arrival_counts,
+    replay,
+    save_trace,
+)
+
+pytestmark = pytest.mark.chaos
+
+PHASES = [
+    dict(num_clients=16, key_range=1_000, insert_frac=0.8),
+    dict(num_clients=16, key_range=1_000, insert_frac=0.3),
+]
+
+
+def _pq(validate=True, **kw):
+    return SmartPQ(SmartPQConfig(
+        num_shards=4, capacity=512, decision_interval=4, validate=validate,
+        **kw,
+    ))
+
+
+def _sched_cfg(validate=False):
+    return SmartPQConfig(
+        num_shards=4, capacity=1024, decision_interval=4,
+        initial_mode=MODE_AWARE, validate=validate,
+    )
+
+
+def _reqs(n, uid0=0, step=0):
+    return [
+        Request(uid=uid0 + i, prompt_len=8 + i, max_new_tokens=4,
+                slo_class=i % 3, arrival_step=step)
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# trace-level faults: sanitize / tolerate / typed load error
+# ---------------------------------------------------------------------------
+
+
+def test_nonfinite_keys_rejected_and_counted():
+    """`nonfinite_keys`: every poisoned insert lane is refused at the
+    admission boundary into stats.rejected; the replayed state still
+    passes the full invariant sweep (validate=True inside replay)."""
+    trace = phased_trace(PHASES, steps_per_phase=4, seed=3)
+    bad = inject(trace, FaultSpec(kind="nonfinite_keys", seed=1, rate=0.3))
+    expected = int(((bad.ops == OP_INSERT) & ~np.isfinite(bad.keys)).sum())
+    assert expected > 0, "injector produced no non-finite insert lanes"
+    carry, _ = replay(_pq(), bad)  # validate_carry runs post-window
+    assert int(carry.stats.rejected) == expected
+
+
+def test_duplicate_keys_storm_absorbed():
+    """`duplicate_keys`: equal-key storms are legal input — nothing is
+    rejected and every invariant holds at adversarial duplicate density."""
+    trace = phased_trace(PHASES, steps_per_phase=4, seed=5)
+    dup = inject(trace, FaultSpec(kind="duplicate_keys", seed=2, rate=0.9))
+    assert not np.array_equal(dup.keys, trace.keys)
+    carry, _ = replay(_pq(), dup)  # invariant sweep inside
+    assert int(carry.stats.rejected) == 0
+
+
+@pytest.mark.parametrize("variant", ["truncate", "flip"])
+def test_corrupt_trace_npz_surfaces_typed_error(tmp_path, variant):
+    """`corrupt_trace_npz`: a damaged npz must never half-load — the loader
+    raises `TraceCorruptError` with its stable code."""
+    trace = phased_trace(PHASES, steps_per_phase=2, seed=7)
+    p = tmp_path / "trace.npz"
+    save_trace(p, trace)
+    healthy = load_trace(p)  # round-trips before injection
+    assert np.array_equal(healthy.ops, trace.ops)
+    inject(p, FaultSpec(
+        kind="corrupt_trace_npz", seed=3, rate=0.5, variant=variant,
+    ))
+    with pytest.raises(TraceCorruptError) as ei:
+        load_trace(p)
+    assert ei.value.code == "TRACE_CORRUPT"
+    assert str(p) in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# serving-workload faults: bounded backlogs, forecast independence
+# ---------------------------------------------------------------------------
+
+
+def test_ring_overflow_storm_bounded_and_accounted():
+    """`ring_overflow_storm`: arrival bursts far beyond the admission ring
+    spill to the host backlog; with the overload controller attached the
+    backlog stays hard-capped and EVERY arrival is accounted for —
+    inserted, still-backlogged, shed, or evicted.  This is the chaos
+    memory-bound test `_collect`'s docstring points at."""
+    counts = poisson_arrival_counts(24, 6.0, seed=3)
+    storm = inject(
+        open_loop_requests(counts, seed=3),
+        FaultSpec(kind="ring_overflow_storm", rate=1 / 8, magnitude=2.0),
+    )
+    total = sum(len(s) for s in storm)
+    cap = 64
+    sched = SmartPQScheduler(
+        batch_size=8, pq_config=_sched_cfg(), seed=0, ring_capacity=16,
+        overload=OverloadConfig(
+            targets=(8.0, 16.0, 32.0), backlog_cap=cap, min_samples=4,
+        ),
+    )
+    assert max(len(s) for s in storm) > sched.ring_capacity, (
+        "storm never exceeded the ring — the fault was not exercised"
+    )
+    K = 4
+    for w in range(0, len(storm), K):
+        chunk = storm[w:w + K]
+        sched.tick_window(chunk, [4] * len(chunk))
+        # memory bound, checked at every window boundary:
+        assert len(sched._arrival_backlog) <= cap
+        assert len(sched._requests) == (
+            int(sched.carry.state.total_size) + len(sched._arrival_backlog)
+        ), "host map leaked entries beyond in-flight work"
+    st = sched.stats
+    assert st.inserted + len(sched._arrival_backlog) + st.shed \
+        + st.evicted == total, "an arrival vanished without accounting"
+    assert st.evicted + st.shed > 0, (
+        "storm was absorbed without ever tripping the bounded-backlog "
+        "paths — grow the storm"
+    )
+
+
+@pytest.mark.parametrize("variant", ["low", "high"])
+def test_forecast_extreme_every_request_completes(variant):
+    """`forecast_extreme`: the slot forecast is advisory only — pinning the
+    service estimate to a pathological extreme (max over-admission or
+    starvation-grade under-admission) must not lose a single request."""
+    counts = poisson_arrival_counts(12, 2.0, seed=9)
+    workload = open_loop_requests(counts, seed=9)
+    total = sum(len(s) for s in workload)
+    assert total > 0
+    eng = ServeEngine(None, None, EngineConfig(
+        batch_size=8, max_seq=256, sched_window=4, forecast=True,
+    ), seed=1)
+    inject(eng, FaultSpec(
+        kind="forecast_extreme", variant=variant, magnitude=64.0,
+    ))
+    summary = eng.run(workload, max_steps=800)
+    assert summary["completed"] == total
+
+
+# ---------------------------------------------------------------------------
+# core-state / classifier faults: clamp, rollback, typed window error
+# ---------------------------------------------------------------------------
+
+
+def test_oob_tree_class_clamped_to_valid_mode():
+    """`oob_tree_class`: a corrupted packed tree emits classes far outside
+    [0, NUM_MODES); the step's keep-rule + clamp must keep the realized
+    mode trace in range — never an out-of-range lax.switch branch."""
+    pq = _pq(validate=True)
+    inject(pq, FaultSpec(kind="oob_tree_class", seed=4, rate=1.0))
+    trace = phased_trace(PHASES, steps_per_phase=8, seed=11)
+    carry, res = replay(pq, trace)  # invariant sweep inside
+    modes = np.asarray(res.mode)
+    assert ((modes >= 0) & (modes < NUM_MODES)).all(), (
+        f"realized modes left [0, {NUM_MODES}): {np.unique(modes)}"
+    )
+    assert 0 <= int(carry.stats.mode) < NUM_MODES
+
+
+def test_corrupt_state_rolls_back_and_surfaces_typed_error():
+    """`corrupt_state`: corruption that PREDATES the checkpoint cannot be
+    healed by retry — both validation passes trip, the checkpoint is
+    restored, and a typed `WindowValidationError` surfaces.  Zero-op ticks
+    are essential: a dispatching tick re-sorts the head and would heal the
+    injected inversion before validation ever sees it."""
+    sched = SmartPQScheduler(
+        batch_size=8, pq_config=_sched_cfg(validate=True), seed=0,
+    )
+    sched.tick(_reqs(6), 0)  # healthy, validated window populates the queue
+    assert sched.stats.failed_windows == 0
+    pending_before = sched.pending
+    sched.carry = inject(sched.carry, FaultSpec(kind="corrupt_state", seed=1))
+    with pytest.raises(WindowValidationError) as ei:
+        sched.tick([], 0)
+    assert ei.value.code == "WINDOW_VALIDATION"
+    assert ei.value.first and ei.value.retry  # both attempts' violations
+    assert sched.stats.failed_windows == 1
+    assert sched.pending == pending_before, "rollback lost host mirrors"
+    # The windowed path hits the same contract (corruption persists in the
+    # restored checkpoint, so it trips again).
+    with pytest.raises(WindowValidationError):
+        sched.tick_window([[], []], [0, 0])
+    assert sched.stats.failed_windows == 2
+    assert sched.pending == pending_before
+
+
+def test_validator_tripwire_recovery_succeeds():
+    """`validator_tripwire` (1 trip): the first validation pass reports a
+    synthetic violation, the window rolls back and the conservative
+    fallback retry validates clean — the SUCCESS arm of window recovery.
+    Dispatch keeps working afterwards."""
+    hook = inject(None, FaultSpec(kind="validator_tripwire", magnitude=1))
+    sched = SmartPQScheduler(
+        batch_size=8, pq_config=_sched_cfg(), seed=0, validate_hook=hook,
+    )
+    reqs = _reqs(4)
+    sched.tick(reqs, 0)  # trips once -> rollback -> fallback retry heals
+    assert sched.stats.recovered_windows == 1
+    assert sched.stats.failed_windows == 0
+    assert sched.pending == len(reqs), "recovered window lost arrivals"
+    out = sched.tick([], 4)
+    assert {r.uid for r in out} <= {r.uid for r in reqs}
+    assert len(out) == 4, "dispatch broken after recovery"
+
+
+def test_validator_tripwire_double_trip_surfaces_error():
+    """`validator_tripwire` (2 trips): the retry trips too -> typed error,
+    state restored; once the tripwire exhausts, the very next window runs
+    clean — proof the queue itself was never corrupted."""
+    hook = inject(None, FaultSpec(kind="validator_tripwire", magnitude=2))
+    sched = SmartPQScheduler(
+        batch_size=8, pq_config=_sched_cfg(), seed=0, validate_hook=hook,
+    )
+    with pytest.raises(WindowValidationError):
+        sched.tick(_reqs(4), 0)
+    assert sched.stats.failed_windows == 1
+    assert sched.pending == 0, "failed window must leave no trace"
+    sched.tick(_reqs(4), 0)  # tripwire exhausted: clean window
+    assert sched.stats.failed_windows == 1
+    assert sched.pending == 4
+
+
+def test_unknown_fault_kind_is_rejected():
+    with pytest.raises(KeyError):
+        inject(None, FaultSpec(kind="not_a_registered_fault"))

@@ -32,3 +32,22 @@ def test_gitignore_covers_bytecode():
     patterns = (REPO / ".gitignore").read_text().splitlines()
     for needed in ("__pycache__/", "*.pyc", ".pytest_cache/"):
         assert needed in patterns, f".gitignore is missing {needed!r}"
+
+
+def test_every_fault_injector_is_exercised():
+    """Every injector registered in `repro.faults.INJECTORS` must appear by
+    name in tests/test_faults.py — a registry entry with no chaos test is a
+    fault path nobody has ever watched fail."""
+    import sys
+
+    sys.path.insert(0, str(REPO / "src"))
+    try:
+        from repro.faults import INJECTORS
+    finally:
+        sys.path.pop(0)
+    chaos_src = (REPO / "tests" / "test_faults.py").read_text()
+    missing = [name for name in INJECTORS if name not in chaos_src]
+    assert missing == [], (
+        f"fault injectors with no test coverage in test_faults.py: "
+        f"{missing}"
+    )
