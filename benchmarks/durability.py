@@ -1,0 +1,159 @@
+"""durability — WAL overhead and recovery-time records for the durable
+serving tier.
+
+Two questions, two sweeps:
+
+  WAL overhead   the same bursty serving run three ways — no durability,
+                 WAL+snapshots with fsync, WAL+snapshots without fsync —
+                 timed per engine step.  The paired rows separate the
+                 logging cost (buffered appends + JSON framing) from the
+                 disk-sync cost; the acceptance bar is fsync-on within
+                 10% of the in-memory baseline (the engine step is
+                 device-call dominated, so the per-window WAL sync
+                 amortizes below the noise floor).
+  MTTR           mean time to recovery vs snapshot cadence: crash a
+                 durable run mid-flight (drop the engine without its
+                 final snapshot), then time a fresh engine's `recover()`
+                 — newest-valid-snapshot load + WAL-suffix replay.
+                 Sparse snapshots shift cost from the run (fewer
+                 snapshot writes) to the crash (longer replay); the
+                 sweep records both sides of that trade.
+
+Records land in BENCH_pq.json under ``durability/...`` via the shared
+emit schema, so `--check` gates them across commits like every other
+suite.
+"""
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.workloads.traces import bursty_serve_workload
+
+WAL_OVERHEAD_BAR = 1.10  # fsync-on wall per step <= 1.10x baseline
+
+
+def _drive(steps: int, seed: int, durable_dir=None, fsync: bool = True,
+           snapshot_interval: int = 4, sched_window: int = 4,
+           max_steps=None):
+    """One serving run; returns (engine, summary, wall_us_per_step)."""
+    wl = bursty_serve_workload(steps=steps, seed=seed)
+    eng = ServeEngine(None, None, EngineConfig(
+        batch_size=8, sched_window=sched_window,
+        durable_dir=durable_dir, wal_fsync=fsync,
+        snapshot_interval=snapshot_interval,
+    ), seed=seed)
+    t0 = time.perf_counter()
+    summary = eng.run(wl, max_steps=max_steps or steps * 3)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    return eng, summary, wall_us / max(summary["steps"], 1)
+
+
+def run_wal_overhead(quick: bool = False, reps: int = 3):
+    """Paired baseline / fsync-on / fsync-off rows (median of `reps`)."""
+    steps = 24 if quick else 48
+    rows = {}
+    for tag, durable, fsync in (
+        ("baseline", False, True),
+        ("fsync_on", True, True),
+        ("fsync_off", True, False),
+    ):
+        per_step, completed, dstats = [], 0, None
+        for rep in range(reps):
+            d = tempfile.mkdtemp(prefix="bench_wal_") if durable else None
+            eng = None
+            try:
+                eng, summary, us = _drive(
+                    steps, seed=7 + rep, durable_dir=d, fsync=fsync
+                )
+            finally:
+                if d:
+                    if eng is not None:
+                        eng.durability.close()
+                    shutil.rmtree(d, ignore_errors=True)
+            per_step.append(us)
+            completed = summary["completed"]
+            if durable:
+                dstats = eng.health()["durability"]
+        rows[tag] = float(np.median(per_step))
+        extra = {}
+        if dstats:
+            extra = {
+                "wal_records": dstats["records_appended"],
+                "wal_bytes": dstats["bytes_appended"],
+                "snapshots": dstats["snapshots_written"],
+            }
+        overhead = rows[tag] / rows["baseline"]
+        emit(
+            f"durability/wal/{tag}", rows[tag],
+            f"overhead={overhead:.3f}x;completed={completed}",
+            us_per_step=round(rows[tag], 3),
+            overhead_vs_baseline=round(overhead, 4),
+            fsync=fsync, durable=durable, steps=steps,
+            **extra,
+        )
+    ratio = rows["fsync_on"] / rows["baseline"]
+    assert ratio <= WAL_OVERHEAD_BAR, (
+        f"WAL overhead {ratio:.3f}x exceeds the {WAL_OVERHEAD_BAR:.2f}x "
+        f"acceptance bar (baseline {rows['baseline']:.1f} us/step, "
+        f"fsync_on {rows['fsync_on']:.1f} us/step)"
+    )
+    return rows
+
+
+def run_mttr(quick: bool = False):
+    """Recovery time vs snapshot cadence.
+
+    For each interval: run durably but stop BEFORE the drain point (so
+    run() never reaches its final clean-exit snapshot — the store looks
+    exactly like a crash: last periodic snapshot + committed WAL suffix),
+    then time a fresh engine's `recover()` on that store."""
+    steps = 24 if quick else 48
+    crash_at = steps  # mid-flight: arrivals done, queue still draining
+    for interval in (2, 8, 32):
+        d = tempfile.mkdtemp(prefix="bench_mttr_")
+        try:
+            wl = bursty_serve_workload(steps=steps, seed=11)
+            e1 = ServeEngine(None, None, EngineConfig(
+                batch_size=8, sched_window=4,
+                durable_dir=d, snapshot_interval=interval,
+            ), seed=11)
+            # crash simulation: cap the horizon, then discard the engine
+            # WITHOUT the clean-pause snapshot run() would have taken
+            e1.run(wl, max_steps=crash_at)
+            shutil.rmtree(
+                Path(d) / "snapshots" / f"step_{e1._step}",
+                ignore_errors=True,
+            )
+            (e1.durability.snap_root / "LATEST").unlink(missing_ok=True)
+            e1.durability.close()
+
+            e2 = ServeEngine(None, None, EngineConfig(
+                batch_size=8, sched_window=4,
+                durable_dir=d, snapshot_interval=interval,
+            ), seed=11)
+            t0 = time.perf_counter()
+            info = e2.recover()
+            mttr_us = (time.perf_counter() - t0) * 1e6
+            e2.durability.close()
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+        emit(
+            f"durability/mttr/interval_{interval}", mttr_us,
+            f"replayed={info['replayed_windows']};"
+            f"snap_step={info['snapshot_step']}",
+            snapshot_interval=interval,
+            replayed_windows=info["replayed_windows"],
+            snapshot_step=info["snapshot_step"],
+            wal_records=info["wal_records"],
+        )
+
+
+def run(quick: bool = False):
+    run_wal_overhead(quick=quick)
+    run_mttr(quick=quick)

@@ -58,7 +58,8 @@ def drive_overload(
     wall_us = (time.perf_counter() - t0) * 1e6
     lat = eng.latency_records()
     tokens = float(lat["tokens"].sum())
-    shed = summary["shed"] + summary["evicted"]
+    health = eng.health()  # the one structured accounting surface
+    shed = health["shed"] + health["evicted"]
     out = {
         "completed": summary["completed"],
         "total": total,
@@ -66,7 +67,7 @@ def drive_overload(
         "us_per_token": wall_us / max(tokens, 1.0),
         "shed": shed,
         "shed_rate": shed / max(total, 1),
-        "pending": eng.scheduler.pending + len(eng._backlog),
+        "pending": health["pending"] + health["admit_backlog"],
     }
     for c in range(3):
         q = lat["queueing_steps"][lat["slo"] == c]

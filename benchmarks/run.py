@@ -22,7 +22,7 @@ def main() -> None:
         "--only", default=None,
         help="comma list of: fig1,fig7,fig9,fig9_latency,fig9_window,fig10,"
              "fig12,classifier,roofline,kernels,rank_error,smoke,"
-             "workloads_sssp,workloads_des,serve_slo,overload",
+             "workloads_sssp,workloads_des,serve_slo,overload,durability",
     )
     ap.add_argument(
         "--schedule", default="all",
@@ -67,6 +67,7 @@ def main() -> None:
     from benchmarks import (
         classifier_eval,
         common,
+        durability,
         fig1_mix,
         fig7_sweeps,
         fig9_grid,
@@ -100,6 +101,7 @@ def main() -> None:
         "workloads_des": workloads_bench.run_des,
         "serve_slo": serve_slo.run,
         "overload": overload.run,
+        "durability": durability.run,
         "smoke": smoke.run,
     }
     if args.smoke:
@@ -115,8 +117,11 @@ def main() -> None:
         suites[name](quick=args.quick)
 
     if args.csv:
-        Path(args.csv).write_text(
-            "\n".join(["name,us_per_call,derived"] + common.CSV_ROWS) + "\n"
+        from repro.core.persist import atomic_write_text
+
+        atomic_write_text(
+            args.csv,
+            "\n".join(["name,us_per_call,derived"] + common.CSV_ROWS) + "\n",
         )
         print(f"# wrote {len(common.CSV_ROWS)} CSV rows to {args.csv}",
               file=sys.stderr)
@@ -152,7 +157,11 @@ def main() -> None:
             "generated_unix": int(time.time()),
             "records": records,
         }
-        out_path.write_text(json.dumps(payload, indent=1) + "\n")
+        # atomic replace: an interrupted bench run never leaves a torn
+        # BENCH_pq.json for the next --check to choke on
+        from repro.core.persist import atomic_write_text
+
+        atomic_write_text(out_path, json.dumps(payload, indent=1) + "\n")
         print(f"# wrote {len(common.BENCH_RECORDS)} fresh records to "
               f"{args.json} ({len(records)} total)", file=sys.stderr)
 

@@ -36,6 +36,7 @@ def run(quick: bool = False):
     _run_workloads()
     _run_serve()
     _run_overload()
+    _run_durability()
 
 
 def _run_serve():
@@ -72,6 +73,46 @@ def _run_overload():
          load_factor=2.0, control=True,
          shed_rate=round(r["shed_rate"], 4),
          p99_queue_c0=round(r["p99_queue_c0"], 2))
+
+
+def _run_durability():
+    """Seconds-scale probe of the durable serving path: a short WAL+
+    snapshot run plus a fresh-engine `recover()` on its store, timed —
+    keeps the write-ahead/commit/snapshot/replay machinery under the
+    `--smoke --check` 2x gate and re-asserts the recovery contract
+    (recovered state resumes at the crashed run's step) on every smoke
+    run."""
+    import shutil
+    import tempfile
+
+    from repro.serve.engine import EngineConfig, ServeEngine
+    from repro.workloads.traces import bursty_serve_workload
+
+    d = tempfile.mkdtemp(prefix="smoke_dur_")
+    try:
+        wl = bursty_serve_workload(steps=12, seed=5)
+        ecfg = EngineConfig(batch_size=4, sched_window=4,
+                            durable_dir=d, snapshot_interval=2)
+        e1 = ServeEngine(None, None, ecfg, seed=5)
+        t0 = time.perf_counter()
+        summary = e1.run(wl, max_steps=36)
+        run_us = (time.perf_counter() - t0) * 1e6 / max(summary["steps"], 1)
+        e1.durability.close()
+
+        e2 = ServeEngine(None, None, ecfg, seed=5)
+        t0 = time.perf_counter()
+        e2.recover()
+        recover_us = (time.perf_counter() - t0) * 1e6
+        assert e2._step == e1._step, (
+            f"smoke durability: recovered step {e2._step} != {e1._step}"
+        )
+        e2.durability.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    emit("smoke/durability", run_us,
+         f"recover_us={recover_us:.0f};completed={summary['completed']}",
+         us_per_step=round(run_us, 3), recover_us=round(recover_us, 1),
+         completed=summary["completed"])
 
 
 def _run_workloads():

@@ -10,11 +10,18 @@ code, never on message text.  The taxonomy is deliberately small:
   │                          validation pass (`SmartPQConfig.validate`)
   ├─ TraceCorruptError       a Trace npz failed to load or to validate
   │                          (truncated file, bad op codes, shape mismatch)
-  └─ WindowValidationError   a scheduler window tripped validation AND the
-                             conservative fallback retry (STRICT, forecast
-                             off) failed too — carries the violations of
-                             both attempts; the pre-window checkpoint has
-                             been restored when this is raised
+  ├─ WindowValidationError   a scheduler window tripped validation AND the
+  │                          conservative fallback retry (STRICT, forecast
+  │                          off) failed too — carries the violations of
+  │                          both attempts; the pre-window checkpoint has
+  │                          been restored when this is raised
+  ├─ SnapshotCorruptError    a persisted snapshot directory failed
+  │                          validation (missing/truncated shard, CRC
+  │                          mismatch, stale manifest) — recovery absorbs
+  │                          it by falling back to an older valid snapshot
+  └─ CrashLoopError          the serve supervisor's circuit breaker
+                             opened: the child crashed more than the
+                             restart budget allows inside the crash window
 """
 
 from __future__ import annotations
@@ -76,4 +83,39 @@ class WindowValidationError(PQError):
             f"window validation failed and fallback retry failed too "
             f"(first: {[str(v) for v in first]}; "
             f"retry: {[str(v) for v in retry]})"
+        )
+
+
+class SnapshotCorruptError(PQError):
+    """A persisted snapshot directory (`repro.core.persist` manifest tree)
+    failed validation: missing or truncated shard, shard CRC mismatch, or
+    a stale manifest naming files that do not exist.  Recovery treats this
+    as a skip signal — load the newest snapshot that validates — so it
+    only propagates when a caller demands one specific step."""
+
+    code = "SNAPSHOT_CORRUPT"
+
+    def __init__(self, detail: str, path: Optional[str] = None):
+        self.detail = detail
+        self.path = path
+        super().__init__(
+            f"corrupt snapshot{f' {path}' if path else ''}: {detail}"
+        )
+
+
+class CrashLoopError(PQError):
+    """The serve supervisor's circuit breaker opened: its child process
+    died more than `max_restarts` times inside `crash_window` seconds.
+    Carries the observed exit codes so operators can tell a crash loop
+    (same code repeating) from flapping infrastructure."""
+
+    code = "CRASH_LOOP"
+
+    def __init__(self, restarts: int, window_s: float, exit_codes):
+        self.restarts = int(restarts)
+        self.window_s = float(window_s)
+        self.exit_codes = list(exit_codes)
+        super().__init__(
+            f"crash loop: {restarts} restarts within {window_s:.1f}s "
+            f"(exit codes {self.exit_codes})"
         )

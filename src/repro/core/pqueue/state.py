@@ -328,3 +328,22 @@ def check_invariants(state: PQState) -> Tuple[bool, str]:
     if viols:
         return False, viols[0].detail
     return True, "ok"
+
+
+def state_fingerprint(state: PQState) -> int:
+    """Order-stable CRC32 over the state's physical content (every field's
+    canonical bytes, field order fixed by the dataclass).  Two states are
+    bit-identical iff their fingerprints match buffer-for-buffer — the
+    cheap equality the durability layer stamps into snapshot manifests and
+    the crash-recovery tests assert across interrupted vs. uninterrupted
+    runs.  Physical, not logical: garbage beyond `head_size`/the tail
+    window is included, which is exactly what bit-identity means."""
+    import zlib
+
+    import numpy as np
+
+    crc = 0
+    for f in dataclasses.fields(state):
+        arr = np.ascontiguousarray(np.asarray(getattr(state, f.name)))
+        crc = zlib.crc32(arr.tobytes(), zlib.crc32(f.name.encode(), crc))
+    return crc & 0xFFFFFFFF

@@ -484,3 +484,23 @@ class SmartPQ:
         from repro.core.classifier.features import featurize
 
         return int(self.tree.predict(featurize(num_clients, size, key_range, insert_frac))[0])
+
+
+def carry_fingerprint(carry: SmartPQCarry) -> int:
+    """CRC32 over the whole carry — the PQState's physical buffers
+    (`state.state_fingerprint`) chained with every stats scalar.  The
+    durability layer stamps this into snapshot manifests (an end-to-end
+    integrity check on top of the per-shard file CRCs) and the crash
+    recovery tests use it to assert an interrupted-then-replayed run
+    reconverges bit-for-bit with an uninterrupted one."""
+    import zlib
+
+    import numpy as np
+
+    from repro.core.pqueue.state import state_fingerprint
+
+    crc = state_fingerprint(carry.state)
+    for name, leaf in zip(SmartPQStats._fields, carry.stats):
+        arr = np.ascontiguousarray(np.asarray(leaf))
+        crc = zlib.crc32(arr.tobytes(), zlib.crc32(name.encode(), crc))
+    return crc & 0xFFFFFFFF

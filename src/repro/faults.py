@@ -32,6 +32,20 @@ layers):
                                                synthetic violation N times,
                                                then heals — exercises the
                                                rollback+retry SUCCESS path
+  crash_at_step        ServeEngine             SIGKILL the process when the
+                                               engine reaches step N (one-
+                                               shot via a marker file, so a
+                                               supervised restart survives)
+  torn_wal             durable dir / wal path  torn tail on the write-ahead
+                                               log: truncated mid-frame,
+                                               CRC-flipped, or garbage
+                                               appended
+  partial_snapshot     durable dir / snap root newest snapshot loses or
+                                               truncates a payload shard
+                                               (crash mid-snapshot-write)
+  stale_manifest       durable dir / snap root manifest damaged or LATEST
+                                               pointing at a step that is
+                                               not on disk
 """
 
 from __future__ import annotations
@@ -271,9 +285,143 @@ def validator_tripwire(_target, spec: FaultSpec):
     return hook
 
 
+# ---------------------------------------------------------------------------
+# durability injectors (serve/durability.py + core/persist.py)
+# ---------------------------------------------------------------------------
+
+
+def _durable_paths(target):
+    """Resolve a crash-injection target to (wal_path, snapshots_root):
+    accepts a DurableStore, a durable directory, or a direct file path."""
+    from pathlib import Path
+
+    if hasattr(target, "wal") and hasattr(target, "snap_root"):
+        return Path(target.wal.path), Path(target.snap_root)
+    p = Path(target)
+    if p.is_dir():
+        return p / "wal.log", p / "snapshots"
+    return p, p.parent / "snapshots"
+
+
+@_injector("crash_at_step")
+def crash_at_step(engine, spec: FaultSpec):
+    """Arm a process-suicide tripwire: the wrapped `engine.step` SIGKILLs
+    the process the moment the engine-step clock reaches
+    ``int(spec.magnitude)`` — after that window's arrivals were WAL-logged
+    but before its commit, i.e. exactly the torn mid-window crash the
+    recovery path must absorb.  ``spec.variant``, when set, is a marker
+    file path making the kill ONE-SHOT: the marker is written (and
+    fsynced) immediately before the SIGKILL, so under a supervisor the
+    restarted incarnation re-arms the injector, finds the marker, and
+    runs through cleanly — the crash-drill harness in one injector."""
+    import os
+    import signal
+
+    kill_at = max(int(spec.magnitude), 0)
+    marker = spec.variant or None
+    orig = engine.step
+
+    def step(arrivals, dispatched=None):
+        if engine._step >= kill_at:
+            if marker is None or not os.path.exists(marker):
+                if marker is not None:
+                    from repro.core import persist
+
+                    persist.atomic_write_text(marker, "crashed\n")
+                os.kill(os.getpid(), signal.SIGKILL)
+        return orig(arrivals, dispatched)
+
+    engine.step = step
+    return engine
+
+
+@_injector("torn_wal")
+def torn_wal(target, spec: FaultSpec):
+    """Tear the write-ahead log's tail the way a crash mid-append does.
+    ``variant='flip'`` XORs one byte inside the LAST frame's payload (CRC
+    mismatch); ``variant='garbage'`` appends a frame header whose length
+    promises bytes that never made it to disk; default truncates a
+    `spec.rate` fraction of the final frame.  `WriteAheadLog.recover` must
+    return the intact record prefix and truncate the file — never raise,
+    never yield a half-parsed record."""
+    import struct
+
+    rng = np.random.default_rng(spec.seed)
+    wal_path, _ = _durable_paths(target)
+    blob = bytearray(wal_path.read_bytes())
+    if spec.variant == "garbage":
+        blob += struct.pack("<II", 1 << 20, 0xDEADBEEF) + b"\x00" * 7
+    elif spec.variant == "flip" and len(blob) > 8:
+        blob[len(blob) - 1 - int(rng.integers(min(len(blob) - 8, 16)))] ^= 0xFF
+    else:
+        # walk frames to find the last one, cut inside it
+        off, frames = 0, []
+        while off + 8 <= len(blob):
+            length = struct.unpack_from("<I", blob, off)[0]
+            if off + 8 + length > len(blob):
+                break
+            frames.append((off, 8 + length))
+            off += 8 + length
+        if frames:
+            start, size = frames[-1]
+            cut = start + max(int(size * (1.0 - spec.rate)), 1)
+            del blob[cut:]
+    wal_path.write_bytes(bytes(blob))
+    return wal_path
+
+
+@_injector("partial_snapshot")
+def partial_snapshot(target, spec: FaultSpec):
+    """Damage the NEWEST snapshot's payload: ``variant='delete'`` removes a
+    seed-chosen shard npz, default truncates it to the leading `1 - rate`
+    fraction (the torn write a non-atomic snapshot would leave).
+    `validate_step` must raise `SnapshotCorruptError` for this step and
+    `load_newest_valid` must fall back to an older snapshot (or fresh
+    init) with `snapshots_skipped_invalid` accounting."""
+    from repro.core import persist
+
+    rng = np.random.default_rng(spec.seed)
+    _, snap_root = _durable_paths(target)
+    steps = persist.available_steps(snap_root)
+    if not steps:
+        raise FileNotFoundError(f"no snapshots under {snap_root}")
+    d = persist.step_dir(snap_root, steps[0])
+    shards = sorted(d.glob("shard_*.npz"))
+    victim = shards[int(rng.integers(len(shards)))]
+    if spec.variant == "delete":
+        victim.unlink()
+    else:
+        blob = victim.read_bytes()
+        victim.write_bytes(blob[: max(int(len(blob) * (1 - spec.rate)), 8)])
+    return d
+
+
+@_injector("stale_manifest")
+def stale_manifest(target, spec: FaultSpec):
+    """Damage snapshot METADATA rather than payload: ``variant='garbage'``
+    overwrites the newest step's manifest.json with unparseable bytes;
+    default rewrites LATEST to point at a step that does not exist on
+    disk.  Recovery must shrug — scan the remaining steps newest-first
+    and load the newest one that validates."""
+    _, snap_root = _durable_paths(target)
+    if spec.variant == "garbage":
+        from repro.core import persist
+
+        steps = persist.available_steps(snap_root)
+        if not steps:
+            raise FileNotFoundError(f"no snapshots under {snap_root}")
+        d = persist.step_dir(snap_root, steps[0])
+        (d / "manifest.json").write_text("{torn json" + "\x00" * 16)
+        return d
+    latest = snap_root / "LATEST"
+    latest.write_text(f"step_{10**9 + spec.seed}")
+    return latest
+
+
 __all__ = [
     "FaultSpec", "INJECTORS", "inject",
     "nonfinite_keys", "duplicate_keys", "corrupt_trace_npz",
     "ring_overflow_storm", "forecast_extreme", "oob_tree_class",
     "corrupt_state", "validator_tripwire",
+    "crash_at_step", "torn_wal", "partial_snapshot", "stale_manifest",
 ]

@@ -9,3 +9,14 @@ from repro.serve.overload import (  # noqa: F401
     OverloadConfig,
     OverloadController,
 )
+from repro.serve.durability import (  # noqa: F401
+    DurabilityConfig,
+    DurabilityStats,
+    DurableStore,
+    WriteAheadLog,
+)
+from repro.serve.supervisor import (  # noqa: F401
+    Supervisor,
+    SupervisorConfig,
+    SupervisorReport,
+)

@@ -76,6 +76,16 @@ class EngineConfig:
     # scheduler window validates invariants against a pre-window
     # checkpoint, rolling back + retrying conservatively on violation.
     validate: bool = False
+    # Durability: a directory arms the write-ahead log + crash-consistent
+    # snapshot layer (repro.serve.durability) — every window's arrivals
+    # are fsynced before execution, commits mark them done, and
+    # `recover()` (run automatically at the top of `run()`) restores the
+    # newest valid snapshot and replays the WAL suffix bit-identically.
+    # None (default) keeps the engine fully in-memory, exactly as before.
+    durable_dir: Optional[str] = None
+    wal_fsync: bool = True  # fsync WAL appends/commits (off: bench probe)
+    snapshot_interval: int = 4  # windows between snapshots
+    keep_snapshots: int = 2
 
 
 class ServeEngine:
@@ -137,6 +147,21 @@ class ServeEngine:
         # matters for the first window; completions tighten it online.
         self._service_est = 8.0
         self._step = 0
+        self.durability = None
+        self._recovered = False
+        if engine_cfg.durable_dir is not None:
+            from repro.serve.durability import (
+                DurabilityConfig, DurableStore,
+            )
+
+            self.durability = DurableStore(DurabilityConfig(
+                dir=engine_cfg.durable_dir,
+                fsync=engine_cfg.wal_fsync,
+                snapshot_interval=engine_cfg.snapshot_interval,
+                keep_snapshots=engine_cfg.keep_snapshots,
+            ))
+            # shed/evict decisions leave audit records next to admissions
+            self.scheduler.wal_sink = self.durability.log_event
 
     # -- admission -------------------------------------------------------------
 
@@ -260,6 +285,37 @@ class ServeEngine:
         self._step += 1
         return done
 
+    def _advance(
+        self,
+        arrivals_by_tick: List[List[Request]],
+        step0: int,
+        max_steps: int,
+    ) -> Tuple[int, int]:
+        """Execute one scheduling window (K ticks, or a single `tick()`
+        step when sched_window == 1) starting at engine step `step0`.
+        Returns (completions, engine steps advanced).  This is THE window
+        execution path: `run()` drives it live and `recover()` replays WAL
+        windows through it, so an interrupted run and its replay share
+        every instruction."""
+        if len(arrivals_by_tick) == 1 and self.ecfg.sched_window <= 1:
+            self._note_arrivals(arrivals_by_tick[0], step0)
+            return len(self.step(arrivals_by_tick[0])), 1
+        for i, a in enumerate(arrivals_by_tick):
+            self._note_arrivals(a, step0 + i)
+        K = len(arrivals_by_tick)
+        completed, step = 0, step0
+        for d in self.scheduler.tick_window(
+            arrivals_by_tick, self._window_budgets(K)
+        ):
+            if step >= max_steps:
+                # already popped from the device queue — park for
+                # admission on a later run() instead of losing them
+                self._backlog.extend(d)
+                continue
+            completed += len(self.step([], dispatched=d))
+            step += 1
+        return completed, step - step0
+
     def run(self, workload: List[List[Request]], max_steps: int = 10_000):
         """Drive until the workload drains.  Returns summary stats.
 
@@ -267,32 +323,47 @@ class ServeEngine:
         K engine ticks; each tick's dispatch budget comes from
         `_window_budgets` — mid-window completions admit at the tick the
         forecast predicts them, and any over-admission parks in the admit
-        backlog until a slot actually frees."""
+        backlog until a slot actually frees.
+
+        With durability armed (`EngineConfig.durable_dir`) the loop runs on
+        the GLOBAL step clock: `recover()` executes first (restoring any
+        snapshot + replaying the WAL suffix), and the workload is indexed
+        by absolute engine step, so a restarted process hands `run` the
+        same full workload and it resumes exactly where the crash cut it.
+        Each window's arrivals are WAL-logged + fsynced before execution
+        and committed after; every `snapshot_interval` windows the full
+        state is snapshotted crash-consistently."""
         t0 = time.time()
+        durable = self.durability is not None
+        if durable and not self._recovered:
+            self.recover()
         completed = 0
-        step = 0
+        start = self._step if durable else 0
+        step = start
         K = max(1, self.ecfg.sched_window)
         while step < max_steps:
-            if K > 1:
-                arr = [
-                    workload[step + i] if step + i < len(workload) else []
-                    for i in range(K)
-                ]
-                for i, a in enumerate(arr):
-                    self._note_arrivals(a, step + i)
-                for d in self.scheduler.tick_window(arr, self._window_budgets(K)):
-                    if step >= max_steps:
-                        # already popped from the device queue — park for
-                        # admission on a later run() instead of losing them
-                        self._backlog.extend(d)
-                        continue
-                    completed += len(self.step([], dispatched=d))
-                    step += 1
-            else:
-                arrivals = workload[step] if step < len(workload) else []
-                self._note_arrivals(arrivals, step)
-                completed += len(self.step(arrivals))
-                step += 1
+            # Durable windows never straddle the max_steps horizon: a
+            # window's arrivals are fed (and WAL-logged) as a unit, so a
+            # mid-window cap would leave _step behind the fed prefix and a
+            # resumed run would double-feed the tail ticks.  Clamping keeps
+            # "engine step clock == workload ticks consumed" invariant that
+            # resume relies on; non-durable runs keep the legacy park-in-
+            # backlog behavior bit-for-bit.
+            Kw = min(K, max_steps - step) if durable else K
+            arr = [
+                workload[step + i] if step + i < len(workload) else []
+                for i in range(Kw)
+            ]
+            if durable:
+                self.durability.log_window(step, arr)
+            done, nsteps = self._advance(arr, step, max_steps)
+            completed += done
+            step += nsteps
+            if durable:
+                self.durability.log_commit(self._step)
+                self.durability.window_committed()
+                if self.durability.should_snapshot():
+                    self.snapshot()
             if (
                 step >= len(workload)
                 and self.scheduler.pending == 0
@@ -300,9 +371,12 @@ class ServeEngine:
                 and all(r is None for r in self.active)
             ):
                 break
+        if durable:
+            # final snapshot: a clean restart needs no replay at all
+            self.snapshot()
         sst = self.scheduler.stats
         return {
-            "steps": step,
+            "steps": step - start,
             "completed": completed,
             "wall_s": time.time() - t0,
             "mode_trace": sst.mode_trace,
@@ -310,6 +384,175 @@ class ServeEngine:
             "shed": sst.shed,
             "evicted": sst.evicted,
             "recovered_windows": sst.recovered_windows,
+        }
+
+    # -- durability: snapshot / recover -----------------------------------------
+
+    def _snapshot_arrays(self) -> Dict[str, object]:
+        return {
+            "sched": self.scheduler.snapshot_arrays(),
+            "tokens": self.tokens,
+            "lengths": self.lengths,
+            "remaining": np.asarray(self.remaining),
+        }
+
+    def _restore_arrays(self, arrays: Dict[str, object]) -> None:
+        self.scheduler.restore_arrays(arrays["sched"])
+        self.tokens = jnp.asarray(arrays["tokens"])
+        self.lengths = jnp.asarray(arrays["lengths"])
+        self.remaining = np.asarray(arrays["remaining"], np.int64)
+
+    def _host_state(self) -> Dict[str, object]:
+        req = dataclasses.asdict
+        return {
+            "step": self._step,
+            "service_est": self._service_est,
+            "active": [None if r is None else req(r) for r in self.active],
+            "backlog": [req(r) for r in self._backlog],
+            "outputs": {str(u): v for u, v in self.outputs.items()},
+            "arrival_step": {
+                str(u): s for u, s in self.arrival_step.items()
+            },
+            "admit_step": {str(u): s for u, s in self.admit_step.items()},
+            "done_step": {str(u): s for u, s in self.done_step.items()},
+            "slo": {str(u): c for u, c in self.slo.items()},
+        }
+
+    def _load_host_state(self, d: Dict[str, object]) -> None:
+        self._step = int(d["step"])
+        self._service_est = float(d["service_est"])
+        self.active = [
+            None if rd is None
+            else Request(**{k: int(v) for k, v in rd.items()})
+            for rd in d["active"]
+        ]
+        self._backlog = [
+            Request(**{k: int(v) for k, v in rd.items()})
+            for rd in d["backlog"]
+        ]
+        self.outputs = {
+            int(u): [int(t) for t in v] for u, v in d["outputs"].items()
+        }
+        self.arrival_step = {
+            int(u): int(s) for u, s in d["arrival_step"].items()
+        }
+        self.admit_step = {
+            int(u): int(s) for u, s in d["admit_step"].items()
+        }
+        self.done_step = {int(u): int(s) for u, s in d["done_step"].items()}
+        self.slo = {int(u): int(c) for u, c in d["slo"].items()}
+
+    def snapshot(self):
+        """Crash-consistent snapshot of the FULL serving state at the
+        current window boundary: scheduler carry + rng + ring backlogs +
+        in-flight maps + overload controller + engine slots/outputs/SLO
+        clocks, with the carry's fingerprint stamped into the manifest."""
+        from repro.core.smartpq import carry_fingerprint
+
+        host = {
+            "engine": self._host_state(),
+            "scheduler": self.scheduler.host_state(),
+            "carry_crc": carry_fingerprint(self.scheduler.carry),
+        }
+        return self.durability.snapshot(
+            self._step, self._snapshot_arrays(), host
+        )
+
+    def recover(self) -> Dict[str, object]:
+        """Restore from the durable store: load the newest VALID snapshot
+        (corrupt/partial/stale ones are skipped with accounting), then
+        replay the WAL's window suffix through `_advance` — the exact code
+        path the original run used — so completion sets, conservation
+        accounting, and the carry bits reconverge with an uninterrupted
+        run.  Idempotent on a fresh directory (no snapshot, empty WAL:
+        nothing happens).  Called automatically by `run()`.
+
+        Replay executes each logged window to completion (the original
+        `max_steps` cap is not re-applied); durable runs are expected to
+        use drain-bounded horizons, not mid-window step caps."""
+        from repro.core.errors import SnapshotCorruptError
+
+        d = self.durability
+        info: Dict[str, object] = {
+            "snapshot_step": None, "replayed_windows": 0, "wal_records": 0,
+        }
+        loaded = d.load_newest_valid(self._snapshot_arrays())
+        base_step = 0
+        if loaded is not None:
+            snap_step, arrays, host = loaded
+            self._restore_arrays(arrays)
+            self._load_host_state(host["engine"])
+            self.scheduler.load_host_state(host["scheduler"])
+            if host.get("carry_crc") is not None:
+                from repro.core.smartpq import carry_fingerprint
+
+                got = carry_fingerprint(self.scheduler.carry)
+                if got != host["carry_crc"]:
+                    raise SnapshotCorruptError(
+                        f"carry fingerprint mismatch after restore "
+                        f"(manifest {host['carry_crc']:#x}, got {got:#x})",
+                        path=str(d.snap_root),
+                    )
+            base_step = self._step
+            info["snapshot_step"] = snap_step
+        records = d.read_wal()
+        info["wal_records"] = len(records)
+        windows = d.window_suffix(base_step)
+        d.suppress_events = True
+        try:
+            for rec in windows:
+                from repro.serve.durability import request_from_dict
+
+                arr = [
+                    [request_from_dict(x) for x in tick]
+                    for tick in rec["arrivals"]
+                ]
+                self._advance(arr, int(rec["step0"]), 1 << 62)
+                d.stats.replayed_windows += 1
+                d.stats.replayed_records += 1
+        finally:
+            d.suppress_events = False
+        info["replayed_windows"] = len(windows)
+        self._recovered = True
+        return info
+
+    # -- structured health -------------------------------------------------------
+
+    def health(self) -> Dict[str, object]:
+        """One structured health/accounting surface: everything the
+        supervisor, the benchmarks, and the conservation checks need, so
+        none of them poke engine/scheduler attributes directly.  Counter
+        semantics: ``inserted + arrival_backlog + shed + evicted`` equals
+        total submitted arrivals, and ``inserted == dispatched +
+        on_device`` (the request-conservation invariant)."""
+        sst = self.scheduler.stats
+        pq_stats = self.scheduler.carry.stats
+        return {
+            "step": self._step,
+            "completed": len(self.done_step),
+            "active_slots": sum(r is not None for r in self.active),
+            "free_slots": len(self._free_slots()),
+            "admit_backlog": len(self._backlog),
+            "arrival_backlog": len(self.scheduler._arrival_backlog),
+            "on_device": int(self.scheduler.carry.state.total_size),
+            "pending": self.scheduler.pending,
+            "inserted": sst.inserted,
+            "dispatched": sst.dispatched,
+            "shed": sst.shed,
+            "evicted": sst.evicted,
+            "rejected": int(pq_stats.rejected),
+            "recovered_windows": sst.recovered_windows,
+            "failed_windows": sst.failed_windows,
+            "pq_transitions": int(pq_stats.transitions),
+            "service_est": float(self._service_est),
+            "overload": (
+                self.overload.snapshot() if self.overload is not None
+                else None
+            ),
+            "durability": (
+                self.durability.stats.as_dict()
+                if self.durability is not None else None
+            ),
         }
 
     # -- SLO accounting ----------------------------------------------------------

@@ -225,6 +225,45 @@ class OverloadController:
             self.stats.evicted[c] = self.stats.evicted.get(c, 0) + 1
         return evicted
 
+    # -- persistence ------------------------------------------------------
+
+    def state_dict(self) -> Dict[str, object]:
+        """JSON-able controller state (everything `update` evolves —
+        per-class states, sliding sample windows, censored counts, stats).
+        The durability layer stores this inside the snapshot manifest;
+        `load_state_dict` must restore it bit-for-bit, or a replayed
+        window would shed a different request set than the original run."""
+        return {
+            "state": {str(c): s for c, s in self.state.items()},
+            "samples": {str(c): list(v) for c, v in self._samples.items()},
+            "censored": {str(c): n for c, n in self._censored.items()},
+            "stats": {
+                "shed": {str(c): n for c, n in self.stats.shed.items()},
+                "evicted": {
+                    str(c): n for c, n in self.stats.evicted.items()
+                },
+                "degraded_ticks": self.stats.degraded_ticks,
+                "shedding_ticks": self.stats.shedding_ticks,
+            },
+        }
+
+    def load_state_dict(self, d: Dict[str, object]) -> None:
+        self.state = {int(c): int(s) for c, s in d["state"].items()}
+        self._samples = {
+            int(c): [float(x) for x in v]
+            for c, v in d["samples"].items()
+        }
+        self._censored = {
+            int(c): int(n) for c, n in d["censored"].items()
+        }
+        st = d["stats"]
+        self.stats = OverloadStats(
+            shed={int(c): int(n) for c, n in st["shed"].items()},
+            evicted={int(c): int(n) for c, n in st["evicted"].items()},
+            degraded_ticks=int(st["degraded_ticks"]),
+            shedding_ticks=int(st["shedding_ticks"]),
+        )
+
     # -- reporting --------------------------------------------------------
 
     def snapshot(self) -> Dict[str, object]:

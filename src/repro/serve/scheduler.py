@@ -180,6 +180,10 @@ class SmartPQScheduler:
         # iff the pq's validate flag or a hook is set.
         self.validate_hook = validate_hook
         self._fb: Optional[SmartPQ] = None  # lazy conservative fallback
+        # Optional write-ahead-log sink (kind, payload) -> None: the
+        # durability layer attaches it so every shed/evict decision leaves
+        # an audit record in the WAL next to the admissions it filtered.
+        self.wal_sink: Optional[Callable[[str, Dict], None]] = None
 
     def submit(self, reqs: List[Request]):
         for r in reqs:
@@ -234,6 +238,12 @@ class SmartPQScheduler:
             return arrivals
         kept, shed = self.overload.admit(arrivals)
         self.stats.shed += len(shed)
+        if shed and self.wal_sink is not None:
+            self.wal_sink("shed", {
+                "step": self._step,
+                "uids": [r.uid for r in shed],
+                "classes": [r.slo_class for r in shed],
+            })
         return kept
 
     def _enforce_backlog_cap(self) -> None:
@@ -243,6 +253,12 @@ class SmartPQScheduler:
         for r in evicted:
             self._requests.pop(r.uid, None)
         self.stats.evicted += len(evicted)
+        if evicted and self.wal_sink is not None:
+            self.wal_sink("evict", {
+                "step": self._step,
+                "uids": [r.uid for r in evicted],
+                "classes": [r.slo_class for r in evicted],
+            })
 
     def _mode_override(self) -> int:
         return self.overload.mode_override() if self.overload else -1
@@ -304,6 +320,63 @@ class SmartPQScheduler:
             self.overload.__dict__.update(
                 copy.deepcopy(ckpt.overload).__dict__
             )
+
+    # -- durable persistence (WAL snapshot surface) ----------------------------
+
+    def snapshot_arrays(self) -> Dict[str, object]:
+        """The scheduler's device-array state as a pytree for
+        `persist.save_tree`: the full carry (PQState + stats) and the raw
+        rng key data (typed keys don't serialize; `wrap_key_data` restores
+        the exact stream, which spray/multiq determinism depends on)."""
+        return {
+            "carry": self.carry,
+            "rng": jax.random.key_data(self._rng),
+        }
+
+    def restore_arrays(self, arrays: Dict[str, object]) -> None:
+        self.carry = arrays["carry"]
+        self._rng = jax.random.wrap_key_data(jnp.asarray(arrays["rng"]))
+
+    def host_state(self) -> Dict[str, object]:
+        """JSON-able host-side state: step clock, backlog, in-flight map
+        (insertion order preserved — `_observe` iterates it, so order is
+        part of bit-identical recovery), stats, overload controller."""
+        req_dict = dataclasses.asdict
+        return {
+            "step": self._step,
+            "backlog": [req_dict(r) for r in self._arrival_backlog],
+            "requests": [req_dict(r) for r in self._requests.values()],
+            "stats": {
+                **{
+                    f.name: getattr(self.stats, f.name)
+                    for f in dataclasses.fields(self.stats)
+                    if f.name != "mode_trace"
+                },
+                "mode_trace": list(self.stats.mode_trace),
+            },
+            "overload": (
+                self.overload.state_dict()
+                if self.overload is not None else None
+            ),
+        }
+
+    def load_host_state(self, d: Dict[str, object]) -> None:
+        self._step = int(d["step"])
+        self._arrival_backlog = [
+            Request(**{k: int(v) for k, v in rd.items()})
+            for rd in d["backlog"]
+        ]
+        self._requests = {}
+        for rd in d["requests"]:
+            r = Request(**{k: int(v) for k, v in rd.items()})
+            self._requests[r.uid] = r
+        st = dict(d["stats"])
+        self.stats = SchedulerStats(
+            **{k: v for k, v in st.items() if k != "mode_trace"},
+            mode_trace=list(st.get("mode_trace", [])),
+        )
+        if d.get("overload") is not None and self.overload is not None:
+            self.overload.load_state_dict(d["overload"])
 
     def _validate(self) -> List[InvariantViolation]:
         viols: List[InvariantViolation] = []

@@ -1,0 +1,217 @@
+"""repro.serve.supervisor — keep a durable serving worker alive.
+
+The durability layer (WAL + snapshots) makes the engine's state survive
+process death; this module supplies the process half of the story: run
+the engine as a CHILD process, detect death and hangs, and restart it —
+recovery is then just the child's own `ServeEngine.recover()` running at
+startup, so a supervised restart and a manual restart are the same code
+path.
+
+Detection:
+  death   `Popen.poll()` — any nonzero/signal exit is a crash; exit 0
+          means the workload drained and the supervisor is done.
+  hangs   a heartbeat file the durability layer atomically rewrites at
+          every window commit.  A child that stays alive but stops
+          committing (deadlock, livelock, stuck device call) goes stale;
+          after `heartbeat_timeout` seconds the supervisor SIGKILLs it
+          and treats it as a crash.  The timeout only arms once the
+          child has produced its FIRST heartbeat (startup — imports,
+          compilation — is covered by `startup_timeout`).
+
+Restart policy:
+  backoff  bounded exponential: ``backoff_base * 2**n`` capped at
+           ``backoff_max`` seconds between attempts, reset by a healthy
+           stretch (a heartbeat newer than the last crash).
+  breaker  a crash-loop circuit breaker: more than `max_restarts`
+           crashes within the sliding `crash_window` seconds raises a
+           typed `CrashLoopError` instead of restarting forever — a
+           crash that recovery cannot get past (corrupt store, broken
+           binary) must surface, not spin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.errors import CrashLoopError
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    heartbeat_timeout: float = 30.0  # stale-heartbeat kill threshold (s)
+    startup_timeout: float = 120.0  # first-heartbeat grace (imports/jit)
+    poll_interval: float = 0.05  # child/heartbeat polling cadence (s)
+    backoff_base: float = 0.2  # first restart delay (s)
+    backoff_max: float = 5.0  # exponential backoff cap (s)
+    max_restarts: int = 5  # circuit breaker: crashes tolerated ...
+    crash_window: float = 120.0  # ... within this sliding window (s)
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    outcome: str  # "completed" | "crash_loop"
+    restarts: int
+    exit_codes: List[int]
+    hang_kills: int
+    wall_s: float
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+class Supervisor:
+    """Run `argv` as a child until it exits 0, restarting on crash/hang.
+
+    `heartbeat` is the path the child's durability layer rewrites at every
+    window commit (``<durable_dir>/heartbeat.json``); its mtime is the
+    liveness signal.  The supervisor never reads engine internals — the
+    heartbeat and the exit code are the whole protocol, which is what lets
+    it supervise any worker binary."""
+
+    def __init__(
+        self,
+        argv: Sequence[str],
+        heartbeat: str | Path,
+        config: SupervisorConfig = SupervisorConfig(),
+        env: Optional[Dict[str, str]] = None,
+    ):
+        self.argv = list(argv)
+        self.heartbeat = Path(heartbeat)
+        self.cfg = config
+        self.env = env
+        self._crash_times: List[float] = []
+
+    # -- internals ---------------------------------------------------------
+
+    def _heartbeat_age(self) -> Optional[float]:
+        try:
+            return time.time() - self.heartbeat.stat().st_mtime
+        except OSError:
+            return None
+
+    def _spawn(self) -> subprocess.Popen:
+        env = dict(os.environ)
+        if self.env:
+            env.update(self.env)
+        return subprocess.Popen(self.argv, env=env)
+
+    def _watch(self, child: subprocess.Popen) -> tuple[int, bool]:
+        """Wait for exit or hang; returns (exit_code, hang_killed)."""
+        t_start = time.time()
+        seen_heartbeat = False
+        while True:
+            code = child.poll()
+            if code is not None:
+                return code, False
+            age = self._heartbeat_age()
+            if age is not None and age < self.cfg.startup_timeout:
+                # a heartbeat younger than startup grace exists; once one
+                # is observed, the (tighter) stale threshold arms
+                if age < self.cfg.heartbeat_timeout:
+                    seen_heartbeat = True
+            if seen_heartbeat and age is not None \
+                    and age > self.cfg.heartbeat_timeout:
+                self._kill(child)
+                return child.wait(), True
+            if not seen_heartbeat \
+                    and time.time() - t_start > self.cfg.startup_timeout:
+                self._kill(child)
+                return child.wait(), True
+            time.sleep(self.cfg.poll_interval)
+
+    @staticmethod
+    def _kill(child: subprocess.Popen) -> None:
+        try:
+            child.send_signal(signal.SIGKILL)
+        except (ProcessLookupError, PermissionError):
+            pass
+
+    def _record_crash(self, now: float) -> None:
+        self._crash_times.append(now)
+        cutoff = now - self.cfg.crash_window
+        self._crash_times = [t for t in self._crash_times if t >= cutoff]
+
+    # -- main loop ---------------------------------------------------------
+
+    def run(self) -> SupervisorReport:
+        t0 = time.time()
+        exit_codes: List[int] = []
+        hang_kills = 0
+        restarts = 0
+        attempt = 0
+        while True:
+            child = self._spawn()
+            code, hanged = self._watch(child)
+            exit_codes.append(code)
+            hang_kills += int(hanged)
+            if code == 0 and not hanged:
+                return SupervisorReport(
+                    outcome="completed",
+                    restarts=restarts,
+                    exit_codes=exit_codes,
+                    hang_kills=hang_kills,
+                    wall_s=time.time() - t0,
+                )
+            now = time.time()
+            self._record_crash(now)
+            if len(self._crash_times) > self.cfg.max_restarts:
+                raise CrashLoopError(
+                    len(self._crash_times), self.cfg.crash_window,
+                    exit_codes,
+                )
+            # healthy stretch resets the exponential ladder: a crash long
+            # after the previous one is flapping, not a loop
+            if len(self._crash_times) == 1:
+                attempt = 0
+            delay = min(
+                self.cfg.backoff_base * (2 ** attempt),
+                self.cfg.backoff_max,
+            )
+            attempt += 1
+            restarts += 1
+            time.sleep(delay)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI: ``python -m repro.serve.supervisor --heartbeat H -- cmd ...``"""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--heartbeat", required=True)
+    ap.add_argument("--heartbeat-timeout", type=float, default=30.0)
+    ap.add_argument("--startup-timeout", type=float, default=120.0)
+    ap.add_argument("--max-restarts", type=int, default=5)
+    ap.add_argument("--crash-window", type=float, default=120.0)
+    ap.add_argument("--backoff-base", type=float, default=0.2)
+    ap.add_argument("--backoff-max", type=float, default=5.0)
+    ap.add_argument("cmd", nargs=argparse.REMAINDER,
+                    help="child command (prefix with --)")
+    args = ap.parse_args(argv)
+    cmd = args.cmd[1:] if args.cmd[:1] == ["--"] else args.cmd
+    if not cmd:
+        ap.error("no child command given")
+    sup = Supervisor(cmd, args.heartbeat, SupervisorConfig(
+        heartbeat_timeout=args.heartbeat_timeout,
+        startup_timeout=args.startup_timeout,
+        max_restarts=args.max_restarts,
+        crash_window=args.crash_window,
+        backoff_base=args.backoff_base,
+        backoff_max=args.backoff_max,
+    ))
+    report = sup.run()
+    print(report.as_dict())
+    return 0 if report.outcome == "completed" else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
+
+
+__all__ = ["Supervisor", "SupervisorConfig", "SupervisorReport", "main"]

@@ -1,8 +1,11 @@
 """Sharded checkpointing with atomic manifests, async writes, and elastic
-resharding on restore.
+resharding on restore — a thin training-flavored layer over
+`repro.core.persist` (which owns the tmp+rename+manifest+CRC pattern,
+shared with the serving tier's crash-consistent snapshots).
 
-Layout:
-  <dir>/step_<N>/manifest.json       — step, tree structure, leaf index
+Layout (written by `persist.save_tree`):
+  <dir>/step_<N>/manifest.json       — step, tree structure, leaf index,
+                                       per-shard CRC32
   <dir>/step_<N>/shard_<i>.npz       — flat leaves, chunked by byte budget
   <dir>/LATEST                       — atomic pointer (rename) to step_<N>
 
@@ -16,76 +19,30 @@ checkpoints taken on 512 chips restore onto 256 (or 8) without conversion.
 
 from __future__ import annotations
 
-import json
-import os
-import shutil
 import threading
-import time
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 import jax
-import numpy as np
 
-_SHARD_BYTES = 1 << 30  # 1 GiB per npz shard
+from repro.core import persist
 
-
-def _flatten_with_paths(tree):
-    # jax.tree.flatten_with_path is a late alias of
-    # jax.tree_util.tree_flatten_with_path — use the long-lived spelling.
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    paths = ["/".join(str(k) for k in path) for path, _ in flat]
-    leaves = [leaf for _, leaf in flat]
-    return paths, leaves, treedef
+_SHARD_BYTES = persist.SHARD_BYTES  # 1 GiB per npz shard
 
 
 def save(ckpt_dir: str | Path, step: int, tree: Any, *, async_write: bool = False):
     """Write a checkpoint; atomic LATEST pointer flips only after fsync."""
     ckpt_dir = Path(ckpt_dir)
+    # Snapshot leaves to host BEFORE returning (or spawning the writer
+    # thread): the caller may donate/mutate the live tree right after.
+    import numpy as np
 
-    paths, leaves, _ = _flatten_with_paths(tree)
-    # npz can't serialize ml_dtypes (bf16 etc.) — store as f32 + dtype tag;
-    # restore() casts back to the target structure's dtype.
-    host_leaves, dtypes = [], []
-    for x in leaves:
-        arr = np.asarray(x)
-        dtypes.append(str(arr.dtype))
-        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
-            arr = arr.astype(np.float32)
-        host_leaves.append(arr)
+    host_tree = jax.tree.map(np.asarray, tree)
 
     def _write():
-        tmp = ckpt_dir / f".tmp_step_{step}_{os.getpid()}"
-        if tmp.exists():
-            shutil.rmtree(tmp)
-        tmp.mkdir(parents=True)
-        shards, cur, cur_bytes, idx = [], {}, 0, {}
-        for name, arr in zip(paths, host_leaves):
-            key = f"leaf_{len(cur)}"
-            cur[key] = arr
-            idx[name] = (len(shards), key)
-            cur_bytes += arr.nbytes
-            if cur_bytes >= _SHARD_BYTES:
-                shards.append(cur)
-                cur, cur_bytes = {}, 0
-        shards.append(cur)
-        for i, sh in enumerate(shards):
-            np.savez(tmp / f"shard_{i}.npz", **sh)
-        manifest = {
-            "step": step,
-            "leaves": {n: list(v) for n, v in idx.items()},
-            "dtypes": dict(zip(paths, dtypes)),
-            "n_shards": len(shards),
-            "time": time.time(),
-        }
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
-        final = ckpt_dir / f"step_{step}"
-        if final.exists():
-            shutil.rmtree(final)
-        tmp.rename(final)
-        latest_tmp = ckpt_dir / ".LATEST.tmp"
-        latest_tmp.write_text(f"step_{step}")
-        latest_tmp.rename(ckpt_dir / "LATEST")  # atomic pointer flip
+        persist.save_tree(
+            ckpt_dir, step, host_tree, shard_bytes=_SHARD_BYTES
+        )
 
     if async_write:
         t = threading.Thread(target=_write, daemon=True)
@@ -96,10 +53,7 @@ def save(ckpt_dir: str | Path, step: int, tree: Any, *, async_write: bool = Fals
 
 
 def latest_step(ckpt_dir: str | Path) -> Optional[int]:
-    p = Path(ckpt_dir) / "LATEST"
-    if not p.exists():
-        return None
-    return int(p.read_text().strip().split("_")[1])
+    return persist.latest_step(ckpt_dir)
 
 
 def restore(
@@ -111,30 +65,17 @@ def restore(
     """Restore into the structure of `like` (pytree of arrays or
     ShapeDtypeStructs).  `shardings` (same structure, optional) re-places
     leaves on the current mesh — the elastic-restore path."""
-    ckpt_dir = Path(ckpt_dir)
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no LATEST in {ckpt_dir}")
-    d = ckpt_dir / f"step_{step}"
-    manifest = json.loads((d / "manifest.json").read_text())
-    shard_cache: Dict[int, Any] = {}
-
-    paths, leaves, treedef = _flatten_with_paths(like)
     sh_flat = None
     if shardings is not None:
+        _, _, treedef = persist.flatten_with_paths(like)
         sh_flat = treedef.flatten_up_to(shardings)
 
-    out = []
-    for i, (name, leaf) in enumerate(zip(paths, leaves)):
-        shard_i, key = manifest["leaves"][name]
-        if shard_i not in shard_cache:
-            shard_cache[shard_i] = np.load(d / f"shard_{shard_i}.npz")
-        arr = shard_cache[shard_i][key]
+    def place(i, arr, leaf):
         if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
             arr = arr.astype(leaf.dtype)
         if sh_flat is not None:
-            out.append(jax.device_put(arr, sh_flat[i]))
-        else:
-            out.append(jax.numpy.asarray(arr))
-    return jax.tree.unflatten(treedef, out)
+            return jax.device_put(arr, sh_flat[i])
+        return jax.numpy.asarray(arr)
+
+    tree, _manifest = persist.load_tree(ckpt_dir, like, step, place=place)
+    return tree

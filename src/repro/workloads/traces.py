@@ -93,9 +93,17 @@ def trace_rngs(trace: Trace) -> jax.Array:
 
 
 def save_trace(path, trace: Trace) -> None:
-    """Persist to the small npz interchange format (int32 throughout)."""
-    np.savez_compressed(
-        path, ops=trace.ops.astype(np.int32),
+    """Persist to the small npz interchange format (int32 throughout).
+
+    Atomic (tmp + fsync + rename via `repro.core.persist`): a crash mid-
+    save leaves the previous trace or none — the truncated-npz corruption
+    `faults.corrupt_trace_npz` simulates can only be injected, never
+    produced by this writer."""
+    from repro.core.persist import atomic_savez
+
+    atomic_savez(
+        path, compressed=True,
+        ops=trace.ops.astype(np.int32),
         keys=trace.keys.astype(np.int32), vals=trace.vals.astype(np.int32),
         num_clients=trace.num_clients.astype(np.int32),
         seed=np.int64(trace.seed),

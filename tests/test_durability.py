@@ -1,0 +1,440 @@
+"""Durable serving: WAL framing, crash-consistent snapshots, recovery
+bit-identity, and the supervisor's restart policy.
+
+The recovery contract under test (the tentpole's acceptance bar): kill a
+durable serving run at an arbitrary point and restart it, and the
+finished run is BIT-IDENTICAL to one that was never interrupted —
+completion sets, per-request done steps, emitted tokens, the device
+carry's fingerprint, and the request-conservation ledger
+(``inserted + arrival_backlog + shed + evicted == arrivals``) all match
+exactly.  The in-process tests cover clean pause/resume and the
+snapshot/WAL plumbing; the slow subprocess drills SIGKILL a real worker
+mid-window for K in {1, 16} and diff its artifacts against an
+uninterrupted reference.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.core import persist  # noqa: E402
+from repro.core.errors import (  # noqa: E402
+    CrashLoopError,
+    SnapshotCorruptError,
+)
+from repro.serve.durability import (  # noqa: E402
+    DurabilityConfig,
+    DurableStore,
+    WriteAheadLog,
+)
+from repro.serve.engine import EngineConfig, ServeEngine  # noqa: E402
+from repro.serve.supervisor import (  # noqa: E402
+    Supervisor,
+    SupervisorConfig,
+)
+from repro.workloads.traces import bursty_serve_workload  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# WAL framing
+# ---------------------------------------------------------------------------
+
+
+def test_wal_roundtrip(tmp_path):
+    wal = WriteAheadLog(tmp_path / "wal.log")
+    recs = [{"kind": "window", "step0": i, "arrivals": [[]]}
+            for i in range(5)]
+    for r in recs:
+        wal.append(r)
+    wal.sync()
+    wal.close()
+    got, dropped_r, dropped_b = WriteAheadLog(tmp_path / "wal.log").recover()
+    assert got == recs and dropped_r == 0 and dropped_b == 0
+
+
+def test_wal_torn_tail_truncated_not_crashed(tmp_path):
+    """A partial final frame (crash mid-append) is detected by the CRC
+    framing and truncated away; the intact prefix survives."""
+    path = tmp_path / "wal.log"
+    wal = WriteAheadLog(path)
+    wal.append({"a": 1})
+    wal.append({"b": 2})
+    wal.sync()
+    wal.close()
+    blob = path.read_bytes()
+    path.write_bytes(blob[:-3])  # tear the last frame
+    got, dropped_r, dropped_b = WriteAheadLog(path).recover()
+    assert got == [{"a": 1}] and dropped_r == 1 and dropped_b > 0
+    again, r2, b2 = WriteAheadLog(path).recover()
+    assert again == got and r2 == 0 and b2 == 0, "truncate was not durable"
+
+
+def test_wal_append_after_recovery_continues_cleanly(tmp_path):
+    path = tmp_path / "wal.log"
+    wal = WriteAheadLog(path)
+    wal.append({"n": 0})
+    wal.sync()
+    wal.close()
+    path.write_bytes(path.read_bytes() + b"\x07garbage")
+    wal2 = WriteAheadLog(path)
+    assert wal2.recover()[0] == [{"n": 0}]
+    wal2.append({"n": 1})
+    wal2.sync()
+    wal2.close()
+    assert WriteAheadLog(path).recover()[0] == [{"n": 0}, {"n": 1}]
+
+
+# ---------------------------------------------------------------------------
+# persist: atomic snapshot tree + newest-valid recovery rule
+# ---------------------------------------------------------------------------
+
+
+def _tree(k: int):
+    return {"a": np.arange(6, dtype=np.int64) + k,
+            "b": {"c": np.full((2, 3), float(k), np.float32)}}
+
+
+def test_save_tree_roundtrip_and_latest(tmp_path):
+    persist.save_tree(tmp_path, 3, _tree(3), extra={"tag": "x"})
+    persist.save_tree(tmp_path, 7, _tree(7))
+    assert persist.latest_step(tmp_path) == 7
+    assert persist.available_steps(tmp_path) == [7, 3]
+    tree, manifest = persist.load_tree(tmp_path, _tree(0), 3)
+    assert manifest["extra"] == {"tag": "x"}
+    assert np.array_equal(np.asarray(tree["a"]), np.arange(6) + 3)
+    assert np.asarray(tree["b"]["c"]).dtype == np.float32
+
+
+def test_newest_valid_skips_corrupt_snapshot(tmp_path):
+    persist.save_tree(tmp_path, 2, _tree(2))
+    persist.save_tree(tmp_path, 5, _tree(5))
+    shard = persist.step_dir(tmp_path, 5) / "shard_0.npz"
+    shard.write_bytes(shard.read_bytes()[:40])  # torn write
+    with pytest.raises(SnapshotCorruptError):
+        persist.validate_step(tmp_path, 5)
+    assert persist.newest_valid_step(tmp_path) == 2
+
+
+def test_prune_keeps_newest_and_latest(tmp_path):
+    for s in (1, 2, 3, 4):
+        persist.save_tree(tmp_path, s, _tree(s))
+    removed = persist.prune_steps(tmp_path, keep=2)
+    assert removed == 2
+    assert persist.available_steps(tmp_path) == [4, 3]
+
+
+def test_atomic_savez_replaces_never_tears(tmp_path):
+    p = tmp_path / "t.npz"
+    persist.atomic_savez(p, x=np.arange(4))
+    persist.atomic_savez(p, x=np.arange(9))
+    with np.load(p) as z:
+        assert z["x"].shape == (9,)
+    assert not list(tmp_path.glob(".t.npz.*")), "tmp files leaked"
+
+
+# ---------------------------------------------------------------------------
+# DurableStore: snapshot cadence + WAL suffix selection
+# ---------------------------------------------------------------------------
+
+
+def test_store_snapshot_cadence_and_suffix(tmp_path):
+    store = DurableStore(DurabilityConfig(
+        dir=tmp_path, snapshot_interval=2, keep_snapshots=2,
+    ))
+    for w in range(4):
+        store.log_window(w * 4, [[]])
+        store.log_commit((w + 1) * 4)
+        store.window_committed()
+        if store.should_snapshot():
+            store.snapshot((w + 1) * 4, {"x": np.arange(3)}, {"w": w})
+    assert store.stats.snapshots_written == 2  # after windows 2 and 4
+    assert store.stats.last_snapshot_step == 16
+    # replay suffix after the step-8 snapshot: windows starting at >= 8
+    fresh = DurableStore(DurabilityConfig(dir=tmp_path))
+    suffix = fresh.window_suffix(8)
+    assert [r["step0"] for r in suffix] == [8, 12]
+    got = fresh.load_newest_valid({"x": np.zeros(3, np.int64)})
+    assert got is not None and got[0] == 16 and got[2] == {"w": 3}
+    assert (tmp_path / "heartbeat.json").exists()
+    store.close()
+
+
+def test_store_empty_dir_recovers_to_nothing(tmp_path):
+    store = DurableStore(DurabilityConfig(dir=tmp_path / "new"))
+    assert store.read_wal() == []
+    assert store.load_newest_valid({"x": np.zeros(2)}) is None
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# engine: health surface, pause/resume bit-identity
+# ---------------------------------------------------------------------------
+
+
+def _engine(tmp_path=None, K=1, seed=3, **kw):
+    return ServeEngine(None, None, EngineConfig(
+        batch_size=4, sched_window=K,
+        durable_dir=None if tmp_path is None else str(tmp_path),
+        snapshot_interval=3, **kw,
+    ), seed=seed)
+
+
+def _fingerprints(eng):
+    from repro.core.smartpq import carry_fingerprint
+
+    return (
+        dict(eng.done_step),
+        {u: list(v) for u, v in eng.outputs.items()},
+        carry_fingerprint(eng.scheduler.carry),
+    )
+
+
+def test_health_surface_and_conservation():
+    wl = bursty_serve_workload(steps=12, seed=5)
+    eng = _engine(K=4, seed=5)
+    eng.run(wl, max_steps=200)
+    h = eng.health()
+    total = sum(len(t) for t in wl)
+    assert h["inserted"] + h["arrival_backlog"] + h["shed"] \
+        + h["evicted"] == total
+    assert h["inserted"] == h["dispatched"] + h["on_device"]
+    assert h["completed"] == len(eng.done_step)
+    assert h["durability"] is None and h["overload"] is None
+    for key in ("recovered_windows", "failed_windows", "admit_backlog",
+                "free_slots", "pq_transitions", "service_est"):
+        assert key in h
+
+
+@pytest.mark.parametrize("K", [1, 4])
+def test_pause_resume_bit_identical(tmp_path, K):
+    """A durable run paused at a window boundary and resumed by a FRESH
+    engine (snapshot restore, no replay needed) finishes bit-identical to
+    an uninterrupted durable run."""
+    wl = bursty_serve_workload(steps=16, seed=3)
+    ref = _engine(tmp_path / "ref", K=K)
+    ref.run(wl, max_steps=500)
+
+    e1 = _engine(tmp_path / "cut", K=K)
+    e1.run(wl, max_steps=8)
+    assert e1._step == 8
+    e2 = _engine(tmp_path / "cut", K=K)
+    e2.run(wl, max_steps=500)
+
+    assert _fingerprints(ref) == _fingerprints(e2)
+    hr, h2 = ref.health(), e2.health()
+    for k in ("inserted", "dispatched", "shed", "evicted", "completed",
+              "on_device", "arrival_backlog"):
+        assert hr[k] == h2[k], k
+    for e in (ref, e1, e2):
+        e.durability.close()
+
+
+def test_recover_replays_wal_suffix_after_torn_commit(tmp_path):
+    """Simulate a crash mid-window: log_window written, no commit, state
+    not snapshotted — a fresh engine's recover() must replay the window
+    and land on the same state the crashed engine reached."""
+    wl = bursty_serve_workload(steps=8, seed=9)
+    live = _engine(tmp_path / "d", K=4, seed=9)
+    # run two windows by hand through the durable path
+    for w in range(2):
+        arr = [wl[w * 4 + i] for i in range(4)]
+        live.durability.log_window(w * 4, arr)
+        live._advance(arr, w * 4, 1 << 62)
+        if w == 0:
+            live.durability.log_commit(live._step)
+    # crash here: window 1 logged but uncommitted, nothing snapshotted
+    live_prints = _fingerprints(live)
+    live.durability.close()
+
+    fresh = _engine(tmp_path / "d", K=4, seed=9)
+    info = fresh.recover()
+    assert info["snapshot_step"] is None
+    assert info["replayed_windows"] == 2
+    assert _fingerprints(fresh) == live_prints
+    assert fresh.durability.stats.replayed_windows == 2
+    fresh.durability.close()
+
+
+def test_recover_rejects_carry_fingerprint_mismatch(tmp_path):
+    wl = bursty_serve_workload(steps=4, seed=2)
+    eng = _engine(tmp_path / "d", K=1, seed=2)
+    eng.run(wl, max_steps=4)
+    eng.durability.close()
+    # doctor the manifest's stamped fingerprint: restore must refuse
+    snap_root = Path(tmp_path / "d") / "snapshots"
+    step = persist.latest_step(snap_root)
+    mpath = persist.step_dir(snap_root, step) / "manifest.json"
+    m = json.loads(mpath.read_text())
+    m["extra"]["carry_crc"] ^= 0xDEAD
+    mpath.write_text(json.dumps(m))
+    # shard CRCs still validate -> load succeeds -> fingerprint check fires
+    fresh = _engine(tmp_path / "d", K=1, seed=2)
+    with pytest.raises(SnapshotCorruptError):
+        fresh.recover()
+    fresh.durability.close()
+
+
+# ---------------------------------------------------------------------------
+# supervisor
+# ---------------------------------------------------------------------------
+
+_SUP_CFG = SupervisorConfig(
+    heartbeat_timeout=1.0, startup_timeout=10.0, poll_interval=0.02,
+    backoff_base=0.02, backoff_max=0.1, max_restarts=3, crash_window=60.0,
+)
+
+
+def _script_child(tmp_path, body: str):
+    p = tmp_path / "child.py"
+    p.write_text(body)
+    return [sys.executable, str(p)]
+
+
+def test_supervisor_restarts_until_success(tmp_path):
+    """Child crashes twice then succeeds: two restarts, outcome completed."""
+    argv = _script_child(tmp_path, f"""
+import os, sys
+count = "{tmp_path}/count"
+n = int(open(count).read()) if os.path.exists(count) else 0
+open(count, "w").write(str(n + 1))
+sys.exit(0 if n >= 2 else 1)
+""")
+    rep = Supervisor(argv, tmp_path / "hb.json", _SUP_CFG).run()
+    assert rep.outcome == "completed"
+    assert rep.restarts == 2
+    assert rep.exit_codes == [1, 1, 0]
+    assert rep.hang_kills == 0
+
+
+def test_supervisor_kills_hung_child(tmp_path):
+    """Child heartbeats once then wedges: the stale-heartbeat watchdog
+    SIGKILLs it; the restarted incarnation (marker present) exits clean."""
+    argv = _script_child(tmp_path, f"""
+import json, os, sys, time
+marker = "{tmp_path}/ran_once"
+if os.path.exists(marker):
+    sys.exit(0)
+open(marker, "w").write("1")
+open("{tmp_path}/hb.json", "w").write(json.dumps({{"step": 1}}))
+time.sleep(120)  # wedged: no further heartbeats
+""")
+    t0 = time.time()
+    rep = Supervisor(argv, tmp_path / "hb.json", _SUP_CFG).run()
+    assert rep.outcome == "completed"
+    assert rep.hang_kills == 1
+    assert rep.exit_codes[0] == -9
+    assert time.time() - t0 < 60, "watchdog did not fire promptly"
+
+
+def test_supervisor_circuit_breaker_trips(tmp_path):
+    argv = _script_child(tmp_path, "import sys; sys.exit(1)\n")
+    with pytest.raises(CrashLoopError) as ei:
+        Supervisor(argv, tmp_path / "hb.json", _SUP_CFG).run()
+    assert ei.value.code == "CRASH_LOOP"
+    assert len(ei.value.exit_codes) == _SUP_CFG.max_restarts + 1
+
+
+# ---------------------------------------------------------------------------
+# subprocess crash drills (slow lane): SIGKILL mid-window, bit-identical
+# recovery for K in {1, 16}
+# ---------------------------------------------------------------------------
+
+
+def _worker(store, out, *, K, kill_at=None, marker=None, steps=24, seed=3):
+    cmd = [
+        sys.executable, "-m", "repro.serve.worker",
+        "--dir", str(store), "--out", str(out),
+        "--steps", str(steps), "--seed", str(seed),
+        "--window", str(K), "--snapshot-interval", "3",
+    ]
+    if kill_at is not None:
+        cmd += ["--sigkill-at-step", str(kill_at)]
+    if marker is not None:
+        cmd += ["--crash-marker", str(marker)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        cmd, cwd=str(REPO), env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("K", [1, 16])
+def test_sigkill_recovery_bit_identical(tmp_path, K):
+    """THE acceptance drill: SIGKILL a durable worker mid-window (after
+    the WAL append, before the commit), restart it, and diff every
+    artifact against an uninterrupted run — completion set, per-request
+    done steps, emitted-token CRC, device-carry fingerprint, and the
+    request-conservation ledger must all be bit-identical."""
+    # seed-chosen kill point: mid-run, not window-aligned for K=16
+    kill_at = 9
+    ref = _worker(tmp_path / "ref_store", tmp_path / "ref.json", K=K)
+    assert ref.returncode == 0, ref.stderr[-3000:]
+
+    crash = _worker(
+        tmp_path / "c_store", tmp_path / "c.json", K=K,
+        kill_at=kill_at, marker=tmp_path / "marker",
+    )
+    assert crash.returncode == -9, (
+        f"worker did not die by SIGKILL: rc={crash.returncode}\n"
+        f"{crash.stderr[-3000:]}"
+    )
+    assert not (tmp_path / "c.json").exists(), "dead worker wrote results"
+    assert (tmp_path / "c_store" / "wal.log").exists()
+
+    restart = _worker(
+        tmp_path / "c_store", tmp_path / "c.json", K=K,
+        kill_at=kill_at, marker=tmp_path / "marker",  # same cmdline
+    )
+    assert restart.returncode == 0, restart.stderr[-3000:]
+
+    a = json.loads((tmp_path / "ref.json").read_text())
+    b = json.loads((tmp_path / "c.json").read_text())
+    for key in ("completions", "done_step", "outputs_crc", "carry_crc",
+                "conservation"):
+        assert a[key] == b[key], f"{key} diverged after crash+recovery"
+    assert b["conservation"]["admitted_ok"]
+    assert b["conservation"]["dispatch_ok"]
+    dur = b["health"]["durability"]
+    assert dur["replayed_windows"] >= 1, "recovery replayed nothing"
+
+
+@pytest.mark.slow
+def test_supervised_worker_survives_crash(tmp_path):
+    """End to end: the Supervisor runs the worker, the worker SIGKILLs
+    itself mid-window, the supervisor restarts it, and the supervised
+    result matches an uninterrupted reference."""
+    ref = _worker(tmp_path / "ref_store", tmp_path / "ref.json", K=4)
+    assert ref.returncode == 0, ref.stderr[-3000:]
+
+    argv = [
+        sys.executable, "-m", "repro.serve.worker",
+        "--dir", str(tmp_path / "s_store"), "--out", str(tmp_path / "s.json"),
+        "--steps", "24", "--seed", "3", "--window", "4",
+        "--snapshot-interval", "3",
+        "--sigkill-at-step", "9", "--crash-marker", str(tmp_path / "m"),
+    ]
+    env = {"PYTHONPATH": str(REPO / "src")}
+    sup = Supervisor(
+        argv, tmp_path / "s_store" / "heartbeat.json",
+        SupervisorConfig(heartbeat_timeout=60.0, startup_timeout=300.0,
+                         poll_interval=0.05, backoff_base=0.05),
+        env=env,
+    )
+    rep = sup.run()
+    assert rep.outcome == "completed"
+    assert rep.restarts == 1 and rep.exit_codes == [-9, 0]
+    a = json.loads((tmp_path / "ref.json").read_text())
+    b = json.loads((tmp_path / "s.json").read_text())
+    assert a["carry_crc"] == b["carry_crc"]
+    assert a["completions"] == b["completions"]

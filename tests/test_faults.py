@@ -269,3 +269,135 @@ def test_validator_tripwire_double_trip_surfaces_error():
 def test_unknown_fault_kind_is_rejected():
     with pytest.raises(KeyError):
         inject(None, FaultSpec(kind="not_a_registered_fault"))
+
+
+# ---------------------------------------------------------------------------
+# durability injectors: torn WAL, damaged snapshots, process crash
+# ---------------------------------------------------------------------------
+
+
+def _store(tmp_path, **kw):
+    from repro.serve.durability import DurabilityConfig, DurableStore
+
+    return DurableStore(DurabilityConfig(dir=tmp_path / "store", **kw))
+
+
+def _log_windows(store, n=4):
+    reqs = open_loop_requests(
+        poisson_arrival_counts(n, 3.0, seed=1), seed=1
+    )
+    for t in range(n):
+        store.log_window(t, [reqs[t]])
+        store.log_commit(t + 1)
+    return reqs
+
+
+@pytest.mark.parametrize("variant", ["", "flip", "garbage"])
+def test_torn_wal_prefix_recovered_and_truncated(tmp_path, variant):
+    """`torn_wal`: whatever shape the torn tail takes, recovery returns
+    the intact record prefix, truncates the file to it, and a second
+    recovery is clean — never an exception, never a half-parsed record."""
+    from repro.serve.durability import WriteAheadLog
+
+    store = _store(tmp_path)
+    _log_windows(store, n=4)
+    store.close()
+    whole = WriteAheadLog(store.wal.path).recover()[0]
+    assert len(whole) == 8  # 4 windows + 4 commits
+
+    inject(store, FaultSpec(kind="torn_wal", variant=variant, rate=0.5))
+    records, dropped_r, dropped_b = WriteAheadLog(store.wal.path).recover()
+    assert records == whole[: len(records)], "recovered prefix diverged"
+    if variant == "flip":
+        assert len(records) < len(whole), "flip went undetected"
+    else:
+        assert dropped_b > 0 and dropped_r >= 1
+    again, r2, b2 = WriteAheadLog(store.wal.path).recover()
+    assert again == records and r2 == 0 and b2 == 0, (
+        "truncation did not leave a clean log"
+    )
+
+
+@pytest.mark.parametrize("variant", ["truncate", "delete"])
+def test_partial_snapshot_falls_back_to_older(tmp_path, variant):
+    """`partial_snapshot`: a snapshot missing/truncating a payload shard
+    must be skipped WITH accounting and recovery must land on the older
+    intact snapshot."""
+    store = _store(tmp_path)
+    like = {"x": np.arange(8, dtype=np.int32)}
+    store.snapshot(4, {"x": np.arange(8, dtype=np.int32)}, {"tag": "old"})
+    store.snapshot(8, {"x": np.arange(8, dtype=np.int32) * 2},
+                   {"tag": "new"})
+    inject(store, FaultSpec(kind="partial_snapshot", variant=variant))
+    got = store.load_newest_valid(like)
+    assert got is not None, "older intact snapshot was not found"
+    step, tree, extra = got
+    assert step == 4 and extra["tag"] == "old"
+    assert np.array_equal(np.asarray(tree["x"]), np.arange(8))
+    assert store.stats.snapshots_skipped_invalid == 1
+
+
+@pytest.mark.parametrize("variant", ["", "garbage"])
+def test_stale_manifest_recovery_scans_to_valid(tmp_path, variant):
+    """`stale_manifest`: a LATEST pointer naming a step that is not on
+    disk (default) or an unparseable manifest on the newest step
+    ('garbage') — recovery scans newest-first and still loads a valid
+    snapshot."""
+    store = _store(tmp_path)
+    like = {"x": np.zeros(4, np.int64)}
+    store.snapshot(2, {"x": np.full(4, 2, np.int64)}, {"s": 2})
+    store.snapshot(6, {"x": np.full(4, 6, np.int64)}, {"s": 6})
+    inject(store, FaultSpec(kind="stale_manifest", variant=variant))
+    got = store.load_newest_valid(like)
+    assert got is not None
+    step, tree, extra = got
+    want = 2 if variant == "garbage" else 6
+    assert step == want and extra["s"] == want
+    assert int(np.asarray(tree["x"])[0]) == want
+
+
+def test_crash_at_step_marker_disarms_inline():
+    """`crash_at_step` with an existing marker (a prior incarnation
+    already crashed) must be a transparent no-op wrapper — the engine
+    completes normally.  The live-fire SIGKILL path is exercised in the
+    subprocess drills of tests/test_durability.py."""
+    import tempfile
+
+    with tempfile.NamedTemporaryFile() as marker:
+        eng = ServeEngine(None, None, EngineConfig(batch_size=4), seed=0)
+        inject(eng, FaultSpec(
+            kind="crash_at_step", magnitude=0.0, variant=marker.name,
+        ))
+        wl = open_loop_requests(
+            poisson_arrival_counts(6, 2.0, seed=2), seed=2
+        )
+        summary = eng.run(wl, max_steps=64)
+        assert summary["completed"] == sum(len(t) for t in wl)
+
+
+def test_crash_at_step_kills_the_process():
+    """`crash_at_step` unarmed (no marker): the wrapped step must SIGKILL
+    the process at the chosen engine step — verified in a subprocess."""
+    import subprocess
+
+    code = (
+        "import sys; sys.path.insert(0, 'src')\n"
+        "from repro.faults import FaultSpec, inject\n"
+        "from repro.serve.engine import EngineConfig, ServeEngine\n"
+        "from repro.workloads.traces import (open_loop_requests,"
+        " poisson_arrival_counts)\n"
+        "eng = ServeEngine(None, None, EngineConfig(batch_size=2), seed=0)\n"
+        "inject(eng, FaultSpec(kind='crash_at_step', magnitude=2.0))\n"
+        "wl = open_loop_requests(poisson_arrival_counts(4, 2.0, 3), seed=3)\n"
+        "eng.run(wl, max_steps=32)\n"
+        "print('survived')\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        cwd=str(Path(__file__).resolve().parents[1]),
+        capture_output=True, text=True, timeout=300,
+    )
+    assert proc.returncode == -9, (
+        f"expected SIGKILL, got rc={proc.returncode}\n{proc.stderr[-2000:]}"
+    )
+    assert "survived" not in proc.stdout
