@@ -246,16 +246,30 @@ CSV_ROWS: List[str] = []
 # Machine-readable benchmark records (written to BENCH_pq.json by run.py).
 # Schema per record — stable keys so successive commits diff cleanly:
 #   {"suite": str, "name": str, "us_per_call": float, "derived": str,
+#    "backend": str, "jax": str, "platform": str,
 #    <optional structured fields: schedule, workload, us_per_step, mops,
 #     capacity, size, insert_frac, num_clients, num_shards>}
+# backend/jax/platform are stamped PER RECORD (not just at the file's top
+# level) so a BENCH_pq.json merged across platforms stays interpretable.
 BENCH_RECORDS: List[Dict] = []
+
+# Platform label stamped into every record: run.py --platform overrides;
+# default is the jax backend of this process.
+_PLATFORM: Optional[str] = None
+
+
+def set_platform(platform: Optional[str]) -> None:
+    global _PLATFORM
+    _PLATFORM = platform
 
 
 def emit(name: str, us_per_call: float, derived: str = "", **fields):
     row = f"{name},{us_per_call:.1f},{derived}"
     CSV_ROWS.append(row)
     rec = {"suite": name.split("/", 1)[0], "name": name,
-           "us_per_call": round(float(us_per_call), 3), "derived": derived}
+           "us_per_call": round(float(us_per_call), 3), "derived": derived,
+           "backend": jax.default_backend(), "jax": jax.__version__,
+           "platform": _PLATFORM or jax.default_backend()}
     rec.update(fields)
     BENCH_RECORDS.append(rec)
     print(row)

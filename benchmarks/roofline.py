@@ -76,7 +76,30 @@ def roofline_row(rec: dict) -> dict:
     }
 
 
+def run_kernels():
+    """Per-kernel roofline terms from the registry cost models: for every
+    registered kernel x tuning shape, the analytic bytes / compare-op
+    estimates and the HBM-bandwidth time proxy.  These are the structural
+    numbers that transfer to real TPU hardware (wall-clock medians for the
+    same shapes live in the kernels_autotune suite records)."""
+    from repro.kernels import registry as REG
+
+    for spec in REG.REGISTRY.values():
+        for coords in spec.tuning_shapes:
+            cost = spec.cost_model(coords)
+            b, ops = cost["bytes"], cost["cmp_ops"]
+            t_mem_us = b / HBM_BW * 1e6
+            emit(
+                f"roofline/kernels/{spec.name}/{REG.sig(coords)}", t_mem_us,
+                f"bytes={b};cmp_ops={ops:.0f};"
+                f"intensity={ops / max(b, 1):.3f}ops_per_byte;"
+                f"t_hbm_us={t_mem_us:.3f}",
+                bytes=b, cmp_ops=round(ops, 1),
+            )
+
+
 def run(quick: bool = False):
+    run_kernels()
     rows = []
     for arch in list_configs():
         for shape in SHAPES:

@@ -21,8 +21,14 @@ def main() -> None:
     ap.add_argument(
         "--only", default=None,
         help="comma list of: fig1,fig7,fig9,fig9_latency,fig9_window,fig10,"
-             "fig12,classifier,roofline,kernels,rank_error,smoke,"
-             "workloads_sssp,workloads_des,serve_slo,overload,durability",
+             "fig12,classifier,roofline,kernels,kernels_autotune,rank_error,"
+             "smoke,workloads_sssp,workloads_des,serve_slo,overload,"
+             "durability",
+    )
+    ap.add_argument(
+        "--platform", default=None, metavar="NAME",
+        help="platform label stamped into every record (default: the jax "
+             "backend, e.g. cpu/tpu — override for e.g. 'tpu-v5e')",
     )
     ap.add_argument(
         "--schedule", default="all",
@@ -73,6 +79,7 @@ def main() -> None:
         fig9_grid,
         fig10_dynamic,
         fig12_cpu_adaptive,
+        kernels_autotune,
         kernels_bench,
         multiq_rank_error,
         overload,
@@ -82,6 +89,8 @@ def main() -> None:
         window_amortization,
         workloads_bench,
     )
+
+    common.set_platform(args.platform)
 
     suites = {
         "fig1": fig1_mix.run,
@@ -93,6 +102,7 @@ def main() -> None:
         "fig12": fig12_cpu_adaptive.run,
         "classifier": classifier_eval.run,
         "kernels": kernels_bench.run,
+        "kernels_autotune": kernels_autotune.run,
         "roofline": roofline.run,
         "rank_error": lambda quick=False: multiq_rank_error.run(
             quick=quick, schedule=args.schedule
@@ -149,6 +159,14 @@ def main() -> None:
                 r for r in prev["records"]
                 if r["name"] not in fresh_names
             ]
+            # per-record provenance: retained records from files written
+            # before per-record stamping inherit the file-level values, so
+            # a mixed-platform merge stays interpretable record by record
+            for r in kept:
+                r.setdefault("backend", prev.get("backend"))
+                r.setdefault("jax", prev.get("jax"))
+                r.setdefault("platform", prev.get("platform",
+                                                  prev.get("backend")))
             records = kept + records
         payload = {
             "schema": 1,

@@ -34,9 +34,36 @@ def run(quick: bool = False):
              schedule=sched.name, us_per_step=round(us, 3),
              **workload_fields(w))
     _run_workloads()
+    _run_kernels()
     _run_serve()
     _run_overload()
     _run_durability()
+
+
+def _run_kernels():
+    """Seconds-scale probe of registry-dispatched kernels at hot shapes —
+    times whatever arm `registry.resolve` picks (tuned winner when the
+    committed tuning cache has a record, the safe default otherwise), so
+    the `--smoke --check` 2x gate covers the dispatch layer itself."""
+    from benchmarks.common import time_op
+    from repro.kernels import ops as K
+    from repro.kernels import registry as REG
+
+    probes = [
+        ("topk_smallest", {"R": 1, "N": 1024, "k": 64, "dtype": "int32"}),
+        ("elim_sort", {"R": 64, "B": 64}),
+        ("windowed_merge", {"S": 16, "H": 256, "R": 64}),
+    ]
+    rng = np.random.default_rng(0)
+    for name, coords in probes:
+        spec = REG.REGISTRY[name]
+        args, kwargs = spec.make_inputs(coords, rng)
+        fn = getattr(K, name)
+        arm = REG.resolve(name, coords)  # whatever production would pick
+        us = time_op(lambda *a: fn(*a, **kwargs), *args, iters=8)
+        emit(f"smoke/kernels/{name}", us,
+             f"arm={arm};sig={REG.sig(coords)}",
+             arm=arm, sig=REG.sig(coords))
 
 
 def _run_serve():

@@ -72,6 +72,50 @@ def run_sssp(quick: bool = False):
         f"transitions={r.transitions}",
         us_per_step=round(us, 3), n_vertices=g.n, n_edges=g.num_edges,
     )
+    _run_segmin_scaling(g, quick)
+
+
+def _run_segmin_scaling(g, quick: bool):
+    """Scatter-min vs sort-based segment-min across relax wavefront widths.
+
+    E = m * deg_cap is the candidate-edge count one SSSP relax handles for
+    a pop batch of m; sweeping m shows how each arm scales with wavefront
+    width.  us_per_call is the registry-DISPATCHED arm's time (what
+    `_relax` actually pays); both static arms are recorded per width so
+    the crossover (if this backend ever has one) is visible in the
+    trajectory."""
+    from benchmarks.common import time_op
+    from repro.kernels import registry as REG
+    from repro.kernels.ops import segment_min_into
+
+    deg_cap, n = g.deg_cap, g.n
+    # m=32 and m=256 land on the registry tuning shapes (E=256 / E=2048 at
+    # deg_cap=8), so the dispatched arm is the tuned winner there; m=1024
+    # extends the sweep past the tuned keys (dispatch = safe default).
+    widths = [32] if quick else [32, 256, 1024]
+    rng = np.random.default_rng(7)
+    for m in widths:
+        E = m * deg_cap
+        coords = {"E": E, "n": n}
+        args, _ = REG.REGISTRY["segment_min_into"].make_inputs(coords, rng)
+        times = {
+            a: time_op(lambda *x: segment_min_into(*x, arm=a), *args,
+                       iters=10)
+            for a in ("scatter", "sorted")
+        }
+        arm = REG.resolve("segment_min_into", coords)
+        us = times.get(arm)
+        if us is None:  # a tuned/forced arm outside the pair above
+            us = time_op(lambda *x: segment_min_into(*x, arm=arm), *args,
+                         iters=10)
+        emit(
+            f"workloads_sssp/segmin/E{E}", us,
+            f"arm={arm};scatter_us={times['scatter']:.1f};"
+            f"sorted_us={times['sorted']:.1f};m={m};deg_cap={deg_cap}",
+            arm=arm, wavefront=m,
+            scatter_us=round(times["scatter"], 3),
+            sorted_us=round(times["sorted"], 3),
+        )
 
 
 DES_CAST = [

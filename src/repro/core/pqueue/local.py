@@ -1,8 +1,10 @@
 """Per-shard local primitives, vectorized over the shard axis.
 
-These are the jnp reference paths; `repro.kernels` provides Pallas TPU
-kernels for the hot spots (windowed head merge for insert, bitonic top-k for
-the deleteMin tournament) that bit-match these functions (tests sweep both).
+The hot-spot primitives (windowed head merge for insert, bitonic top-k for
+the deleteMin tournament, the elimination-match sort, MULTIQ probe/select)
+dispatch through `repro.kernels.registry` — per-(platform, shape) arm
+choice between the jnp paths and the Pallas networks, all bit-identical
+(tests sweep every arm).
 
 All hot-path functions operate on the **head tier** ``(S, H)`` of the tiered
 `PQState` (H static, small) so per-step cost scales with the batch /
@@ -15,8 +17,7 @@ head-window size rather than the queue capacity.  The cold tail arena
 from __future__ import annotations
 
 import dataclasses
-import os
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,16 +37,11 @@ TAIL_BUCKET_WIDTH = 256
 # well before a shard's monotone next_seq could wrap int32.
 SEQ_RENUMBER_THRESHOLD = _INT32_MAX - (1 << 24)
 
-# Kernel dispatch: the Pallas kernels run on TPU; the jnp paths are the
-# oracle (and the CPU default — interpret-mode kernels are Python-slow).
-# REPRO_PQ_KERNELS=1 forces the kernel path.
-_USE_KERNELS_ENV = os.environ.get("REPRO_PQ_KERNELS", "") == "1"
-
-
-def _kernels_enabled() -> bool:
-    if _USE_KERNELS_ENV:
-        return True
-    return jax.default_backend() == "tpu"
+# Kernel dispatch lives in `repro.kernels.registry`: every hot-path
+# primitive below forwards to its `repro.kernels.ops` wrapper, which picks
+# an implementation arm per (platform, shape) — tuned winner when the
+# tuning cache has one, safe jnp default otherwise.  Pass ``arm=`` (or use
+# `registry.force_arms`) to pin a specific arm in tests/benchmarks.
 
 
 def _key_seq_order(keys: jnp.ndarray, seq: jnp.ndarray) -> jnp.ndarray:
@@ -67,26 +63,36 @@ def merge_head_run(
     run_k: jnp.ndarray,  # (S, R) ascending, INF-padded
     run_v: jnp.ndarray,
     run_q: jnp.ndarray,
-    use_kernel: bool | None = None,
+    arm: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Full-width merge of two ascending runs: (S, H) + (S, R) -> (S, H+R).
 
     Positional-stable (ties order head before run, in-position within each),
     which — together with the strict head/tail boundary split — keeps head
     equal-key entries in seq order without ever comparing seqs on the hot
-    path.  Kernel path: bitonic windowed-merge network
-    (`kernels.windowed_merge`); jnp path: the rank merge below.  Both are
-    bit-identical (tested).
+    path.  Dispatches through the `windowed_merge` registry entry: the
+    ``rank`` arm is `rank_merge_head_run` below (the XLA:CPU production
+    path); the Pallas arms run the bitonic windowed-merge network
+    (`kernels.windowed_merge`).  All arms are bit-identical (tested).
 
     Cost is O(H + R) per shard row — independent of the queue capacity.
     """
-    if use_kernel is None:
-        use_kernel = _kernels_enabled()
-    if use_kernel:
-        from repro.kernels.ops import windowed_merge
+    from repro.kernels.ops import windowed_merge
 
-        return windowed_merge(head_k, head_v, head_q, run_k, run_v, run_q)
+    return windowed_merge(head_k, head_v, head_q, run_k, run_v, run_q,
+                          arm=arm)
 
+
+def rank_merge_head_run(
+    head_k: jnp.ndarray,  # (S, H) ascending, INF-padded
+    head_v: jnp.ndarray,
+    head_q: jnp.ndarray,
+    run_k: jnp.ndarray,  # (S, R) ascending, INF-padded
+    run_v: jnp.ndarray,
+    run_q: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The ``rank`` arm of `merge_head_run` — scatter- and sort-free
+    searchsorted rank merge (registered in `repro.kernels.registry`)."""
     S, H = head_k.shape
     R = run_k.shape[1]
     # Gather formulation (XLA:CPU scatter is a serialized per-index loop —
@@ -121,7 +127,14 @@ def merge_head_run(
             jnp.take_along_axis(run_x, ib, axis=1),
         )
 
-    return pick(head_k, run_k), pick(head_v, run_v), pick(head_q, run_q)
+    out_k = pick(head_k, run_k)
+    # arm-equality contract (kernels/ops.py): payloads on INF sentinel
+    # lanes are zeroed by every arm, so tuning can swap arms without
+    # changing a single downstream state byte
+    valid = out_k < INF_KEY
+    out_v = jnp.where(valid, pick(head_v, run_v), 0)
+    out_q = jnp.where(valid, pick(head_q, run_q), 0)
+    return out_k, out_v, out_q
 
 
 # ---------------------------------------------------------------------------
@@ -707,27 +720,21 @@ def merge_sorted(
 
 def sort_op_log(
     masked_keys: jnp.ndarray,  # (B,) or (K, B) insert keys, INF for non-inserts
-    use_kernel: bool | None = None,
+    arm: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Stable ascending sort of each row of an operation log, returning
     (sorted_keys, sorted_lane_tags).  State-independent, so a K-step fused
     window sorts its whole (K, B) log in ONE call in front of the scan.
-    Kernel path: the bitonic elimination-match network
-    (`kernels.elim_match`); jnp path: stable argsort.  Bit-identical (the
-    network compares (key, lane-tag) lexicographically)."""
-    if use_kernel is None:
-        use_kernel = _kernels_enabled()
+    Dispatches through the `elim_sort` registry entry (stable per-row
+    argsort vs the bitonic elimination-match network — all arms compare
+    (key, lane-tag) lexicographically, so bit-identical)."""
+    from repro.kernels.ops import elim_sort
+
     single = masked_keys.ndim == 1
     rows = masked_keys[None, :] if single else masked_keys
     K, B = rows.shape
-    if use_kernel:
-        from repro.kernels.ops import elim_sort
-
-        tags = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None, :], (K, B))
-        sk, st = elim_sort(rows, tags)
-    else:
-        st = jnp.argsort(rows, axis=1, stable=True).astype(jnp.int32)
-        sk = jnp.take_along_axis(rows, st, axis=1)
+    tags = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None, :], (K, B))
+    sk, st = elim_sort(rows, tags, arm=arm)
     return (sk[0], st[0]) if single else (sk, st)
 
 
@@ -740,21 +747,21 @@ def topk_of_merged(
     cand_keys: jnp.ndarray,  # (N,) unsorted or blockwise-sorted candidates
     cand_vals: jnp.ndarray,  # (N,)
     m: int,
-    use_kernel: bool | None = None,
+    arm: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Global tournament: the m smallest of N candidates, ascending.
 
-    Kernel path: the bitonic network sorts (key, position-tag) pairs
-    lexicographically, then payloads are gathered by tag — bit-identical to
-    the stable argsort (ties break by position in both)."""
-    if use_kernel is None:
-        use_kernel = _kernels_enabled()
-    if use_kernel and cand_keys.dtype == jnp.int32:
+    int32 keys dispatch through the `topk_smallest` registry entry (every
+    arm sorts (key, position-tag) pairs lexicographically, then payloads
+    are gathered by tag — bit-identical across arms, ties break by
+    position).  Non-int32 keys take the plain stable argsort (no registered
+    arms at other dtypes)."""
+    if cand_keys.dtype == jnp.int32:
         from repro.kernels.ops import topk_smallest
 
         n = cand_keys.shape[0]
         tags = jnp.arange(n, dtype=jnp.int32)
-        kk, kt = topk_smallest(cand_keys[None, :], tags[None, :], m)
+        kk, kt = topk_smallest(cand_keys[None, :], tags[None, :], m, arm=arm)
         return kk[0], cand_vals[kt[0]]
     order = jnp.argsort(cand_keys, stable=True)[:m]
     return cand_keys[order], cand_vals[order]
@@ -765,33 +772,28 @@ def twochoice_pick(
     choice_a: jnp.ndarray,  # (m,) sampled shard ids
     choice_b: jnp.ndarray,  # (m,)
     act: jnp.ndarray,  # (m,) bool — inactive lanes commit nowhere
-    use_kernel: bool | None = None,
+    arm: Optional[str] = None,
 ) -> jnp.ndarray:
     """MULTIQ probe/commit: each lane commits to the sampled shard with the
     smaller cached min (tie: lower id); returns per-shard commit counts.
-    Kernel path is the gather-free Pallas one-hot formulation."""
-    if use_kernel is None:
-        use_kernel = _kernels_enabled()
+    Dispatches through the `twochoice_counts` registry entry."""
     from repro.kernels.ops import twochoice_counts
 
-    return twochoice_counts(
-        shard_mins, choice_a, choice_b, act, use_kernel=use_kernel
-    )
+    return twochoice_counts(shard_mins, choice_a, choice_b, act, arm=arm)
 
 
 def multiq_select(
     win_k: jnp.ndarray,  # (S, m) ascending head windows
     win_v: jnp.ndarray,  # (S, m) payloads
     take: jnp.ndarray,  # (S,) commit counts (prefix pops)
-    use_kernel: bool | None = None,
+    arm: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """m smallest of the masked head windows, ascending — the MULTIQ
-    commit-side tournament (bitonic merge network on TPU)."""
-    if use_kernel is None:
-        use_kernel = _kernels_enabled()
+    commit-side tournament.  Dispatches through the `multiq_select_topm`
+    registry entry."""
     from repro.kernels.ops import multiq_select_topm
 
-    return multiq_select_topm(win_k, win_v, take, use_kernel=use_kernel)
+    return multiq_select_topm(win_k, win_v, take, arm=arm)
 
 
 def count_winners_per_shard(

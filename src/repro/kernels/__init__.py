@@ -1,18 +1,29 @@
-"""Pallas TPU kernels for the PQ hot spots.
+"""Pallas TPU kernels for the PQ hot spots, behind a tuned dispatch layer.
 
 bitonic_topk   — the deleteMin tournament's candidate selection
 sorted_merge   — legacy capacity-wide run-into-buffer merge (keeps C smallest)
 windowed_merge — tiered insert's head-tier merge (full H+R window, no drop)
+elim_match     — the elimination pre-pass (key, lane-tag) sort
+twochoice      — MULTIQ probe counts + commit-side select
+segmin         — SSSP relax segment-min (scatter vs sort-dedup arms)
 
-Each kernel ships with a pure-jnp oracle in ref.py and a jit'd public
-wrapper in ops.py that dispatches kernel vs. reference (interpret=True on
-CPU).  Networks are fully static (directions precomputed with numpy), so the
+Each kernel ships with a pure-jnp oracle in ref.py and a public wrapper in
+ops.py that dispatches through `registry` (per-platform, per-shape arm
+choice; `tuning` benchmarks the arms and caches the winners on disk).
+Networks are fully static (directions precomputed with numpy), so the
 kernels lower to reshapes + selects only — no gathers, no data-dependent
 control flow: MXU-free, VPU-saturating, VMEM-resident.
 """
 
 from repro.kernels.ops import (  # noqa: F401
     merge_sorted_runs,
+    segment_min_into,
     topk_smallest,
     windowed_merge,
+)
+from repro.kernels.registry import (  # noqa: F401
+    REGISTRY,
+    force_arms,
+    set_force_arm,
+    supports_compiled,
 )

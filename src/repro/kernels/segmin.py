@@ -1,0 +1,56 @@
+"""Segment-min arms for the SSSP relax step (and any dense scatter-min).
+
+The wavefront relax folds E = m * deg_cap candidate (target, distance)
+pairs into the dense (n,) distance array.  XLA:CPU lowers a scatter-min as
+a serialized per-index loop, so the naive arm costs O(E) *sequential*
+combines — the reason wavefront width m could not grow past a few hundred
+(ROADMAP "SSSP at scale").
+
+Two arms, registered as `segment_min_into` in the kernel registry:
+
+  scatter — the direct ``dist.at[tgt].min(vals, mode="drop")``.  Fastest
+            at small E (no sort overhead).
+  sorted  — sort-based segment-min: lexsort the (target, value) pairs, so
+            each segment's minimum is its FIRST element; non-first entries
+            are retargeted to the drop sentinel.  The scatter then touches
+            at most min(E, n+1) unique indices — the serialized loop
+            shrinks from "every edge" to "every touched vertex", while the
+            sort itself is vectorized.  Wins once E outgrows the touched
+            vertex set (wide wavefronts, dense graphs).
+
+Both arms compute exactly elementwise ``min`` over the same candidate
+multiset with an associative, commutative combiner on int32, so they are
+bit-identical for ANY evaluation order — the property that lets SSSP stay
+bit-equal to the Bellman-Ford oracle whichever arm tuning picks.
+
+Contract: ``tgt`` entries equal to ``dist.shape[0]`` (or beyond) are drop
+sentinels; ``vals`` may carry INF_KEY for masked lanes (INF never lowers a
+distance, so masked lanes are inert in both arms).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def segment_min_scatter(dist: jnp.ndarray, tgt: jnp.ndarray,
+                        vals: jnp.ndarray) -> jnp.ndarray:
+    """(n,) dist, (E,) targets (n = drop sentinel), (E,) candidate values
+    -> dist with each target lowered to min(dist[t], candidates at t)."""
+    return dist.at[tgt].min(vals, mode="drop")
+
+
+def segment_min_sorted(dist: jnp.ndarray, tgt: jnp.ndarray,
+                       vals: jnp.ndarray) -> jnp.ndarray:
+    """Sort-based segment-min (module docstring): dedup to one scatter
+    entry per touched target before the serialized scatter."""
+    n = dist.shape[0]
+    order = jnp.lexsort((vals, tgt))
+    st = tgt[order]
+    sv = vals[order]
+    # segment heads: the first (smallest-value) entry of each target run
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), st[1:] != st[:-1]]
+    )
+    st = jnp.where(first, st, n)  # non-heads fall to the drop sentinel
+    return dist.at[st].min(sv, mode="drop")

@@ -9,8 +9,9 @@ tentative distances back.  Everything runs on-device inside a `lax.scan`:
     schedule, or the full adaptive `SmartPQ.step` for the SmartPQ driver);
   * edge relaxation gathers the padded adjacency rows of the popped
     vertices — a static ``(m, deg_cap)`` block — and folds the candidate
-    distances into the dense distance array with ONE scatter-min
-    (`dist.at[v].min(nd)`), the bulk-synchronous segment-min;
+    distances into the dense distance array with ONE bulk-synchronous
+    segment-min (`kernels.ops.segment_min_into`, a tunable registry
+    kernel: direct scatter vs sort-dedup-scatter, bit-identical arms);
   * candidates that strictly improved re-enter the queue via `ops.insert`
     (masked lanes carry INF keys and cost nothing — the any-live-insert
     guard skips the whole pipeline when nothing improved).
@@ -44,6 +45,7 @@ from repro.core.pqueue import schedules as SCH
 from repro.core.pqueue.ops import OP_DELETE_MIN, OP_INSERT, OP_NOP
 from repro.core.pqueue.schedules import Schedule
 from repro.core.pqueue.state import DEFAULT_HEAD_WIDTH, INF_KEY, make_state
+from repro.kernels.ops import segment_min_into
 from repro.workloads.graphs import Graph
 
 
@@ -58,10 +60,12 @@ class SSSPResult(NamedTuple):
     transitions: int = 0
 
 
-def _relax(dist, pop_k, pop_v, n_out, nbr, wgt):
+def _relax(dist, pop_k, pop_v, n_out, nbr, wgt, segmin_arm=None):
     """One bulk relaxation: fold the popped wavefront's out-edges into
-    `dist` (scatter-min) and emit the strictly-improving candidates as an
-    INF-masked insert batch of static width m * deg_cap.
+    `dist` (the `segment_min_into` registry kernel — its arms are
+    bit-identical, so the result is arm-independent) and emit the
+    strictly-improving candidates as an INF-masked insert batch of static
+    width m * deg_cap.
 
     Returns (dist, ins_keys, ins_vals, n_wasted, n_improved)."""
     n = dist.shape[0]
@@ -81,9 +85,9 @@ def _relax(dist, pop_k, pop_v, n_out, nbr, wgt):
     improved = edge_ok & (nd < dist[v_safe])
     n_improved = jnp.sum(improved).astype(jnp.int32)
 
-    # segment-min: out-of-range sentinel targets drop out of the scatter
+    # segment-min: out-of-range sentinel targets drop out of the fold
     tgt = jnp.where(edge_ok, vs, n)
-    dist = dist.at[tgt.ravel()].min(nd.ravel(), mode="drop")
+    dist = segment_min_into(dist, tgt.ravel(), nd.ravel(), arm=segmin_arm)
 
     ins_keys = jnp.where(improved, nd, INF_KEY).ravel()
     ins_vals = v_safe.ravel()
@@ -108,11 +112,13 @@ def make_sssp_engine(
     head_width: int | None = None,
     npods: int = 2,
     chunk: int = 8,
+    segmin_arm: str | None = None,
 ):
     """Fixed-schedule SSSP engine: chunks of `chunk` scan steps run
     on-device; the host only checks queue emptiness between chunks.  The
     returned ``run(src, seed, max_steps)`` closure reuses ONE jitted chunk
-    program across calls, so benchmarks can time warm runs."""
+    program across calls, so benchmarks can time warm runs.  ``segmin_arm``
+    pins the relax segment-min arm (None = registry dispatch)."""
     fn = SCH.SCHEDULE_FNS[schedule]
     nbr, wgt = graph.nbr, graph.wgt
 
@@ -122,7 +128,8 @@ def make_sssp_engine(
             state, dist, pops, wasted, improved = c
             res = fn(state, m, jnp.int32(m), r, npods)
             dist, ins_k, ins_v, w, imp = _relax(
-                dist, res.keys, res.vals, res.n_out, nbr, wgt
+                dist, res.keys, res.vals, res.n_out, nbr, wgt,
+                segmin_arm=segmin_arm,
             )
             state, _ = O.insert(res.state, ins_k, ins_v)
             return (state, dist, pops + res.n_out, wasted + w,
@@ -168,11 +175,13 @@ def run_sssp(
     seed: int = 0,
     chunk: int = 8,
     max_steps: int = 4096,
+    segmin_arm: str | None = None,
 ) -> SSSPResult:
     """One-shot fixed-schedule SSSP (see `make_sssp_engine`)."""
     run = make_sssp_engine(
         graph, schedule, m=m, num_shards=num_shards, capacity=capacity,
         head_width=head_width, npods=npods, chunk=chunk,
+        segmin_arm=segmin_arm,
     )
     return run(src=src, seed=seed, max_steps=max_steps)
 
@@ -183,6 +192,7 @@ def make_smartpq_sssp_engine(
     m: int = 16,
     chunk: int = 8,
     num_clients: int | None = None,
+    segmin_arm: str | None = None,
 ):
     """Adaptive SSSP engine through `SmartPQ.step` — the full decision
     stack (featurization, packed-tree inference, N-mode switch,
@@ -223,7 +233,8 @@ def make_smartpq_sssp_engine(
             vals = jnp.concatenate([pend_v, jnp.zeros((m,), jnp.int32)])
             pqc, res = pq.step(pqc, ops, keys, vals, r, num_clients)
             dist, ins_k, ins_v, w, imp = _relax(
-                dist, res.keys[:m], res.vals[:m], res.n_out, nbr, wgt
+                dist, res.keys[:m], res.vals[:m], res.n_out, nbr, wgt,
+                segmin_arm=segmin_arm,
             )
             c2 = (pqc, dist, ins_k, ins_v, pops + res.n_out, wasted + w,
                   improved + imp)
@@ -300,9 +311,11 @@ def run_sssp_smartpq(
     max_steps: int = 4096,
     num_clients: int | None = None,
     record: bool = False,
+    segmin_arm: str | None = None,
 ):
     """One-shot adaptive SSSP (see `make_smartpq_sssp_engine`)."""
     run = make_smartpq_sssp_engine(
-        graph, pq, m=m, chunk=chunk, num_clients=num_clients
+        graph, pq, m=m, chunk=chunk, num_clients=num_clients,
+        segmin_arm=segmin_arm,
     )
     return run(src=src, seed=seed, max_steps=max_steps, record=record)

@@ -34,6 +34,52 @@ def test_gitignore_covers_bytecode():
         assert needed in patterns, f".gitignore is missing {needed!r}"
 
 
+def test_every_registered_kernel_dispatches_through_ops():
+    """Every kernel in the registry must have a public wrapper in
+    kernels/ops.py that resolves its arm through `registry.resolve` — a
+    spec with no dispatching wrapper is dead tuning surface, and a wrapper
+    outside the registry re-creates the hard-coded-path problem."""
+    import sys
+
+    sys.path.insert(0, str(REPO / "src"))
+    try:
+        from repro.kernels import ops as K
+        from repro.kernels.registry import REGISTRY
+    finally:
+        sys.path.pop(0)
+    ops_src = (REPO / "src" / "repro" / "kernels" / "ops.py").read_text()
+    missing = [
+        name for name in REGISTRY
+        if not callable(getattr(K, name, None)) or name not in ops_src
+    ]
+    assert missing == [], (
+        f"registered kernels with no registry-dispatched wrapper in "
+        f"kernels/ops.py: {missing}"
+    )
+    assert "REG.resolve(" in ops_src or "registry.resolve(" in ops_src
+
+
+def test_no_interpret_literals_outside_kernels():
+    """Backend dispatch is the registry's job: no tracked .py file outside
+    src/repro/kernels/ may pass an ``interpret=`` kwarg (the pre-registry
+    hard-coded ``interpret=not _on_tpu()`` pattern)."""
+    import re
+
+    pat = re.compile(r"\binterpret\s*=")
+    offenders = []
+    for f in _tracked_files():
+        if not f.endswith(".py") or f.startswith("src/repro/kernels/"):
+            continue
+        if f == "tests/test_hygiene.py":  # this gate's own docstring
+            continue
+        for i, line in enumerate((REPO / f).read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{f}:{i}")
+    assert offenders == [], (
+        f"interpret= literals outside the kernel package: {offenders}"
+    )
+
+
 def test_every_fault_injector_is_exercised():
     """Every injector registered in `repro.faults.INJECTORS` must appear by
     name in tests/test_faults.py — a registry entry with no chaos test is a

@@ -16,15 +16,16 @@ def test_topk_kernel_path_matches_argsort():
     for n, m in [(64, 8), (100, 16), (256, 5)]:
         keys = jnp.asarray(rng.integers(0, 40, n), jnp.int32)  # heavy ties
         vals = jnp.asarray(rng.integers(0, 1 << 20, n), jnp.int32)
-        k_ref, v_ref = topk_of_merged(keys, vals, m, use_kernel=False)
-        k_ker, v_ker = topk_of_merged(keys, vals, m, use_kernel=True)
+        k_ref, v_ref = topk_of_merged(keys, vals, m, arm="argsort")
+        k_ker, v_ker = topk_of_merged(keys, vals, m,
+                                      arm="interpret@rows_per_block=8")
         np.testing.assert_array_equal(np.asarray(k_ref), np.asarray(k_ker))
         np.testing.assert_array_equal(np.asarray(v_ref), np.asarray(v_ker))
 
 
-def test_delete_min_identical_through_kernel(monkeypatch):
+def test_delete_min_identical_through_kernel():
     """A full strict deleteMin with the kernel tournament == the jnp path."""
-    import repro.core.pqueue.local as L
+    from repro.kernels import registry as REG
 
     rng = np.random.default_rng(1)
     st = make_state(4, 64)
@@ -32,8 +33,8 @@ def test_delete_min_identical_through_kernel(monkeypatch):
     st, _ = O.insert(st, keys, keys % 97)
 
     res_ref = O.delete_min(st, 8, schedule=Schedule.STRICT_FLAT, active=8)
-    monkeypatch.setattr(L, "_USE_KERNELS_ENV", True)
-    res_ker = O.delete_min(st, 8, schedule=Schedule.STRICT_FLAT, active=8)
+    with REG.force_arms({"topk_smallest": "interpret@rows_per_block=8"}):
+        res_ker = O.delete_min(st, 8, schedule=Schedule.STRICT_FLAT, active=8)
     np.testing.assert_array_equal(np.asarray(res_ref.keys), np.asarray(res_ker.keys))
     np.testing.assert_array_equal(np.asarray(res_ref.vals), np.asarray(res_ker.vals))
     np.testing.assert_array_equal(

@@ -1,5 +1,7 @@
-"""Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU).
-Contract: lexicographic (key, val); callers pass unique tags as vals."""
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret mode on CPU).
+Contract: lexicographic (key, val); callers pass unique tags as vals.
+Arms are pinned by name (`arm=` / `registry.force_arms`); the all-arm
+parity sweep lives in tests/test_kernel_registry.py."""
 
 import numpy as np
 import jax.numpy as jnp
@@ -60,14 +62,15 @@ def test_elim_sort_exact(R, N):
     keys = RNG.integers(0, 12, (R, N)).astype(np.int32)  # heavy ties
     keys[RNG.random((R, N)) < 0.3] = INF_KEY  # masked non-insert lanes
     tags = np.tile(np.arange(N, dtype=np.int32), (R, 1))
-    kk, kt = elim_sort(jnp.asarray(keys), jnp.asarray(tags), use_kernel=True)
+    kk, kt = elim_sort(jnp.asarray(keys), jnp.asarray(tags),
+                       arm="interpret@rows_per_block=8")
     rk, rt = REF.elim_sort_ref(jnp.asarray(keys), jnp.asarray(tags))
     np.testing.assert_array_equal(np.asarray(kk), np.asarray(rk))
     np.testing.assert_array_equal(np.asarray(kt), np.asarray(rt))
     # and against the dispatching wrapper's jnp path
     from repro.core.pqueue.local import sort_op_log
 
-    sk, st = sort_op_log(jnp.asarray(keys), use_kernel=False)
+    sk, st = sort_op_log(jnp.asarray(keys), arm="argsort")
     np.testing.assert_array_equal(np.asarray(kk), np.asarray(sk))
     np.testing.assert_array_equal(np.asarray(kt), np.asarray(st))
 
@@ -134,26 +137,26 @@ def test_windowed_merge_exact(S, H, R):
         run_q[s, :n] = 1000 + np.arange(n)
     args = tuple(jnp.asarray(a)
                  for a in (head_k, head_v, head_q, run_k, run_v, run_q))
-    ker = windowed_merge(*args, use_kernel=True)
-    ref = windowed_merge(*args, use_kernel=False)
-    jnp_path = merge_head_run(*args, use_kernel=False)
+    ker = windowed_merge(*args, arm="interpret@rows_per_block=4")
+    ref = windowed_merge(*args, arm="ref")
+    jnp_path = merge_head_run(*args, arm="rank")
     for a, b, c in zip(ker, ref, jnp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
 
 
-def test_tiered_insert_kernel_path_matches(monkeypatch):
+def test_tiered_insert_kernel_path_matches():
     """A full tiered insert through the Pallas windowed-merge == jnp path."""
-    import repro.core.pqueue.local as L
     from repro.core.pqueue import ops as O
     from repro.core.pqueue.state import make_state
+    from repro.kernels import registry as REG
 
     rng = np.random.default_rng(5)
     keys = jnp.asarray(rng.integers(0, 300, 96), jnp.int32)
     vals = jnp.asarray(rng.integers(0, 99, 96), jnp.int32)
     st_ref, _ = O.insert(make_state(4, 64, head_width=16), keys, vals)
-    monkeypatch.setattr(L, "_USE_KERNELS_ENV", True)
-    st_ker, _ = O.insert(make_state(4, 64, head_width=16), keys, vals)
+    with REG.force_arms({"windowed_merge": "interpret@rows_per_block=4"}):
+        st_ker, _ = O.insert(make_state(4, 64, head_width=16), keys, vals)
     for a, b in zip(
         __import__("jax").tree.leaves(st_ref), __import__("jax").tree.leaves(st_ker)
     ):
