@@ -23,7 +23,7 @@ def main() -> None:
         help="comma list of: fig1,fig7,fig9,fig9_latency,fig9_window,fig10,"
              "fig12,classifier,roofline,kernels,kernels_autotune,rank_error,"
              "smoke,workloads_sssp,workloads_des,serve_slo,overload,"
-             "durability",
+             "durability,obs",
     )
     ap.add_argument(
         "--platform", default=None, metavar="NAME",
@@ -82,6 +82,7 @@ def main() -> None:
         kernels_autotune,
         kernels_bench,
         multiq_rank_error,
+        obs_overhead,
         overload,
         roofline,
         serve_slo,
@@ -112,6 +113,7 @@ def main() -> None:
         "serve_slo": serve_slo.run,
         "overload": overload.run,
         "durability": durability.run,
+        "obs": obs_overhead.run,
         "smoke": smoke.run,
     }
     if args.smoke:

@@ -20,8 +20,6 @@ strictly increases throughput (and cuts tail latency) at K in {4, 16}.
 
 import time
 
-import numpy as np
-
 from benchmarks.common import emit
 from repro.serve.engine import EngineConfig, ServeEngine
 from repro.workloads.traces import bursty_serve_workload
@@ -34,7 +32,13 @@ def drive(
     batch_size: int = 8,
     seed: int = 1,
 ):
-    """One serving run over the bursty trace; returns the SLO summary."""
+    """One serving run over the bursty trace; returns the SLO summary.
+
+    Latency percentiles are READ FROM THE METRICS REGISTRY
+    (`engine.obs.metrics`) — the engine's per-class histograms are the one
+    percentile surface, instead of this bench recomputing its own from
+    `latency_records()` raw vectors.  The registry estimate is the upper
+    bucket edge, exact on the integer step clock (see repro.obs.metrics)."""
     workload = bursty_serve_workload(steps=steps, seed=seed)
     total = sum(len(a) for a in workload)
     eng = ServeEngine(None, None, EngineConfig(
@@ -44,22 +48,18 @@ def drive(
     t0 = time.perf_counter()
     summary = eng.run(workload, max_steps=100_000)
     wall_us = (time.perf_counter() - t0) * 1e6
-    lat = eng.latency_records()
-    tokens = float(lat["tokens"].sum())
+    m = eng.obs.metrics
+    tokens = float(m.value("tokens_emitted_total"))
     return {
         "completed": summary["completed"],
         "total": total,
         "engine_steps": summary["steps"],
         "us_per_token": wall_us / max(tokens, 1.0),
         "tokens_per_step": tokens / max(summary["steps"], 1),
-        "p50_queue_steps": float(np.percentile(lat["queueing_steps"], 50)),
-        "p99_queue_steps": float(np.percentile(lat["queueing_steps"], 99)),
-        "p50_per_token_steps": float(
-            np.percentile(lat["per_token_steps"], 50)
-        ),
-        "p99_per_token_steps": float(
-            np.percentile(lat["per_token_steps"], 99)
-        ),
+        "p50_queue_steps": m.percentile("latency_queue_steps", 50),
+        "p99_queue_steps": m.percentile("latency_queue_steps", 99),
+        "p50_per_token_steps": m.percentile("latency_per_token_steps", 50),
+        "p99_per_token_steps": m.percentile("latency_per_token_steps", 99),
     }
 
 

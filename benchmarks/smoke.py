@@ -38,6 +38,7 @@ def run(quick: bool = False):
     _run_serve()
     _run_overload()
     _run_durability()
+    _run_obs()
 
 
 def _run_kernels():
@@ -100,6 +101,25 @@ def _run_overload():
          load_factor=2.0, control=True,
          shed_rate=round(r["shed_rate"], 4),
          p99_queue_c0=round(r["p99_queue_c0"], 2))
+
+
+def _run_obs():
+    """Seconds-scale probe of the telemetry layer's hot-path cost: obs-on
+    vs obs-off interleaved dispatch windows (the obs_overhead suite's fast
+    slice) — keeps the instrumented window path under the `--smoke
+    --check` 2x gate and re-asserts dispatch-stream bit-identity on every
+    smoke run."""
+    from benchmarks.obs_overhead import measure
+
+    r = measure(iters=3, K=8, batch_size=32)
+    assert r["identical"], (
+        "smoke obs: telemetry perturbed the dispatch stream"
+    )
+    emit("smoke/obs", r["us_window_on"],
+         f"ratio={r['ratio']:.3f};us_per_op_on={r['us_per_op_on']:.3f}",
+         ratio=round(r["ratio"], 4),
+         us_per_op_on=round(r["us_per_op_on"], 4),
+         us_per_op_off=round(r["us_per_op_off"], 4))
 
 
 def _run_durability():

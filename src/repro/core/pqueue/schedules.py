@@ -135,9 +135,20 @@ def ensure_head(state: PQState, m: int) -> PQState:
         )
     if state.tail_width == 0:
         return state
-    need = min(H, m + _head_pad(state.num_shards))
-    pred = jnp.any((state.head_size < need) & (state.tail_size > 0))
-    return L.refill_head_guarded(state, pred)
+    return L.refill_head_guarded(state, head_refill_pred(state, m))
+
+
+def head_refill_pred(state: PQState, m: int) -> jnp.ndarray:
+    """`ensure_head`'s refill trigger as a standalone () bool — whether a
+    delete batch of bound m would fire the guarded hot-tier refill.  The
+    stats layer counts it (`SmartPQStats.head_refills`) from exactly this
+    predicate, so the counter can never drift from the actual `lax.cond`
+    firing.  Always False for head-only states (tail_width == 0): there is
+    no cold tier to refill from."""
+    if state.tail_width == 0:
+        return jnp.bool_(False)
+    need = min(state.head_width, m + _head_pad(state.num_shards))
+    return jnp.any((state.head_size < need) & (state.tail_size > 0))
 
 
 def _pop_hot_prefix(hot: HotTier, take: jnp.ndarray) -> HotTier:

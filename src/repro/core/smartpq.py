@@ -97,6 +97,11 @@ class SmartPQStats(NamedTuple):
     transitions: jnp.ndarray  # () int32 — mode flips (overhead accounting)
     eliminated: jnp.ndarray  # () int32 — pairs served by the pre-pass
     rejected: jnp.ndarray  # () int32 — non-finite keys refused at admission
+    mode_steps: jnp.ndarray  # (NUM_MODES,) int32 — steps spent per mode
+    head_refills: jnp.ndarray  # () int32 — guarded hot-tier refill firings
+    ring_deferred: jnp.ndarray  # () int32 — ring entries past their arrival
+    # tick a window could not lane-admit yet (written by the serving
+    # scheduler's fused scan; plain `step` threads it through unchanged)
 
 
 class SmartPQCarry(NamedTuple):
@@ -187,6 +192,9 @@ class SmartPQ:
             transitions=jnp.int32(0),
             eliminated=jnp.int32(0),
             rejected=jnp.int32(0),
+            mode_steps=jnp.zeros((NUM_MODES,), jnp.int32),
+            head_refills=jnp.int32(0),
+            ring_deferred=jnp.int32(0),
         )
         return SmartPQCarry(
             make_state(c.num_shards, c.capacity, head_width=c.head_width),
@@ -202,7 +210,8 @@ class SmartPQ:
         in tests), so a steady-state step moves the queue zero times.  The
         caller must thread the returned carry and never reuse the argument
         (its buffers are deleted) — exactly the scan/serving-loop pattern."""
-        return jax.jit(self.step, donate_argnums=(0,))
+        return jax.jit(self.step, donate_argnums=(0,),
+                       static_argnames=("return_features",))
 
     def step(
         self,
@@ -214,7 +223,10 @@ class SmartPQ:
         num_clients: jnp.ndarray | int | None = None,
         presorted: Tuple[jnp.ndarray, jnp.ndarray] | None = None,
         mode_override: jnp.ndarray | None = None,
-    ) -> Tuple[SmartPQCarry, DeleteResult]:
+        return_features: bool = False,
+    ) -> Tuple[SmartPQCarry, DeleteResult] | Tuple[
+        SmartPQCarry, DeleteResult, jnp.ndarray
+    ]:
         """One bulk step: update stats -> (maybe) re-decide mode -> eliminate
         matched pairs -> apply the rest under the selected mode.  Pure
         function; jit/scan friendly.  `presorted` is the (sorted_keys,
@@ -223,7 +235,12 @@ class SmartPQ:
         scan.  `mode_override` (scalar int32, -1 = none) pins the mode for
         this step regardless of the classifier — the serving tier's
         graceful-degradation hook (force the relaxed MULTIQ mode under
-        overload); None compiles the exact pre-override graph."""
+        overload); None compiles the exact pre-override graph.
+        `return_features` (static) appends the step's classifier feature
+        vector (4,) float32 to the return — the observability layer's
+        mode-transition trace attaches it to transition events; it is an
+        extra OUTPUT of values the graph computes anyway, so the dispatch
+        stream is untouched."""
         c = self.config
         state, stats = carry
         B = ops.shape[0]
@@ -305,6 +322,12 @@ class SmartPQ:
         # the conditional's operand/result copies are head-sized, not
         # capacity-sized (the big CPU win of the fused window).
         state, dropped = insert(state, keys, vals, mask=ins_mask)
+        # Count the refill BEFORE ensure_head consumes the predicate — the
+        # same expression gates the lax.cond inside, so the counter tracks
+        # actual guarded-refill firings, not an approximation.
+        head_refills = stats.head_refills + SCH.head_refill_pred(
+            state, B
+        ).astype(jnp.int32)
         state = SCH.ensure_head(state, B)
         total = state.total_size
 
@@ -336,8 +359,16 @@ class SmartPQ:
             transitions=transitions,
             eliminated=stats.eliminated + n_elim,
             rejected=n_rejected,
+            mode_steps=stats.mode_steps + (
+                jnp.arange(NUM_MODES, dtype=jnp.int32) == new_mode
+            ).astype(jnp.int32),
+            head_refills=head_refills,
+            ring_deferred=stats.ring_deferred,
         )
-        return SmartPQCarry(res.state, new_stats), res
+        out_carry = SmartPQCarry(res.state, new_stats)
+        if return_features:
+            return out_carry, res, feats
+        return out_carry, res
 
     # -- the fused-window engine ----------------------------------------------
 

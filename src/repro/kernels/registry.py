@@ -212,13 +212,46 @@ def force_arms(mapping: Mapping[str, str]):
 # ---------------------------------------------------------------------------
 
 
+# (kernel, shape sig, arm, source) tuples already reported to telemetry —
+# resolve() runs inside hot dispatch wrappers, so each distinct resolution
+# is noted ONCE per process, not per call.
+_NOTED: set = set()
+
+
+def _note_resolution(name: str, shape_sig: str, arm: str,
+                     source: str) -> str:
+    """Record an arm resolution in the process-global observability bundle
+    (counter + one timeline instant per distinct resolution).  Telemetry
+    must never break dispatch: any obs failure is swallowed."""
+    key = (name, shape_sig, arm, source)
+    if key in _NOTED:
+        return arm
+    _NOTED.add(key)
+    try:
+        from repro.obs import get_default
+
+        obs = get_default()
+        obs.metrics.inc("kernel_resolutions_total", kernel=name, arm=arm,
+                        source=source)
+        obs.tracer.instant("kernel_arm_resolved", cat="kernels",
+                           kernel=name, sig=shape_sig, arm=arm,
+                           source=source)
+    except Exception:  # pragma: no cover — obs must not affect dispatch
+        pass
+    return arm
+
+
 def resolve(name: str, coords: Mapping[str, object],
             arm: Optional[str] = None) -> str:
     """The dispatch rule (module docstring).  Returns an arm NAME that is
-    guaranteed available on the current backend."""
+    guaranteed available on the current backend.  Every distinct
+    (kernel, shape, arm, source) resolution is noted once in the default
+    observability registry — dispatch decisions are part of the run's
+    telemetry story, not invisible env-dependent magic."""
     spec = REGISTRY[name]
     backend = jax.default_backend()
     avail = {a.name for a in spec.arms if a.available(backend)}
+    s = sig(coords)
 
     if arm is not None:  # explicit wins, and must be real
         if arm not in avail:
@@ -226,24 +259,24 @@ def resolve(name: str, coords: Mapping[str, object],
                 f"{name}: arm {arm!r} is not available on backend "
                 f"{backend!r} (available: {sorted(avail)})"
             )
-        return arm
+        return _note_resolution(name, s, arm, "explicit")
 
     forced = _FORCED.get(name, _FORCED.get("*"))
     if forced is not None and forced in avail:
-        return forced
+        return _note_resolution(name, s, forced, "forced")
 
     from repro.kernels import tuning  # function-level: tuning imports us
 
-    winner = tuning.cached_winner(name, sig(coords))
+    winner = tuning.cached_winner(name, s)
     if winner is not None and winner in avail:
-        return winner
+        return _note_resolution(name, s, winner, "tuned")
 
     if _LEGACY_FORCE_KERNELS:
         for a in spec.arms:
             if a.kind != "jnp" and a.name in avail:
-                return a.name
+                return _note_resolution(name, s, a.name, "legacy_env")
 
-    return spec.default
+    return _note_resolution(name, s, spec.default, "default")
 
 
 def arm_kwargs(name: str, arm: str) -> Dict[str, int]:

@@ -1,0 +1,88 @@
+"""repro.obs — unified observability: metrics, tracing, profiling hooks.
+
+One `Observability` facade bundles the three concerns the serving stack
+threads through its layers:
+
+  .metrics   `MetricsRegistry` — counters/gauges/histograms, the single
+             source of truth behind `ServeEngine.health()`, the SLO
+             benchmarks' percentile reads, and supervisor heartbeats.
+  .tracer    `Tracer` — window-timeline spans/instants, Chrome trace
+             export (off by default: tracing buffers grow with run
+             length, so it is an explicit opt-in).
+
+The facade is identity-preserving under deepcopy: scheduler checkpoints
+deep-copy everything a window can mutate, but telemetry must NOT fork —
+a rolled-back window's trace cleanup goes through `Tracer.truncate`, and
+counters deliberately keep counting across rollbacks (the rollback itself
+is an observable event).
+
+`NULL` is the shared disabled instance (every write early-outs); layers
+that receive no observability default to it.  `get_default()` is the
+process-global registry for call sites with no instance to thread through
+(the kernel registry's arm-resolution notes).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.obs.metrics import (
+    LATENCY_STEP_EDGES, PER_TOKEN_EDGES, MetricsRegistry,
+)
+from repro.obs.tracing import Tracer
+
+
+class Observability:
+    """Metrics + tracer bundle (module docstring)."""
+
+    def __init__(self, metrics: bool = True, tracing: bool = False,
+                 max_trace_events: Optional[int] = None):
+        self.metrics = MetricsRegistry(enabled=metrics)
+        if max_trace_events is None:
+            self.tracer = Tracer(enabled=tracing)
+        else:
+            self.tracer = Tracer(enabled=tracing,
+                                 max_events=max_trace_events)
+
+    @property
+    def enabled(self) -> bool:
+        return self.metrics.enabled or self.tracer.enabled
+
+    def __deepcopy__(self, memo):
+        # Telemetry is identity under checkpoint/restore: history must not
+        # fork into checkpoint copies (rollback cleanup is explicit, via
+        # Tracer.mark/truncate in the scheduler's guarded path).
+        return self
+
+    def __copy__(self):
+        return self
+
+
+#: Shared disabled instance — the default for layers given no obs.
+NULL = Observability(metrics=False, tracing=False)
+
+_DEFAULT: Optional[Observability] = None
+
+
+def get_default() -> Observability:
+    """Process-global observability (metrics on, tracing off) for call
+    sites with nothing to thread through — created lazily."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Observability(metrics=True, tracing=False)
+    return _DEFAULT
+
+
+def set_default(obs: Observability) -> Observability:
+    """Replace the process-global instance; returns the previous one."""
+    global _DEFAULT
+    prev = get_default()
+    _DEFAULT = obs
+    return prev
+
+
+__all__ = [
+    "Observability", "MetricsRegistry", "Tracer", "NULL",
+    "LATENCY_STEP_EDGES", "PER_TOKEN_EDGES",
+    "get_default", "set_default",
+]

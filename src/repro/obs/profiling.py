@@ -1,0 +1,43 @@
+"""Profiling hooks: jax.profiler annotations + opt-in xplane trace dumps.
+
+Thin wrappers so the serving/bench layers never import `jax.profiler`
+directly (the module is optional in stripped builds) and never pay the
+annotation cost unless a dump directory armed the session:
+
+  annotate(name)        TraceAnnotation context — labels the enclosing
+                        host region in the xplane timeline, nesting the
+                        device dispatches it issues under it.
+  trace_session(dir)    jax.profiler.trace context writing an xplane dump
+                        under `dir`; `None` -> no-op nullcontext, so call
+                        sites wrap unconditionally.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import ContextManager, Optional
+
+
+def annotate(name: str) -> ContextManager[None]:
+    """A jax.profiler.TraceAnnotation, or a nullcontext when the profiler
+    is unavailable."""
+    try:
+        from jax.profiler import TraceAnnotation
+    except ImportError:  # pragma: no cover — stripped jax builds
+        return contextlib.nullcontext()
+    return TraceAnnotation(name)
+
+
+def trace_session(dump_dir: Optional[str]) -> ContextManager[None]:
+    """Profiler session writing an xplane dump under `dump_dir`; no-op
+    when `dump_dir` is None (the default serving configuration)."""
+    if dump_dir is None:
+        return contextlib.nullcontext()
+    try:
+        from jax.profiler import trace
+    except ImportError:  # pragma: no cover — stripped jax builds
+        return contextlib.nullcontext()
+    return trace(str(dump_dir))
+
+
+__all__ = ["annotate", "trace_session"]

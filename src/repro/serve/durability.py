@@ -191,8 +191,11 @@ class DurableStore:
                                        mtime to detect hangs
     """
 
-    def __init__(self, cfg: DurabilityConfig):
+    def __init__(self, cfg: DurabilityConfig, obs=None):
+        if obs is None:
+            from repro.obs import NULL as obs  # disabled bundle
         self.cfg = cfg
+        self.obs = obs
         self.root = Path(cfg.dir)
         self.root.mkdir(parents=True, exist_ok=True)
         self.wal = WriteAheadLog(self.root / "wal.log", fsync=cfg.fsync)
@@ -233,6 +236,9 @@ class DurableStore:
             ],
         })
         self.wal.sync()
+        self.obs.metrics.inc("wal_syncs_total", kind="window")
+        self.obs.tracer.instant("wal_fsync", cat="durability",
+                                kind="window", step0=int(step0))
 
     def log_event(self, kind: str, payload: Dict[str, Any]) -> None:
         """Buffered informational record (shed/evict) — made durable by
@@ -252,10 +258,17 @@ class DurableStore:
         self.wal.sync()
         self.stats.commits += 1
         self.stats.last_commit_step = int(step)
+        self.obs.metrics.inc("wal_syncs_total", kind="commit")
+        self.obs.tracer.instant("wal_fsync", cat="durability",
+                                kind="commit", step=int(step))
+        beat = {"step": int(step), "time": time.time(),
+                "commits": self.stats.commits}
+        if health:
+            # the last known metrics snapshot rides the heartbeat, so a
+            # hang/crash post-mortem reads counters, not just a step
+            beat["metrics"] = health
         persist.atomic_write_json(
-            self.heartbeat_path,
-            {"step": int(step), "time": time.time(),
-             "commits": self.stats.commits},
+            self.heartbeat_path, beat,
             fsync=False,  # advisory liveness beacon, not a recovery input
         )
 
@@ -283,14 +296,17 @@ class DurableStore:
         """Crash-consistent snapshot: array pytree in CRC'd npz shards,
         host state in the manifest `extra` — atomic via tmp+rename, so a
         crash mid-snapshot leaves the previous snapshot intact."""
-        path = persist.save_tree(
-            self.snap_root, int(step), arrays,
-            extra=host_state, fsync=self.cfg.fsync,
-        )
-        persist.prune_steps(self.snap_root, self.cfg.keep_snapshots)
+        with self.obs.tracer.span("snapshot", cat="durability",
+                                  step=int(step)):
+            path = persist.save_tree(
+                self.snap_root, int(step), arrays,
+                extra=host_state, fsync=self.cfg.fsync,
+            )
+            persist.prune_steps(self.snap_root, self.cfg.keep_snapshots)
         self._windows_since_snapshot = 0
         self.stats.snapshots_written += 1
         self.stats.last_snapshot_step = int(step)
+        self.obs.metrics.inc("snapshots_total")
         return path
 
     def load_newest_valid(
@@ -313,7 +329,15 @@ class DurableStore:
                     self.snap_root, like, step, validate=True
                 )
             except SnapshotCorruptError:
+                # absorbed with accounting — an older snapshot (or fresh
+                # init) takes over; the error is still OBSERVED
                 self.stats.snapshots_skipped_invalid += 1
+                self.obs.metrics.inc(
+                    "errors_total", code="SNAPSHOT_CORRUPT"
+                )
+                self.obs.tracer.instant(
+                    "snapshot_skipped", cat="durability", step=int(step)
+                )
                 continue
             return step, tree, manifest["extra"]
         return None

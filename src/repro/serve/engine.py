@@ -86,6 +86,15 @@ class EngineConfig:
     wal_fsync: bool = True  # fsync WAL appends/commits (off: bench probe)
     snapshot_interval: int = 4  # windows between snapshots
     keep_snapshots: int = 2
+    # Observability: the engine ALWAYS carries a metrics registry
+    # (`engine.obs.metrics` — health(), conservation checks, and the SLO
+    # benchmarks read through it).  `tracing` additionally arms the
+    # window-timeline tracer (Chrome trace via `engine.obs.tracer`;
+    # buffers grow with run length, hence opt-in), and `profile_dir`
+    # wraps run() in a jax.profiler trace writing an xplane dump there,
+    # with per-window TraceAnnotations labeling the dispatches.
+    tracing: bool = False
+    profile_dir: Optional[str] = None
 
 
 class ServeEngine:
@@ -109,6 +118,12 @@ class ServeEngine:
             self.model = None
             self.caches = ()
             self._decode = jax.jit(_synthetic_decode)
+        from repro.obs import Observability
+
+        # One observability bundle for every layer below (scheduler,
+        # overload controller, durability) — a single metrics registry is
+        # what makes health() a thin view instead of a hand-copied ledger.
+        self.obs = Observability(metrics=True, tracing=engine_cfg.tracing)
         overload = None
         if engine_cfg.slo_targets is not None:
             from repro.serve.overload import OverloadConfig, OverloadController
@@ -116,7 +131,7 @@ class ServeEngine:
             overload = OverloadController(OverloadConfig(
                 targets=tuple(engine_cfg.slo_targets),
                 backlog_cap=engine_cfg.backlog_cap,
-            ))
+            ), obs=self.obs)
         self.overload = overload
         pq_config = None
         if engine_cfg.validate:
@@ -130,6 +145,7 @@ class ServeEngine:
             )
         self.scheduler = SmartPQScheduler(
             batch_size=64, seed=seed, pq_config=pq_config, overload=overload,
+            obs=self.obs,
         )
         self.tokens = jnp.zeros((B, 1), jnp.int32)
         self.lengths = jnp.zeros((B,), jnp.int32)
@@ -159,7 +175,7 @@ class ServeEngine:
                 fsync=engine_cfg.wal_fsync,
                 snapshot_interval=engine_cfg.snapshot_interval,
                 keep_snapshots=engine_cfg.keep_snapshots,
-            ))
+            ), obs=self.obs)
             # shed/evict decisions leave audit records next to admissions
             self.scheduler.wal_sink = self.durability.log_event
 
@@ -282,8 +298,32 @@ class ServeEngine:
                     0.9 * self._service_est + 0.1 * len(self.outputs[req.uid])
                 )
                 self.active[i] = None
+                self._observe_completion(req.uid)
         self._step += 1
         return done
+
+    def _observe_completion(self, uid: int) -> None:
+        """Per-class latency histograms at the completion site — the
+        registry views `latency_records()`'s offline vectors were computed
+        from, but incremental, labeled by SLO class, and readable mid-run
+        (`obs.metrics.summary("latency_queue_steps", slo=c)`)."""
+        m = self.obs.metrics
+        if not m.enabled:
+            return
+        from repro.obs import LATENCY_STEP_EDGES, PER_TOKEN_EDGES
+
+        c = self.slo.get(uid, 1)
+        arrived = self.arrival_step.get(uid, 0)
+        queueing = self.admit_step[uid] - arrived
+        e2e = self.done_step[uid] - arrived + 1
+        tokens = max(len(self.outputs.get(uid, ())), 1)
+        m.observe("latency_queue_steps", queueing,
+                  edges=LATENCY_STEP_EDGES, slo=c)
+        m.observe("latency_e2e_steps", e2e, edges=LATENCY_STEP_EDGES, slo=c)
+        m.observe("latency_per_token_steps", e2e / tokens,
+                  edges=PER_TOKEN_EDGES, slo=c)
+        m.inc("tokens_emitted_total", n=tokens)
+        m.inc("requests_completed_total", slo=c)
 
     def _advance(
         self,
@@ -297,6 +337,19 @@ class ServeEngine:
         execution path: `run()` drives it live and `recover()` replays WAL
         windows through it, so an interrupted run and its replay share
         every instruction."""
+        if self.ecfg.profile_dir is not None:
+            from repro.obs.profiling import annotate
+
+            with annotate(f"serve_window@{step0}"):
+                return self._advance_impl(arrivals_by_tick, step0, max_steps)
+        return self._advance_impl(arrivals_by_tick, step0, max_steps)
+
+    def _advance_impl(
+        self,
+        arrivals_by_tick: List[List[Request]],
+        step0: int,
+        max_steps: int,
+    ) -> Tuple[int, int]:
         if len(arrivals_by_tick) == 1 and self.ecfg.sched_window <= 1:
             self._note_arrivals(arrivals_by_tick[0], step0)
             return len(self.step(arrivals_by_tick[0])), 1
@@ -333,10 +386,29 @@ class ServeEngine:
         Each window's arrivals are WAL-logged + fsynced before execution
         and committed after; every `snapshot_interval` windows the full
         state is snapshotted crash-consistently."""
+        from repro.obs.profiling import trace_session
+
         t0 = time.time()
         durable = self.durability is not None
         if durable and not self._recovered:
             self.recover()
+        with trace_session(self.ecfg.profile_dir):
+            completed, step, start = self._run_loop(
+                workload, max_steps, durable
+            )
+        sst = self.scheduler.stats
+        return {
+            "steps": step - start,
+            "completed": completed,
+            "wall_s": time.time() - t0,
+            "mode_trace": sst.mode_trace,
+            "pq_transitions": int(self.scheduler.carry.stats.transitions),
+            "shed": sst.shed,
+            "evicted": sst.evicted,
+            "recovered_windows": sst.recovered_windows,
+        }
+
+    def _run_loop(self, workload, max_steps, durable):
         completed = 0
         start = self._step if durable else 0
         step = start
@@ -360,7 +432,13 @@ class ServeEngine:
             completed += done
             step += nsteps
             if durable:
-                self.durability.log_commit(self._step)
+                # Heartbeats carry the compact metrics snapshot, so hang
+                # diagnosis (supervisor) sees the last known counters,
+                # not just a step number.
+                self._sync_registry()
+                self.durability.log_commit(
+                    self._step, health=self.obs.metrics.compact()
+                )
                 self.durability.window_committed()
                 if self.durability.should_snapshot():
                     self.snapshot()
@@ -374,17 +452,7 @@ class ServeEngine:
         if durable:
             # final snapshot: a clean restart needs no replay at all
             self.snapshot()
-        sst = self.scheduler.stats
-        return {
-            "steps": step - start,
-            "completed": completed,
-            "wall_s": time.time() - t0,
-            "mode_trace": sst.mode_trace,
-            "pq_transitions": int(self.scheduler.carry.stats.transitions),
-            "shed": sst.shed,
-            "evicted": sst.evicted,
-            "recovered_windows": sst.recovered_windows,
-        }
+        return completed, step, start
 
     # -- durability: snapshot / recover -----------------------------------------
 
@@ -488,6 +556,9 @@ class ServeEngine:
 
                 got = carry_fingerprint(self.scheduler.carry)
                 if got != host["carry_crc"]:
+                    self.obs.metrics.inc(
+                        "errors_total", code="SNAPSHOT_CORRUPT"
+                    )
                     raise SnapshotCorruptError(
                         f"carry fingerprint mismatch after restore "
                         f"(manifest {host['carry_crc']:#x}, got {got:#x})",
@@ -514,9 +585,57 @@ class ServeEngine:
             d.suppress_events = False
         info["replayed_windows"] = len(windows)
         self._recovered = True
+        self.obs.metrics.inc("engine_recoveries_total")
+        self.obs.tracer.instant(
+            "recovery", cat="durability",
+            snapshot_step=info["snapshot_step"],
+            replayed_windows=len(windows),
+        )
         return info
 
     # -- structured health -------------------------------------------------------
+
+    def _sync_registry(self) -> None:
+        """Mirror every accounting surface into the metrics registry:
+        each `SchedulerStats` field becomes a ``sched_<name>`` gauge, each
+        `SmartPQStats` field a ``pq_<name>`` gauge (vector fields, e.g.
+        the per-mode step counts, become one labeled series per index),
+        plus the engine's own slot/backlog/clock gauges.  Field iteration
+        is PROGRAMMATIC — a stats field added in a later PR shows up here
+        (and in the hygiene gate) without touching this function."""
+        m = self.obs.metrics
+        if not m.enabled:
+            return
+        from repro.core.smartpq import SmartPQStats
+
+        sst = self.scheduler.stats
+        for f in dataclasses.fields(sst):
+            v = getattr(sst, f.name)
+            if f.name == "mode_trace":
+                m.set_gauge("sched_mode_trace_len", len(v))
+            else:
+                m.set_gauge(f"sched_{f.name}", v)
+        for name, leaf in zip(
+            SmartPQStats._fields, self.scheduler.carry.stats
+        ):
+            arr = np.asarray(leaf)
+            if arr.ndim == 0:
+                m.set_gauge(f"pq_{name}", float(arr))
+            else:
+                for i, x in enumerate(arr.tolist()):
+                    m.set_gauge(f"pq_{name}", float(x), index=i)
+        m.set_gauge("engine_step", self._step)
+        m.set_gauge("engine_completed", len(self.done_step))
+        m.set_gauge("engine_active_slots",
+                    sum(r is not None for r in self.active))
+        m.set_gauge("engine_free_slots", len(self._free_slots()))
+        m.set_gauge("engine_admit_backlog", len(self._backlog))
+        m.set_gauge("sched_arrival_backlog",
+                    len(self.scheduler._arrival_backlog))
+        m.set_gauge("pq_on_device",
+                    int(self.scheduler.carry.state.total_size))
+        m.set_gauge("sched_pending", self.scheduler.pending)
+        m.set_gauge("engine_service_est", float(self._service_est))
 
     def health(self) -> Dict[str, object]:
         """One structured health/accounting surface: everything the
@@ -524,27 +643,32 @@ class ServeEngine:
         none of them poke engine/scheduler attributes directly.  Counter
         semantics: ``inserted + arrival_backlog + shed + evicted`` equals
         total submitted arrivals, and ``inserted == dispatched +
-        on_device`` (the request-conservation invariant)."""
-        sst = self.scheduler.stats
-        pq_stats = self.scheduler.carry.stats
+        on_device`` (the request-conservation invariant).
+
+        The values are READS FROM THE METRICS REGISTRY (synced just
+        before), not hand-copied attributes — `repro.obs` is the single
+        source of truth, and the hygiene gate asserts every stats field
+        reaches it."""
+        self._sync_registry()
+        g = self.obs.metrics.value
         return {
-            "step": self._step,
-            "completed": len(self.done_step),
-            "active_slots": sum(r is not None for r in self.active),
-            "free_slots": len(self._free_slots()),
-            "admit_backlog": len(self._backlog),
-            "arrival_backlog": len(self.scheduler._arrival_backlog),
-            "on_device": int(self.scheduler.carry.state.total_size),
-            "pending": self.scheduler.pending,
-            "inserted": sst.inserted,
-            "dispatched": sst.dispatched,
-            "shed": sst.shed,
-            "evicted": sst.evicted,
-            "rejected": int(pq_stats.rejected),
-            "recovered_windows": sst.recovered_windows,
-            "failed_windows": sst.failed_windows,
-            "pq_transitions": int(pq_stats.transitions),
-            "service_est": float(self._service_est),
+            "step": int(g("engine_step")),
+            "completed": int(g("engine_completed")),
+            "active_slots": int(g("engine_active_slots")),
+            "free_slots": int(g("engine_free_slots")),
+            "admit_backlog": int(g("engine_admit_backlog")),
+            "arrival_backlog": int(g("sched_arrival_backlog")),
+            "on_device": int(g("pq_on_device")),
+            "pending": int(g("sched_pending")),
+            "inserted": int(g("sched_inserted")),
+            "dispatched": int(g("sched_dispatched")),
+            "shed": int(g("sched_shed")),
+            "evicted": int(g("sched_evicted")),
+            "rejected": int(g("pq_rejected")),
+            "recovered_windows": int(g("sched_recovered_windows")),
+            "failed_windows": int(g("sched_failed_windows")),
+            "pq_transitions": int(g("pq_transitions")),
+            "service_est": float(g("engine_service_est")),
             "overload": (
                 self.overload.snapshot() if self.overload is not None
                 else None

@@ -98,12 +98,32 @@ class OverloadController:
       5. `evict(backlog)` trims the backlog to the cap.
     """
 
-    def __init__(self, config: OverloadConfig | None = None):
+    def __init__(self, config: OverloadConfig | None = None, obs=None):
         self.config = config or OverloadConfig()
         self.state: Dict[int, int] = {}
         self.stats = OverloadStats()
         self._samples: Dict[int, List[float]] = {}
         self._censored: Dict[int, int] = {}  # pending-past-target counts
+        # Observability bundle (repro.obs.Observability) — state
+        # transitions emit counters + timeline instants through it.  The
+        # owning scheduler/engine attaches its own; None stays silent.
+        self.obs = obs
+
+    def _set_state(self, c: int, new: int) -> None:
+        """The ONLY place a class's state changes: every edge is counted
+        (``overload_transitions_total{slo=,to=}``) and lands on the
+        timeline as an `overload_state` instant."""
+        old = self.state.get(c, OK)
+        self.state[c] = new
+        if new == old or self.obs is None:
+            return
+        self.obs.metrics.inc(
+            "overload_transitions_total", slo=c, to=_STATE_NAMES[new]
+        )
+        self.obs.tracer.instant(
+            "overload_state", cat="overload", slo=c,
+            from_state=_STATE_NAMES[old], to_state=_STATE_NAMES[new],
+        )
 
     # -- observation ------------------------------------------------------
 
@@ -145,19 +165,19 @@ class OverloadController:
                 continue
             if cur == OK:
                 if p > tgt and c > 0:
-                    self.state[c] = SHEDDING
+                    self._set_state(c, SHEDDING)
                 elif p > cfg.degrade_margin * tgt:
-                    self.state[c] = DEGRADED
+                    self._set_state(c, DEGRADED)
             elif cur == DEGRADED:
                 if p > tgt and c > 0:
-                    self.state[c] = SHEDDING
+                    self._set_state(c, SHEDDING)
                 elif p < cfg.recover_margin * tgt:
-                    self.state[c] = OK
+                    self._set_state(c, OK)
             elif cur == SHEDDING:
                 if p < cfg.recover_margin * tgt:
-                    self.state[c] = OK
+                    self._set_state(c, OK)
                 elif p < cfg.degrade_margin * tgt:
-                    self.state[c] = DEGRADED
+                    self._set_state(c, DEGRADED)
         self._censored.clear()
         if any(s == DEGRADED for s in self.state.values()):
             self.stats.degraded_ticks += 1

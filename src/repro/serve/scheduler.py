@@ -82,6 +82,7 @@ from repro.core.errors import InvariantViolation, WindowValidationError
 from repro.core.pqueue.state import INF_KEY
 from repro.core.smartpq import SmartPQ, SmartPQConfig
 from repro.core.pqueue.ops import OP_DELETE_MIN, OP_INSERT
+from repro.obs import NULL, Observability
 from repro.serve.overload import OverloadConfig, OverloadController
 
 
@@ -131,6 +132,7 @@ class SchedulerCheckpoint:
     requests: Dict[int, Request]
     stats: SchedulerStats
     overload: Optional[OverloadController]
+    last_mode: int = -1  # tracer's transition-edge memory (rolls back too)
 
 
 class SmartPQScheduler:
@@ -146,6 +148,7 @@ class SmartPQScheduler:
         validate_hook: Optional[
             Callable[[object], List[InvariantViolation]]
         ] = None,
+        obs: Optional[Observability] = None,
     ):
         from repro.core.smartpq import MODE_AWARE
 
@@ -172,9 +175,18 @@ class SmartPQScheduler:
         self._rng = jax.random.key(seed)
         self._step = 0
         self.stats = SchedulerStats()
+        # Observability: shared registry + tracer (the engine passes its
+        # own so every layer writes one surface; standalone schedulers get
+        # the disabled NULL bundle — every write early-outs).
+        self.obs = obs if obs is not None else NULL
+        # Host mirror of the device mode — the tracer's transition-edge
+        # detector (events == device `stats.transitions` increments).
+        self._last_mode = int(self.pq.config.initial_mode)
         if isinstance(overload, OverloadConfig):
             overload = OverloadController(overload)
         self.overload = overload
+        if overload is not None and getattr(overload, "obs", None) is None:
+            overload.obs = self.obs
         # Extra validation hook (state -> violations); chaos tests use it to
         # trip the recovery path deterministically.  Guarded execution is on
         # iff the pq's validate flag or a hook is set.
@@ -301,6 +313,7 @@ class SmartPQScheduler:
                 self.stats, mode_trace=list(self.stats.mode_trace)
             ),
             overload=copy.deepcopy(self.overload),
+            last_mode=self._last_mode,
         )
 
     def restore(self, ckpt: SchedulerCheckpoint) -> None:
@@ -315,6 +328,8 @@ class SmartPQScheduler:
         self.stats = dataclasses.replace(
             ckpt.stats, mode_trace=list(ckpt.stats.mode_trace)
         )
+        if ckpt.last_mode >= 0:
+            self._last_mode = ckpt.last_mode
         if ckpt.overload is not None and self.overload is not None:
             # In-place: the engine may hold a reference to the controller.
             self.overload.__dict__.update(
@@ -375,6 +390,8 @@ class SmartPQScheduler:
             **{k: v for k, v in st.items() if k != "mode_trace"},
             mode_trace=list(st.get("mode_trace", [])),
         )
+        if self.stats.mode_trace:
+            self._last_mode = int(self.stats.mode_trace[-1])
         if d.get("overload") is not None and self.overload is not None:
             self.overload.load_state_dict(d["overload"])
 
@@ -411,22 +428,44 @@ class SmartPQScheduler:
         return self._fb
 
     def _run_guarded(self, run):
-        """Execute `run(fallback)` under the window-recovery contract."""
+        """Execute `run(fallback)` under the window-recovery contract.
+
+        Observability contract: a rolled-back attempt's trace events are
+        truncated away (its work never happened — the timeline must agree
+        with the state), replaced by an explicit `rollback` instant; every
+        detected invariant violation bumps ``errors_total{code=INVARIANT}``
+        and a double-trip bumps ``errors_total{code=WINDOW_VALIDATION}``
+        before the typed error surfaces."""
         if not self._guard_active:
             return run(False)
+        m, tr = self.obs.metrics, self.obs.tracer
         ckpt = self.checkpoint()
+        mark = tr.mark()
         out = run(False)
         viols = self._validate()
         if not viols:
             return out
+        m.inc("errors_total", n=len(viols), code="INVARIANT")
+        m.inc("sched_window_rollbacks_total")
+        tr.truncate(mark)
+        tr.instant("rollback", cat="guard", attempt=0,
+                   violations=len(viols), step=self._step)
         self.restore(ckpt)
+        mark = tr.mark()
         out = run(True)
         retry = self._validate()
         if retry:
+            m.inc("errors_total", n=len(retry), code="INVARIANT")
+            m.inc("errors_total", code="WINDOW_VALIDATION")
+            tr.truncate(mark)
+            tr.instant("window_failed", cat="guard",
+                       violations=len(retry), step=self._step)
             self.restore(ckpt)
             self.stats.failed_windows += 1
             raise WindowValidationError(viols, retry)
         self.stats.recovered_windows += 1
+        m.inc("sched_windows_recovered_total")
+        tr.instant("window_recovered", cat="guard", step=self._step)
         return out
 
     # -- per-step path ---------------------------------------------------------
@@ -459,7 +498,12 @@ class SmartPQScheduler:
         if fallback:
             self._fallback_pq()
             step_fn = self._fb_step_fn
-        self.carry, res = step_fn(
+        tr = self.obs.tracer
+        t0 = tr.now_us() if tr.enabled else 0.0
+        # Features ride along as an extra graph output in EVERY call (the
+        # same compiled program whether telemetry reads them or not), so
+        # the dispatch stream is bit-identical with obs on vs off.
+        self.carry, res, feats = step_fn(
             self.carry,
             jnp.asarray(ops),
             jnp.asarray(keys),
@@ -467,6 +511,7 @@ class SmartPQScheduler:
             sub,
             512,
             mode_override=ov,
+            return_features=True,
         )
         self._step += 1
         dispatched = self._collect(
@@ -474,7 +519,21 @@ class SmartPQScheduler:
         )
         self.stats.inserted += na
         self.stats.dispatched += len(dispatched)
-        self.stats.mode_trace.append(int(self.carry.stats.mode))
+        mode = int(self.carry.stats.mode)
+        self.stats.mode_trace.append(mode)
+        self.obs.metrics.inc("sched_ticks_total")
+        if tr.enabled:
+            tr.span_at("tick", t0, tr.now_us() - t0, cat="sched",
+                       step=self._step, mode=mode, arrivals=na,
+                       dispatched=len(dispatched), fallback=fallback)
+            if mode != self._last_mode:
+                tr.instant(
+                    "mode_transition", cat="mode", ts=t0,
+                    from_mode=self._last_mode, to_mode=mode,
+                    step=self._step,
+                    features=np.asarray(feats, np.float32).tolist(),
+                )
+        self._last_mode = mode
         self._observe([(r, self._step) for r in dispatched], self._step)
         return dispatched
 
@@ -519,19 +578,28 @@ class SmartPQScheduler:
             ).astype(jnp.int32)
             keys = jnp.where(is_arr, pkey, INF_KEY).astype(jnp.int32)
             vals = jnp.where(is_arr, uid[idx], 0).astype(jnp.int32)
-            cr2, res = pq.step(
-                cr, ops, keys, vals, rng, 512, mode_override=mode_ov
+            cr2, res, feats = pq.step(
+                cr, ops, keys, vals, rng, 512, mode_override=mode_ov,
+                return_features=True,
             )
+            # Ring entries already arrived but beyond this tick's lane
+            # width — the device-visible admission-spill counter (host
+            # ring overflow is accounted separately, in the backlog).
+            deferred = jnp.maximum(avail - head - n_arr, 0)
+            cr2 = cr2._replace(stats=cr2.stats._replace(
+                ring_deferred=cr2.stats.ring_deferred + deferred
+            ))
             return (cr2, head + n_arr), (
-                res.keys, res.vals, res.n_out, cr2.stats.mode
+                res.keys, res.vals, res.n_out, cr2.stats.mode,
+                feats, cr2.stats.eliminated,
             )
 
         K = budgets.shape[0]
         t_idx = jnp.arange(K, dtype=jnp.int32)
-        (carry, head), (dk, dv, dn, dm) = jax.lax.scan(
+        (carry, head), (dk, dv, dn, dm, df, de) = jax.lax.scan(
             body, (carry, jnp.int32(0)), (t_idx, budgets, avail_by_tick, rngs)
         )
-        return carry, head, dk, dv, dn, dm
+        return carry, head, dk, dv, dn, dm, df, de
 
     def tick_window(
         self,
@@ -618,7 +686,10 @@ class SmartPQScheduler:
         if fallback:
             self._fallback_pq()
             window_fn = self._fb_window_fn
-        self.carry, head, dk, dv, dn, dm = window_fn(
+        tr = self.obs.tracer
+        elim0 = int(self.carry.stats.eliminated) if tr.enabled else 0
+        t_win = tr.now_us() if tr.enabled else 0.0
+        self.carry, head, dk, dv, dn, dm, df, de = window_fn(
             self.carry,
             (jnp.asarray(slo), jnp.asarray(plen), jnp.asarray(astep),
              jnp.asarray(uid)),
@@ -645,8 +716,54 @@ class SmartPQScheduler:
             self.stats.dispatched += len(d)
             self.stats.mode_trace.append(int(modes[t]))
         self.stats.inserted += consumed
+        self.obs.metrics.inc("sched_windows_total")
+        self.obs.metrics.inc("sched_ticks_total", n=K)
+        if tr.enabled:
+            self._trace_window(
+                tr, t_win, step0, K, consumed, fallback, modes,
+                np.asarray(df), np.asarray(de), elim0,
+                [len(d) for d in dispatched_per_tick],
+            )
+        self._last_mode = int(modes[-1])
         self._observe(all_dispatched, self._step)
         return dispatched_per_tick
+
+    def _trace_window(
+        self, tr, t_win, step0, K, consumed, fallback, modes,
+        feats, elim_cum, elim0, n_disp,
+    ) -> None:
+        """Emit the window span + K synthesized tick spans + transition
+        instants.  The device executes all K ticks in ONE dispatch, so the
+        tick spans subdivide the real window interval into K equal logical
+        slots — their ARGS (mode, dispatches, eliminations, admissions)
+        are the real per-tick values from the scan outputs."""
+        dur = tr.now_us() - t_win
+        tr.span_at(
+            "window", t_win, dur, cat="sched", step0=step0, ticks=K,
+            admitted=consumed, dispatched=int(sum(n_disp)),
+            fallback=fallback,
+        )
+        slot = dur / K
+        last = self._last_mode
+        for t in range(K):
+            mode = int(modes[t])
+            ts = t_win + t * slot
+            tr.span_at(
+                "tick", ts, slot, cat="sched", step=step0 + t + 1,
+                mode=mode, dispatched=n_disp[t],
+                eliminated=int(elim_cum[t]) - (
+                    int(elim_cum[t - 1]) if t else elim0
+                ),
+            )
+            if mode != last:
+                tr.instant(
+                    "mode_transition", cat="mode", ts=ts,
+                    from_mode=last, to_mode=mode, step=step0 + t + 1,
+                    features=np.asarray(
+                        feats[t], np.float32
+                    ).tolist(),
+                )
+            last = mode
 
     @property
     def pending(self) -> int:

@@ -162,6 +162,9 @@ class Supervisor:
             now = time.time()
             self._record_crash(now)
             if len(self._crash_times) > self.cfg.max_restarts:
+                from repro.obs import get_default
+
+                get_default().metrics.inc("errors_total", code="CRASH_LOOP")
                 raise CrashLoopError(
                     len(self._crash_times), self.cfg.crash_window,
                     exit_codes,

@@ -126,6 +126,9 @@ def load_trace(path) -> Trace:
     except TraceCorruptError:
         raise
     except Exception as e:  # zipfile/np errors are implementation details
+        from repro.obs import get_default
+
+        get_default().metrics.inc("errors_total", code="TRACE_CORRUPT")
         raise TraceCorruptError(
             f"unreadable npz ({type(e).__name__}: {e})", path=str(path)
         ) from e
@@ -140,6 +143,9 @@ def validate_trace(trace: Trace, path: str | None = None) -> Trace:
     deserialization and available to callers ingesting foreign traces."""
 
     def bad(detail: str):
+        from repro.obs import get_default
+
+        get_default().metrics.inc("errors_total", code="TRACE_CORRUPT")
         raise TraceCorruptError(detail, path=path)
 
     ops = np.asarray(trace.ops)

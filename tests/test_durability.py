@@ -336,11 +336,16 @@ time.sleep(120)  # wedged: no further heartbeats
 
 
 def test_supervisor_circuit_breaker_trips(tmp_path):
+    from repro.obs import get_default
+
     argv = _script_child(tmp_path, "import sys; sys.exit(1)\n")
+    before = get_default().metrics.value("errors_total", code="CRASH_LOOP")
     with pytest.raises(CrashLoopError) as ei:
         Supervisor(argv, tmp_path / "hb.json", _SUP_CFG).run()
     assert ei.value.code == "CRASH_LOOP"
     assert len(ei.value.exit_codes) == _SUP_CFG.max_restarts + 1
+    after = get_default().metrics.value("errors_total", code="CRASH_LOOP")
+    assert after == before + 1  # the raise site counted the typed error
 
 
 # ---------------------------------------------------------------------------

@@ -113,10 +113,16 @@ def test_corrupt_trace_npz_surfaces_typed_error(tmp_path, variant):
     inject(p, FaultSpec(
         kind="corrupt_trace_npz", seed=3, rate=0.5, variant=variant,
     ))
+    from repro.obs import get_default
+
+    before = get_default().metrics.value("errors_total", code="TRACE_CORRUPT")
     with pytest.raises(TraceCorruptError) as ei:
         load_trace(p)
     assert ei.value.code == "TRACE_CORRUPT"
     assert str(p) in str(ei.value)
+    # the raise site counted the typed error in the process registry
+    after = get_default().metrics.value("errors_total", code="TRACE_CORRUPT")
+    assert after == before + 1
 
 
 # ---------------------------------------------------------------------------
@@ -209,8 +215,11 @@ def test_corrupt_state_rolls_back_and_surfaces_typed_error():
     restored, and a typed `WindowValidationError` surfaces.  Zero-op ticks
     are essential: a dispatching tick re-sorts the head and would heal the
     injected inversion before validation ever sees it."""
+    from repro.obs import Observability
+
+    obs = Observability()  # standalone schedulers default to NULL: pass one
     sched = SmartPQScheduler(
-        batch_size=8, pq_config=_sched_cfg(validate=True), seed=0,
+        batch_size=8, pq_config=_sched_cfg(validate=True), seed=0, obs=obs,
     )
     sched.tick(_reqs(6), 0)  # healthy, validated window populates the queue
     assert sched.stats.failed_windows == 0
@@ -228,6 +237,11 @@ def test_corrupt_state_rolls_back_and_surfaces_typed_error():
         sched.tick_window([[], []], [0, 0])
     assert sched.stats.failed_windows == 2
     assert sched.pending == pending_before
+    # Every raise site is counted: one WINDOW_VALIDATION per double-trip,
+    # one INVARIANT per detected violation (>= 1 per failed attempt).
+    assert obs.metrics.value("errors_total", code="WINDOW_VALIDATION") == 2
+    assert obs.metrics.value("errors_total", code="INVARIANT") >= 4
+    assert obs.metrics.value("sched_window_rollbacks_total") == 2
 
 
 def test_validator_tripwire_recovery_succeeds():
@@ -235,14 +249,23 @@ def test_validator_tripwire_recovery_succeeds():
     synthetic violation, the window rolls back and the conservative
     fallback retry validates clean — the SUCCESS arm of window recovery.
     Dispatch keeps working afterwards."""
+    from repro.obs import Observability
+
     hook = inject(None, FaultSpec(kind="validator_tripwire", magnitude=1))
+    obs = Observability()
     sched = SmartPQScheduler(
         batch_size=8, pq_config=_sched_cfg(), seed=0, validate_hook=hook,
+        obs=obs,
     )
     reqs = _reqs(4)
     sched.tick(reqs, 0)  # trips once -> rollback -> fallback retry heals
     assert sched.stats.recovered_windows == 1
     assert sched.stats.failed_windows == 0
+    # The recovery arm is observable: a rollback and a recovery counted,
+    # no WINDOW_VALIDATION (nothing surfaced to the caller).
+    assert obs.metrics.value("sched_windows_recovered_total") == 1
+    assert obs.metrics.value("sched_window_rollbacks_total") == 1
+    assert obs.metrics.value("errors_total", code="WINDOW_VALIDATION") == 0
     assert sched.pending == len(reqs), "recovered window lost arrivals"
     out = sched.tick([], 4)
     assert {r.uid for r in out} <= {r.uid for r in reqs}
@@ -276,10 +299,11 @@ def test_unknown_fault_kind_is_rejected():
 # ---------------------------------------------------------------------------
 
 
-def _store(tmp_path, **kw):
+def _store(tmp_path, obs=None, **kw):
     from repro.serve.durability import DurabilityConfig, DurableStore
 
-    return DurableStore(DurabilityConfig(dir=tmp_path / "store", **kw))
+    return DurableStore(DurabilityConfig(dir=tmp_path / "store", **kw),
+                        obs=obs)
 
 
 def _log_windows(store, n=4):
@@ -323,7 +347,10 @@ def test_partial_snapshot_falls_back_to_older(tmp_path, variant):
     """`partial_snapshot`: a snapshot missing/truncating a payload shard
     must be skipped WITH accounting and recovery must land on the older
     intact snapshot."""
-    store = _store(tmp_path)
+    from repro.obs import Observability
+
+    obs = Observability()
+    store = _store(tmp_path, obs=obs)
     like = {"x": np.arange(8, dtype=np.int32)}
     store.snapshot(4, {"x": np.arange(8, dtype=np.int32)}, {"tag": "old"})
     store.snapshot(8, {"x": np.arange(8, dtype=np.int32) * 2},
@@ -335,6 +362,9 @@ def test_partial_snapshot_falls_back_to_older(tmp_path, variant):
     assert step == 4 and extra["tag"] == "old"
     assert np.array_equal(np.asarray(tree["x"]), np.arange(8))
     assert store.stats.snapshots_skipped_invalid == 1
+    # the absorbed corruption is counted at the absorb site
+    assert obs.metrics.value("errors_total", code="SNAPSHOT_CORRUPT") == 1
+    assert obs.metrics.value("snapshots_total") == 2
 
 
 @pytest.mark.parametrize("variant", ["", "garbage"])

@@ -80,6 +80,41 @@ def test_no_interpret_literals_outside_kernels():
     )
 
 
+def test_every_stats_field_reaches_the_registry():
+    """Every accounting field — each `SchedulerStats` dataclass field and
+    each `SmartPQStats` NamedTuple field — must surface in the engine's
+    metrics registry after a `health()` sync (prefixes ``sched_`` /
+    ``pq_``).  A stats field that never reaches `repro.obs` is a second
+    accounting surface, which is exactly what the unified-telemetry PR
+    removed; this gate keeps it removed."""
+    import dataclasses
+    import sys
+
+    sys.path.insert(0, str(REPO / "src"))
+    try:
+        from repro.core.smartpq import SmartPQStats
+        from repro.serve.engine import EngineConfig, ServeEngine
+        from repro.serve.scheduler import SchedulerStats
+
+        eng = ServeEngine(None, None, EngineConfig(batch_size=2))
+        eng.health()  # syncs every stats surface into the registry
+        gauges = eng.obs.metrics.to_dict()["gauges"]
+        missing = []
+        for f in dataclasses.fields(SchedulerStats):
+            prefix = f"sched_{f.name}"
+            if not any(k.startswith(prefix) for k in gauges):
+                missing.append(f"SchedulerStats.{f.name}")
+        for name in SmartPQStats._fields:
+            prefix = f"pq_{name}"
+            if not any(k.startswith(prefix) for k in gauges):
+                missing.append(f"SmartPQStats.{name}")
+    finally:
+        sys.path.pop(0)
+    assert missing == [], (
+        f"stats fields never mirrored into the metrics registry: {missing}"
+    )
+
+
 def test_every_fault_injector_is_exercised():
     """Every injector registered in `repro.faults.INJECTORS` must appear by
     name in tests/test_faults.py — a registry entry with no chaos test is a
